@@ -1,0 +1,32 @@
+"""Shared benchmark helpers: timing + `name,us_per_call,derived` CSV rows."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, List, Optional
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def time_op(fn: Callable[[], None], *, repeat: int = 5,
+            warmup: int = 1) -> float:
+    """Median wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return statistics.median(ts)
+
+
+def mean(xs) -> float:
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else float("nan")

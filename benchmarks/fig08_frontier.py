@@ -1,0 +1,46 @@
+"""Fig 8: budget sweep spans a cost-performance frontier between spot-like
+and on-demand-like behaviour."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit
+from repro.core.econadapter import AdapterConfig
+from repro.sim.simulator import ScenarioConfig, run_once
+from repro.sim.cloud import LaissezCloud
+from repro.sim.simulator import build_cloud, make_tenants
+
+
+def run(quick: bool = False):
+    budgets = (5.0, 15.0, 40.0, 1e9)
+    for budget in budgets:
+        t0 = time.perf_counter()
+        cfg = ScenarioConfig(regime="heavy", seed=2, duration_s=3600.0,
+                             tick_s=60.0, n_training=2, n_inference=2,
+                             n_batch=1)
+        from repro.core.topology import build_cluster
+        topo = build_cluster({"H100": cfg.n_h100, "A100": cfg.n_a100},
+                             gpus_per_host=4, hosts_per_rack=2,
+                             racks_per_zone=2)
+        cloud = LaissezCloud(topo, cfg.controls)
+        tenants = make_tenants(cfg, topo)
+        for i, t in enumerate(tenants):
+            acfg = AdapterConfig(budget_rate=budget if t.name == "train0"
+                                 else 1e9)
+            cloud.add_tenant(t, acfg)
+        now = 0.0
+        while now <= cfg.duration_s:
+            cloud.step(now)
+            for tn in cloud.tenants.values():
+                tn.advance(now)
+            now += cfg.tick_s
+        t_obj = cloud.tenants["train0"]
+        perf = t_obj.performance(cfg.duration_s)
+        cost = cloud.cost_of("train0")
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig08/budget_{budget:g}", us,
+             f"perf={perf:.3f} cost=${cost:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Fig 9: performance-per-cost distributions: LaissezCloud converts spend
+into progress more consistently than FCFS / FCFS-P."""
+from __future__ import annotations
+
+import statistics
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.sim.simulator import ScenarioConfig, run_once
+
+
+def run(quick: bool = False):
+    seeds = (1,) if quick else (1, 2, 3)
+    for kind in ("fcfs", "fcfsp", "laissez"):
+        ppc = []
+        t0 = time.perf_counter()
+        for seed in seeds:
+            for regime in ("slight", "heavy"):
+                cfg = ScenarioConfig(regime=regime, seed=seed,
+                                     duration_s=3600.0, tick_s=60.0)
+                r = run_once(kind, cfg)
+                for name, perf in r.perf.items():
+                    cost = max(r.cost.get(name, 0.0), 1e-6)
+                    ppc.append(perf / cost)
+        us = (time.perf_counter() - t0) * 1e6 / max(len(seeds), 1)
+        med = statistics.median(ppc)
+        iqr = (np.percentile(ppc, 75) - np.percentile(ppc, 25)) / max(
+            med, 1e-9)
+        emit(f"fig09/{kind}", us,
+             f"median_perf_per_$={med:.4f} rel_iqr={iqr:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,103 @@
+"""Fig 12 + §5.5.1: matching-engine scalability within one type-tree.
+
+Three heaviest operations vs pool size (the paper's panels):
+  (a) place a buy limit for "anywhere" (root scope — worst case),
+  (b) transfer a relinquished resource to the earliest queued matching buy,
+  (c) cancel a resting "anywhere" buy.
+
+Reported for the paper-faithful Python engine AND the beyond-paper JAX
+batch engine (ref + Pallas-interpret clearing) — the batch engine is the
+TPU-native scale path (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, time_op
+from repro.core.market import Market
+from repro.core.topology import build_cluster
+
+POOL_SIZES = (512, 2048, 10_000)
+
+
+def _python_engine(n: int):
+    topo = build_cluster({"H100": n})
+    m = Market(topo)
+    root = topo.roots["H100"]
+    m.set_floor(root, 2.0)
+    # mixed ownership: half the pool owned by background tenants
+    for i in range(n // 2):
+        m.place_order(f"bg{i}", root, 2.5, limit=4.0)
+    return topo, m, root
+
+
+def run(quick: bool = False):
+    sizes = POOL_SIZES[:2] if quick else POOL_SIZES
+    for n in sizes:
+        topo, m, root = _python_engine(n)
+        seq = [0]
+
+        def place():
+            seq[0] += 1
+            # resting bid below current tops => the paper's (a) fast path
+            m.place_order(f"p{seq[0]}", root, 2.2 + 1e-6 * seq[0],
+                          limit=2.3)
+        us_place = time_op(place, repeat=20)
+        emit(f"fig12a/python/place_anywhere/n={n}", us_place,
+             f"{1e6 / us_place:.0f} req/s")
+
+        # (b) transfer: owner relinquishes; earliest queued buy wins
+        owners = [next(iter(m.owned_leaves(f"bg{i}"))) for i in range(20)]
+        idx = [0]
+
+        def transfer():
+            i = idx[0]
+            idx[0] += 1
+            m.relinquish(f"bg{i}", owners[i])
+        us_tr = time_op(transfer, repeat=15, warmup=1)
+        emit(f"fig12b/python/transfer/n={n}", us_tr,
+             f"{1e6 / us_tr:.0f} req/s")
+
+        # (c) cancel a resting anywhere buy
+        oids = [m.place_order(f"c{i}", root, 2.21, limit=2.3)
+                for i in range(30)]
+        oids = [o for o in oids if m.orders[o].active]
+        ci = [0]
+
+        def cancel():
+            if ci[0] < len(oids):
+                m.cancel_order(m.orders[oids[ci[0]]].tenant, oids[ci[0]])
+                ci[0] += 1
+        us_c = time_op(cancel, repeat=15)
+        emit(f"fig12c/python/cancel/n={n}", us_c,
+             f"{1e6 / us_c:.0f} req/s")
+
+    # JAX batch engine: full clearing pass over the largest pool
+    import jax.numpy as jnp
+    from repro.market_jax.engine import BatchEngine, build_tree
+    for n in ((2048,) if quick else (2048, 16_384, 65_536)):
+        tree = build_tree(n)
+        eng = BatchEngine(tree, capacity=1 << 14)
+        st = eng.init_state()
+        st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+        rng = np.random.default_rng(0)
+        nb = 8192
+        levels = rng.integers(0, tree.n_levels, nb).astype(np.int32)
+        nodes = np.array([rng.integers(0, tree.nodes_at(d))
+                          for d in levels], np.int32)
+        st = eng.place(st, jnp.array(rng.uniform(1, 8, nb), jnp.float32),
+                       jnp.array(levels), jnp.array(nodes),
+                       jnp.array(rng.integers(0, 999, nb), jnp.int32))
+
+        def clear():
+            r, l, a = eng.clear(st)
+            r.block_until_ready()
+        us = time_op(clear, repeat=5, warmup=2)
+        emit(f"fig12/jax_batch/clear_pass/n={n}", us,
+             f"{n / (us / 1e6):.2e} leaf-clears/s (8192 resting bids)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Fig 13: reconfiguration-overhead sensitivity — cheap reconfiguration
+enables more beneficial exchanges; very high overhead pushes LaissezCloud
+back toward FCFS-like behaviour."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, mean
+from repro.sim.simulator import ScenarioConfig, run_once
+
+MULTS = (0.25, 1.0, 4.0, 16.0)
+
+
+def run(quick: bool = False):
+    fcfs_ref = None
+    for mult in (MULTS[:2] if quick else MULTS):
+        t0 = time.perf_counter()
+        vals = []
+        for seed in (1, 2):
+            cfg = ScenarioConfig(regime="slight", seed=seed,
+                                 duration_s=5400.0, tick_s=60.0,
+                                 overhead_mult=mult)
+            r = run_once("laissez", cfg)
+            vals.extend(r.perf.values())
+            if fcfs_ref is None:
+                f = run_once("fcfs", cfg)
+                fcfs_ref = mean(f.perf.values())
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig13/overhead_x{mult:g}", us,
+             f"mean_perf={mean(vals):.3f} (fcfs_ref={fcfs_ref:.3f})")
+
+
+if __name__ == "__main__":
+    run()

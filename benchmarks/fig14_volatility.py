@@ -1,0 +1,38 @@
+"""Fig 14: market-volatility controls — too much movement induces churn,
+too little approaches FCFS-like rigidity; a middle ground performs best."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, mean
+from repro.core.market import VolatilityControls
+from repro.sim.simulator import ScenarioConfig, run_once
+
+SETTINGS = (
+    ("tight", VolatilityControls(max_bid_multiple=1.05,
+                                 floor_fall_rate=0.05,
+                                 min_holding_s=1200.0)),
+    ("middle", VolatilityControls(max_bid_multiple=4.0,
+                                  floor_fall_rate=0.5)),
+    ("unbounded", VolatilityControls()),
+)
+
+
+def run(quick: bool = False):
+    for name, controls in SETTINGS:
+        t0 = time.perf_counter()
+        vals, transfers = [], 0
+        for seed in ((1,) if quick else (1, 2)):
+            cfg = ScenarioConfig(regime="slight", seed=seed,
+                                 duration_s=5400.0, tick_s=60.0,
+                                 controls=controls)
+            r = run_once("laissez", cfg)
+            vals.extend(r.perf.values())
+            transfers += r.stats.get("transfers", 0)
+        us = (time.perf_counter() - t0) * 1e6
+        emit(f"fig14/volatility_{name}", us,
+             f"mean_perf={mean(vals):.3f} transfers={transfers}")
+
+
+if __name__ == "__main__":
+    run()

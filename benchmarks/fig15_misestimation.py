@@ -1,0 +1,33 @@
+"""Fig 15: client misconfiguration — perturb only the ESTIMATED
+reconfiguration overhead used in bids (true runtime overhead fixed).
+Underestimating hurts more than overestimating."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, mean
+from repro.sim.simulator import ScenarioConfig, run_once
+
+ERRORS = (0.25, 0.5, 0.95, 1.0, 1.05, 2.0, 4.0)
+
+
+def run(quick: bool = False):
+    errs = (0.5, 1.0, 2.0) if quick else ERRORS
+    out = {}
+    for err in errs:
+        t0 = time.perf_counter()
+        vals = []
+        for seed in (1, 2):
+            cfg = ScenarioConfig(regime="slight", seed=seed,
+                                 duration_s=5400.0, tick_s=60.0,
+                                 reconfig_estimate_mult=err)
+            r = run_once("laissez", cfg)
+            vals.extend(r.perf.values())
+        us = (time.perf_counter() - t0) * 1e6
+        out[err] = mean(vals)
+        emit(f"fig15/estimate_x{err:g}", us, f"mean_perf={out[err]:.3f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,117 @@
+"""Roofline analysis (deliverable g): three-term roofline per
+(arch x shape x mesh) from the dry-run artifacts in experiments/dryrun/.
+
+  compute_s    = HLO_FLOPs_per_dev / 197e12         (v5e bf16 peak)
+  memory_s     = HLO_bytes_per_dev / 819e9          (HBM BW)
+  collective_s = wire_bytes_per_dev(adj) / 50e9     (ICI per link)
+
+HLO terms use the extrapolation-corrected values (scan bodies counted once
+otherwise; see launch/dryrun.py). The bf16-adjusted wire bytes undo
+XLA-CPU's bf16->f32 upcast. Also reports MODEL_FLOPS/HLO_FLOPs (remat and
+redundancy waste) and the dominant term per cell.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit
+from repro.launch.analytic import PEAK_FLOPS, HBM_BW, ICI_BW
+
+DRYRUN = pathlib.Path(__file__).resolve().parents[1] / "experiments" / \
+    "dryrun"
+
+
+def load_cells(mesh: str = "single") -> List[Dict]:
+    out = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        try:
+            out.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return out
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    corr = rec.get("corrected") or {}
+    flops = corr.get("flops_per_dev") or rec.get("flops_per_dev") or 0.0
+    bytes_ = corr.get("bytes_per_dev") or rec.get("bytes_per_dev") or 0.0
+    wire = corr.get("wire_bytes_adj_per_dev")
+    if wire is None:
+        wire = rec.get("collectives", {}).get("wire_bytes_adj",
+                                              rec.get("collectives", {})
+                                              .get("wire_bytes", 0.0))
+    n = rec.get("n_devices", 256)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_ / HBM_BW
+    coll_s = wire / ICI_BW
+    # kernelized memory floor: fused/Pallas kernels keep attention scores
+    # and SSD scan intermediates in VMEM (see launch/analytic.py)
+    kmem_s = None
+    try:
+        from repro.configs import get_config, SHAPES
+        from repro.launch.analytic import kernelized_bytes
+        cfg = get_config(rec["arch"])
+        dp = 32 if n == 512 else 16
+        kb = kernelized_bytes(cfg, SHAPES[rec["shape"]], dp, 16)
+        kmem_s = kb / HBM_BW
+    except Exception:
+        pass
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": coll_s}
+    dom = max(terms, key=terms.get)
+    total = max(terms.values())
+    model_fl = rec.get("model_flops", {}).get("model_flops", 0.0) / n
+    ratio = model_fl / flops if flops else 0.0
+    # roofline fraction: useful model FLOPs per achievable step time
+    frac = (model_fl / PEAK_FLOPS) / total if total else 0.0
+    frac_k = 0.0
+    if kmem_s is not None:
+        total_k = max(compute_s, kmem_s, coll_s)
+        frac_k = (model_fl / PEAK_FLOPS) / total_k if total_k else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"],
+            "step": rec.get("step", ""), "compute_s": compute_s,
+            "memory_s": memory_s, "collective_s": coll_s,
+            "kernelized_memory_s": kmem_s,
+            "dominant": dom, "model_hlo_ratio": ratio,
+            "roofline_frac": frac, "roofline_frac_kernelized": frac_k,
+            "fits": rec.get("analytic_memory_per_dev", {})
+            .get("fits_v5e")}
+
+
+def run(quick: bool = False):
+    t0 = time.perf_counter()
+    rows = [r for r in (roofline_row(rec) for rec in load_cells("single"))
+            if r]
+    us = (time.perf_counter() - t0) * 1e6
+    for r in rows:
+        km = r.get("kernelized_memory_s")
+        km_s = f"kmem={km:.3f}s " if km is not None else ""
+        emit(f"roofline/{r['arch']}/{r['shape']}", us / max(len(rows), 1),
+             f"compute={r['compute_s']:.3f}s memory={r['memory_s']:.3f}s "
+             f"collective={r['collective_s']:.3f}s dom={r['dominant']} "
+             + km_s
+             + f"model/HLO={r['model_hlo_ratio']:.2f} "
+             f"frac={r['roofline_frac']:.3f} "
+             f"frac_kern={r['roofline_frac_kernelized']:.3f} "
+             f"fits_v5e={r['fits']}")
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        emit("roofline/worst_cell", 0.0,
+             f"{worst['arch']}/{worst['shape']} "
+             f"frac={worst['roofline_frac']:.3f}")
+    n_multi = sum(1 for rec in load_cells("multi")
+                  if rec.get("status") == "ok")
+    n_skip = sum(1 for rec in load_cells("multi") + load_cells("single")
+                 if rec.get("status") == "skipped")
+    emit("dryrun/multi_pod_ok_cells", 0.0, str(n_multi))
+    emit("dryrun/skipped_cells(long-ctx policy)", 0.0, str(n_skip))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

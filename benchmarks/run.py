@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig06,...]``
+prints ``name,us_per_call,derived`` CSV rows (benchmarks.common.emit).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (fig06_contention, fig07_price_reaction,
+                        fig08_frontier, fig09_perf_per_cost,
+                        fig10_topology, fig11_power_steering,
+                        fig12_scalability, fig13_reconfig,
+                        fig14_volatility, fig15_misestimation,
+                        table2_loc, roofline)
+from benchmarks.common import emit
+
+MODULES = [
+    ("fig06", fig06_contention), ("fig07", fig07_price_reaction),
+    ("fig08", fig08_frontier), ("fig09", fig09_perf_per_cost),
+    ("fig10", fig10_topology), ("fig11", fig11_power_steering),
+    ("fig12", fig12_scalability), ("fig13", fig13_reconfig),
+    ("fig14", fig14_volatility), ("fig15", fig15_misestimation),
+    ("table2", table2_loc), ("roofline", roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in MODULES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(quick=args.quick)
+        except Exception as e:
+            failures += 1
+            emit(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
+            traceback.print_exc()
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""End-to-end driver: market-driven ELASTIC TRAINING of a real JAX model.
+
+A LaissezCloud market arbitrates devices between our training tenant and a
+rival. The trainer grows/shrinks its data-parallel mesh as the market
+grants/revokes resources, checkpointing and restoring across every resize
+— the full LaissezCloud + EconAdapter + elastic-runtime stack end to end.
+
+  PYTHONPATH=src python examples/elastic_training.py             # CPU demo
+  PYTHONPATH=src python examples/elastic_training.py --model 100m --steps 300
+
+The 100m preset is the "train a ~100M model for a few hundred steps"
+configuration (sized for real accelerators; the default demo preset keeps
+the same code path CPU-friendly).
+"""
+import argparse
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import dataclasses
+import jax
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.core import Market, build_cluster
+from repro.data.pipeline import DataConfig
+from repro.optim import AdamWConfig
+from repro.train.trainer import Trainer, TrainConfig, MarketBroker
+
+PRESETS = {
+    # ~100M params: d=768, L=12, H=12, ff=3072, V=32000
+    "100m": dict(num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+                 head_dim=64, d_ff=3072, vocab_size=32000,
+                 param_dtype="float32", seq_len=512, global_batch=8),
+    "demo": dict(num_layers=4, d_model=128, num_heads=4, num_kv_heads=2,
+                 head_dim=32, d_ff=512, vocab_size=2048,
+                 param_dtype="float32", seq_len=128, global_batch=4),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--model", default="demo", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--ckpt", default="/tmp/laissez_elastic_ckpt")
+    args = ap.parse_args()
+    preset = dict(PRESETS[args.model])
+    seq_len = preset.pop("seq_len")
+    global_batch = preset.pop("global_batch")
+    cfg = dataclasses.replace(get_config("qwen3-0.6b"), name="lm-demo",
+                              qk_norm=True, tie_embeddings=True, **preset)
+
+    # --- the cloud ------------------------------------------------------
+    topo = build_cluster({"H100": 4}, gpus_per_host=2, hosts_per_rack=2,
+                         racks_per_zone=1)
+    market = Market(topo)
+    market.set_floor(topo.roots["H100"], 2.0)
+    for _ in range(4):   # our tenant buys the whole pool (spot-ish limits)
+        market.place_order("trainer", topo.roots["H100"], 3.0, limit=3.5)
+    print("trainer owns", len(market.owned_leaves("trainer")), "GPUs")
+
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                      global_batch=global_batch, seed=0)
+    tcfg = TrainConfig(steps=args.steps // 3, checkpoint_every=10,
+                       checkpoint_dir=args.ckpt)
+    broker = MarketBroker(market, "trainer",
+                          max_devices=len(jax.devices()))
+    trainer = Trainer(cfg, dcfg, AdamWConfig(lr=3e-4, warmup_steps=20),
+                      tcfg, broker)
+
+    import shutil
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    rep = trainer.run(resume=False)
+    print(f"[phase 1] {rep.steps_done} steps on "
+          f"{broker.current_devices(0)} devices, "
+          f"loss {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}")
+
+    # --- a rival outbids us for half the pool ---------------------------
+    market.advance_to(600.0)
+    for _ in range(2):
+        market.place_order("rival", topo.roots["H100"], 4.0, limit=9.0)
+    print("rival took", len(market.owned_leaves("rival")),
+          "GPUs; trainer shrinks to",
+          broker.current_devices(0))
+    tcfg.steps = 2 * args.steps // 3
+    rep2 = trainer.run(resume=True)
+    print(f"[phase 2] resumed from checkpoint ({rep2.restores} restore), "
+          f"loss -> {rep2.losses[-1]:.3f}")
+
+    # --- rival leaves; we grow back --------------------------------------
+    market.advance_to(1200.0)
+    for leaf in list(market.owned_leaves("rival")):
+        market.relinquish("rival", leaf)
+    for _ in range(2):
+        market.place_order("trainer", topo.roots["H100"], 3.0, limit=3.5)
+    print("rival left; trainer grows to", broker.current_devices(0))
+    tcfg.steps = args.steps
+    rep3 = trainer.run(resume=True)
+    print(f"[phase 3] done at step {rep3.steps_done}, "
+          f"loss -> {rep3.losses[-1]:.3f}")
+    print("bills:", {k: round(v, 2) for k, v in market.settle().items()})
+    print("resizes observed:", rep.resizes + rep2.resizes + rep3.resizes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: the LaissezCloud market in 60 lines.
+
+Two tenants negotiate over a small GPU cluster: B outbids A's retention
+limit, A relinquishes at its checkpoint, billing is the integral of the
+charged rate. Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.core import Market, VolatilityControls, build_cluster, OPERATOR
+
+# a small cloud: 8 H100s + 8 A100s in a host/rack/zone hierarchy
+topo = build_cluster({"H100": 8, "A100": 8}, gpus_per_host=4,
+                     hosts_per_rack=2, racks_per_zone=1)
+market = Market(topo, VolatilityControls(max_bid_multiple=4.0))
+
+# the operator seeds the market with floor prices (its standing reclaim bids)
+h100, a100 = topo.roots["H100"], topo.roots["A100"]
+market.set_floor(h100, 2.0)
+market.set_floor(a100, 1.0)
+
+# tenant A: training job, willing to pay up to 3.0 $/h to keep its GPUs
+for _ in range(8):
+    market.place_order("A", h100, price=2.5, limit=3.0)
+print("A owns", len(market.owned_leaves("A")), "H100s; rate:",
+      market.market_rate(next(iter(market.owned_leaves('A')))), "$/h")
+
+# one hour passes; A pays the floor (no competing demand)
+market.advance_to(3600.0)
+
+# tenant B arrives with a deadline: bids above A's limit for ANY H100
+market.place_order("B", h100, price=3.5, limit=6.0)
+print("B owns", len(market.owned_leaves("B")),
+      "H100 (A's limit was crossed; continuous renegotiation)")
+
+# B now holds one GPU and pays the SECOND price (best losing bid/floor)
+leaf_b = next(iter(market.owned_leaves("B")))
+print("B pays", market.market_rate(leaf_b), "$/h (not its own 3.5 bid)")
+
+# restricted price discovery: B can ask about ITS neighborhood
+host = topo.ancestors(leaf_b)[1]
+print("price of another GPU in B's NVLink domain:",
+      round(market.query_price("B", host), 4), "$/h")
+
+# bills = time integral of charged rate
+print("bills after 1h:", {k: round(v, 2)
+                          for k, v in market.settle(3600.0).items()})
+print("market stats:", market.stats)

@@ -1,0 +1,50 @@
+"""Topology-aware bidding (paper Fig 10): a training job targets GPUs in
+the same scale-up domain as ones it already owns, nearly doubling its
+effective throughput vs topology-oblivious bidding.
+
+  PYTHONPATH=src python examples/topology_bidding.py
+"""
+from repro.core import Market, build_cluster
+from repro.core.econadapter import AdapterConfig, EconAdapter
+from repro.sim.workloads import Tenant, WorkloadParams
+
+
+def run(topology_aware: bool) -> float:
+    topo = build_cluster({"H100": 16}, gpus_per_host=4, hosts_per_rack=2,
+                         racks_per_zone=2)
+    m = Market(topo)
+    root = topo.roots["H100"]
+    m.set_floor(root, 2.0)
+    # background tenants fragment the cluster: idle capacity is scattered
+    # one GPU per host across both racks (the realistic fragmented state)
+    leaves = topo.leaves_of(root)
+    keep_free = {leaves[0], leaves[5], leaves[10], leaves[15]}
+    for i, leaf in enumerate(l for l in leaves if l not in keep_free):
+        m.place_order(f"bg{i}", leaf, 2.4, limit=2.6)
+    t = Tenant("train", WorkloadParams(
+        kind="training", work=8.0, deadline_s=7200.0,
+        checkpoint_interval_s=300.0, reconfig_s=120.0, max_nodes=4,
+        topology_sensitive=True, locality_penalty=0.5,
+        value_per_gap=40.0), topo).attach(m)
+    ad = EconAdapter(m, "train", t,
+                     AdapterConfig(topology_aware=topology_aware))
+    for step in range(60):
+        now = step * 60.0
+        ad.step(now)
+        t.advance(now)
+    return t.throughput(), t
+
+
+if __name__ == "__main__":
+    tp_off, t_off = run(topology_aware=False)
+    tp_on, t_on = run(topology_aware=True)
+    print(f"topology-oblivious bidding: throughput "
+          f"{tp_off:.2f} H100-equivalents "
+          f"({len(t_off.nodes)} nodes, locality factor "
+          f"{t_off._locality_factor():.2f})")
+    print(f"topology-aware bidding:     throughput "
+          f"{tp_on:.2f} H100-equivalents "
+          f"({len(t_on.nodes)} nodes, locality factor "
+          f"{t_on._locality_factor():.2f})")
+    print(f"speedup from topology-aware bidding: "
+          f"{tp_on / max(tp_off, 1e-9):.2f}x")

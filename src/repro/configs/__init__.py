@@ -1,0 +1,37 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, LayerSpec, ShapeConfig, SHAPES,
+                                applicable_shapes, long_context_ok)
+
+from repro.configs import (jamba_v0_1_52b, olmoe_1b_7b, kimi_k2_1t_a32b,
+                           gemma3_27b, llama3_405b, h2o_danube_1_8b,
+                           qwen3_0_6b, paligemma_3b, mamba2_780m,
+                           whisper_base)
+from repro.configs import laissezcloud
+
+_MODULES = [jamba_v0_1_52b, olmoe_1b_7b, kimi_k2_1t_a32b, gemma3_27b,
+            llama3_405b, h2o_danube_1_8b, qwen3_0_6b, paligemma_3b,
+            mamba2_780m, whisper_base]
+
+ARCHS: Dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# The paper's own (market) configuration.
+LAISSEZCLOUD = laissezcloud.CONFIG
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def arch_names() -> List[str]:
+    return list(ARCHS)
+
+
+__all__ = ["ArchConfig", "LayerSpec", "ShapeConfig", "SHAPES", "ARCHS",
+           "get_config", "arch_names", "applicable_shapes",
+           "long_context_ok", "LAISSEZCLOUD"]

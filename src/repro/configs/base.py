@@ -1,0 +1,257 @@
+"""Architecture + shape configuration for the assigned workload pool.
+
+Every assigned architecture is a *tenant workload* from LaissezCloud's point
+of view: the market allocates mesh slices to tenants that run these models.
+The config system is shared by the smoke tests (reduced dims), the dry-run
+(full dims, abstract shapes only) and the training / serving runtimes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# Layer plan: a static per-layer description of what block runs at each depth.
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerSpec:
+    kind: str            # "attn" | "ssm"
+    moe: bool            # MoE MLP instead of dense MLP
+    window: int          # sliding-window size; 0 = full attention
+    cross_attn: bool = False  # decoder cross-attention (enc-dec archs)
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # identity ------------------------------------------------------------
+    name: str                    # public --arch id, e.g. "llama3-405b"
+    family: str                  # dense | moe | hybrid | ssm | vlm | audio
+    source: str = ""             # provenance note ([arXiv:...; tier])
+
+    # trunk dims ----------------------------------------------------------
+    num_layers: int = 0
+    d_model: int = 0
+    num_heads: int = 0           # query heads (0 for attention-free archs)
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0                # dense MLP hidden (0 = no dense MLP)
+    vocab_size: int = 0
+    mlp_type: str = "swiglu"     # "swiglu" | "gelu"
+    tie_embeddings: bool = True
+
+    # attention pattern -----------------------------------------------------
+    qk_norm: bool = False
+    use_rope: bool = True
+    rope_theta: float = 10_000.0
+    sliding_window: int = 0        # window applied to "local" layers
+    local_global_period: int = 0   # gemma3: 6 -> layer i is global iff i%6==5
+    attn_layer_period: int = 0     # jamba: 8 -> attention only at offset
+    attn_layer_offset: int = 0
+
+    # MoE -------------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_d_ff: int = 0
+    moe_layer_period: int = 1      # every k-th layer is MoE (when experts>0)
+    first_dense_layers: int = 0    # leading dense layers (kimi-k2: 1)
+    moe_renormalize: bool = True
+    capacity_factor: float = 1.25
+
+    # SSM (Mamba2 / SSD) ----------------------------------------------------
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    ssm_conv: int = 4
+
+    # structure ---------------------------------------------------------------
+    enc_dec: bool = False
+    num_encoder_layers: int = 0
+    frontend: str = ""             # "" | "vision_stub" | "audio_stub"
+    num_prefix_tokens: int = 0     # vlm: image patches; audio: frames
+
+    # numerics ----------------------------------------------------------------
+    param_dtype: str = "bfloat16"
+    opt_dtype: str = "float32"     # AdamW m/v dtype ("bfloat16" to halve HBM)
+    remat: bool = True
+    # §Perf hillclimb knobs (baseline values first; see EXPERIMENTS.md §Perf)
+    remat_policy: str = "nothing"        # "nothing" | "dots"
+    attn_softmax_dtype: str = "float32"  # "bfloat16" halves score traffic
+    moe_psum_dtype: str = "float32"      # "bfloat16" halves EP all-reduce
+    moe_combine: str = "allreduce"       # "scatter_gather": RS(f32)+AG(bf16)
+    ssd_compute_dtype: str = "float32"   # "bfloat16" halves decay traffic
+
+    # -------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # --- layer plan --------------------------------------------------------
+    def layer_plan(self) -> List[LayerSpec]:
+        plan: List[LayerSpec] = []
+        for i in range(self.num_layers):
+            # attn vs ssm
+            if self.num_heads == 0:
+                kind = "ssm"
+            elif self.attn_layer_period:
+                kind = ("attn" if i % self.attn_layer_period == self.attn_layer_offset
+                        else "ssm")
+            else:
+                kind = "attn"
+            # moe vs dense
+            moe = (self.num_experts > 0
+                   and i >= self.first_dense_layers
+                   and (i - self.first_dense_layers) % self.moe_layer_period == 0)
+            # window
+            window = 0
+            if self.sliding_window:
+                if self.local_global_period:
+                    is_global = (i % self.local_global_period
+                                 == self.local_global_period - 1)
+                    window = 0 if is_global else self.sliding_window
+                else:
+                    window = self.sliding_window
+            plan.append(LayerSpec(kind=kind, moe=moe, window=window))
+        return plan
+
+    def encoder_plan(self) -> List[LayerSpec]:
+        return [LayerSpec(kind="attn", moe=False, window=0)
+                for _ in range(self.num_encoder_layers)]
+
+    def plan_blocks(self) -> Tuple[int, int, int, int]:
+        """Decompose the layer plan into (head, period, n_super, tail):
+        ``head`` leading layers (e.g. kimi's first dense layer), then
+        ``n_super`` repetitions of a ``period``-layer superblock (scanned
+        with stacked params), then ``tail`` partial-period layers."""
+        plan = self.layer_plan()
+        head = self.first_dense_layers if self.num_experts > 0 else 0
+        rest = plan[head:]
+        p = len(rest) if rest else 1
+        for cand in range(1, len(rest) + 1):
+            if all(rest[i] == rest[i % cand] for i in range(len(rest))):
+                p = cand
+                break
+        n_super = len(rest) // p if p else 0
+        tail = len(rest) - n_super * p
+        return head, p, n_super, tail
+
+    # --- derived sizes -------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    def param_counts(self) -> Tuple[int, int]:
+        """(total_params, active_params) — active counts top-k experts only."""
+        D, V = self.d_model, self.vocab_size
+        total = V * D * (1 if self.tie_embeddings else 2)
+        active = total
+        def attn_params():
+            qk = D * self.num_heads * self.head_dim
+            kv = D * self.num_kv_heads * self.head_dim
+            return qk * 2 + kv * 2  # wq, wo, wk, wv
+        def mlp_params(ff):
+            n = 3 if self.mlp_type == "swiglu" else 2
+            return n * D * ff
+        def ssm_params():
+            din, N, H = self.d_inner, self.ssm_state, self.ssm_heads
+            in_p = D * (2 * din + 2 * N + H)
+            conv = self.ssm_conv * (din + 2 * N)
+            return in_p + conv + 3 * H + din + din * D
+        for spec in self.layer_plan() + (self.encoder_plan() if self.enc_dec else []):
+            if spec.kind == "attn":
+                total += attn_params(); active += attn_params()
+            else:
+                total += ssm_params(); active += ssm_params()
+            if spec.moe:
+                per_exp = mlp_params(self.moe_d_ff)
+                total += self.num_experts * per_exp + D * self.num_experts
+                active += self.num_experts_per_tok * per_exp + D * self.num_experts
+            elif self.d_ff:
+                total += mlp_params(self.d_ff); active += mlp_params(self.d_ff)
+        if self.enc_dec:  # decoder cross-attention blocks
+            ca = (D * self.num_heads * self.head_dim) * 2 \
+                 + (D * self.num_kv_heads * self.head_dim) * 2
+            total += self.num_layers * ca
+            active += self.num_layers * ca
+        return total, active
+
+    def reduced(self, **overrides) -> "ArchConfig":
+        """A smoke-test-sized config of the same *family* (same layer plan
+        structure, tiny dims). Exercised on CPU with real values."""
+        small: Dict[str, Any] = dict(
+            num_layers=min(self.num_layers, 4) or self.num_layers,
+            d_model=64,
+            num_heads=4 if self.num_heads else 0,
+            num_kv_heads=min(self.num_kv_heads, 2) if self.num_kv_heads else 0,
+            head_dim=16 if self.num_heads else 0,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            num_experts=min(self.num_experts, 8) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2),
+            moe_d_ff=64 if self.num_experts else 0,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_headdim=16 if self.ssm_state else 64,
+            ssm_chunk=16,
+            num_encoder_layers=2 if self.enc_dec else 0,
+            num_prefix_tokens=8 if self.num_prefix_tokens else 0,
+            sliding_window=16 if self.sliding_window else 0,
+            param_dtype="float32",
+            capacity_factor=4.0,   # avoid token drops in tiny tests
+        )
+        # keep pattern periods compatible with the reduced layer count
+        if self.attn_layer_period:
+            small["attn_layer_period"] = 4
+            small["attn_layer_offset"] = 1
+        if self.local_global_period:
+            small["local_global_period"] = 2
+        small.update(overrides)
+        return dataclasses.replace(self, **small)
+
+
+# --------------------------------------------------------------------------
+# Input shapes (assigned): every LM arch pairs with these four shapes.
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k":    ShapeConfig("train_4k",    4_096,   256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768,  32,  "prefill"),
+    "decode_32k":  ShapeConfig("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   ShapeConfig("long_500k",   524_288, 1,   "decode"),
+}
+
+
+def long_context_ok(cfg: ArchConfig) -> bool:
+    """long_500k runs only for sub-quadratic archs (SSM / hybrid / SWA).
+
+    Pure full-attention archs are skipped per the assignment; the skip is
+    recorded in DESIGN.md §Arch-applicability."""
+    if cfg.num_heads == 0:              # pure SSM
+        return True
+    if cfg.attn_layer_period:           # hybrid (mostly SSM)
+        return True
+    if cfg.sliding_window and not cfg.enc_dec:
+        return True                     # SWA-dominated (gemma3, danube)
+    return False
+
+
+def applicable_shapes(cfg: ArchConfig) -> List[str]:
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if long_context_ok(cfg):
+        names.append("long_500k")
+    return names

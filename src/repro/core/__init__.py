@@ -1,0 +1,20 @@
+"""LaissezCloud core: the paper's primary contribution.
+
+Topology-aware continuous market over individual compute resources:
+contestable ownership, OCO scoped bids, retention limits, integral billing,
+restricted price discovery, tenant EconAdapters and operator InfraMaps.
+"""
+from repro.core.topology import Topology, Node, build_cluster
+from repro.core.market import (Market, Order, ResourceState,
+                               VolatilityControls, VisibilityError,
+                               OPERATOR)
+from repro.core.econadapter import (EconAdapter, AdapterConfig, AppHooks,
+                                    GROW, SHRINK)
+from repro.core.inframaps import (InfraMap, InfraMapConfig,
+                                  PowerAwareInfraMap, MaintenanceInfraMap)
+
+__all__ = ["Topology", "Node", "build_cluster", "Market", "Order",
+           "ResourceState", "VolatilityControls", "VisibilityError",
+           "OPERATOR", "EconAdapter", "AdapterConfig", "AppHooks", "GROW",
+           "SHRINK", "InfraMap", "InfraMapConfig", "PowerAwareInfraMap",
+           "MaintenanceInfraMap"]

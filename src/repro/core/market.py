@@ -1,0 +1,447 @@
+"""LaissezCloud matching engine: hierarchical order books with contestable
+ownership, OCO scoped bids, retention limits, integral billing, restricted
+price discovery and operator floor pricing (paper §4).
+
+Semantics implemented (documented here because the paper's §4.2 narrative
+is the spec):
+
+* Every leaf resource has exactly one owner (operator initially).
+* A buy **order** targets a scope node (any tree node) and logically expands
+  into an OCO set of per-leaf bids over matching descendants.  We store the
+  order once, in its scope node's book; matching walks the ancestor path of
+  a leaf, which is observationally equivalent and keeps "anywhere" orders
+  O(1) to place (the paper's worst case is the subtree-wide *pressure* these
+  orders exert, which we pay on the rate-refresh path, as the paper does).
+* An order has a ``price`` (its current resting bid, updatable online) and a
+  ``limit`` >= price (the highest rate it will follow; also becomes the
+  retention limit if the order wins a resource).
+* charged rate(leaf) = max(operator floor on the ancestor path,
+  best resting bid price over ancestor books, excluding the owner's own
+  orders).  The owner pays this rate continuously: bill = ∫ rate dt.
+* The owner holds while rate <= retention limit; crossing the limit causes
+  immediate implicit relinquishment (after any min-holding window).
+  Explicit relinquishment hands the leaf to the best matching resting bid
+  (price desc, arrival asc); if none beats the floor, the operator reclaims.
+* When an order wins a leaf, the entire order (the OCO set) is consumed;
+  sibling pressure disappears atomically.
+* Volatility controls: incoming bids are clipped to ``max_bid_multiple`` x
+  the scope's current reference price; operator floor drops are bounded by
+  ``floor_fall_rate`` per hour; ``min_holding_s`` defers implicit
+  relinquishment.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+from repro.core.topology import Topology
+
+OPERATOR = "__operator__"
+EPS = 1e-9
+TICK = 1e-6
+
+
+@dataclass
+class Order:
+    order_id: int
+    tenant: str
+    scope: int                 # topology node id
+    price: float               # current resting bid rate ($/h)
+    limit: float               # max rate it will follow / retention limit
+    seq: int                   # arrival priority
+    active: bool = True
+
+
+@dataclass
+class ResourceState:
+    owner: str = OPERATOR
+    limit: float = math.inf    # owner's retention limit
+    rate: float = 0.0          # cached charged market rate
+    acquired_t: float = 0.0
+    last_accrual_t: float = 0.0
+
+
+@dataclass
+class VolatilityControls:
+    max_bid_multiple: float = 0.0     # 0 = disabled
+    floor_fall_rate: float = 0.0      # max fractional floor drop per hour
+    min_holding_s: float = 0.0
+
+
+class VisibilityError(Exception):
+    pass
+
+
+class Market:
+    """The central arbiter: decentralized policies, centralized arbitration."""
+
+    def __init__(self, topo: Topology,
+                 controls: Optional[VolatilityControls] = None) -> None:
+        self.topo = topo
+        self.controls = controls or VolatilityControls()
+        self.now = 0.0
+        self.orders: Dict[int, Order] = {}
+        self._books: Dict[int, List[Tuple[float, int, int]]] = {}
+        self._floors: Dict[int, Tuple[float, float]] = {}  # node->(val,t)
+        self.res: Dict[int, ResourceState] = {
+            n.node_id: ResourceState()
+            for n in topo.nodes if n.is_leaf}
+        self.bills: Dict[str, float] = {}
+        self.owned: Dict[str, Set[int]] = {}
+        self.events: List[Tuple] = []
+        # cb(now, leaf, old_owner, new_owner, rate, reason)
+        self.on_transfer: List[Callable] = []
+        self._order_seq = itertools.count()
+        self._pending_crossings: Set[int] = set()
+        # idle (operator-owned) descendant-leaf counts per node: lets the
+        # hot path skip subtree scans when nothing is acquirable
+        self._idle_count: Dict[int, int] = {}
+        for leaf in self.res:
+            for node in topo.ancestors(leaf):
+                self._idle_count[node] = self._idle_count.get(node, 0) + 1
+        self._live_count: Dict[int, int] = {}
+        self.stats = {"orders": 0, "transfers": 0, "implicit_relinquish": 0,
+                      "explicit_relinquish": 0, "cancels": 0}
+
+    # ---------------------------------------------------------------- time
+    def advance_to(self, t: float) -> None:
+        assert t >= self.now - EPS, (t, self.now)
+        self.now = max(self.now, t)
+        if self._pending_crossings:
+            for leaf in list(self._pending_crossings):
+                self._check_limit(leaf)
+
+    # ------------------------------------------------------------- billing
+    def _accrue(self, leaf: int) -> None:
+        st = self.res[leaf]
+        dt_h = (self.now - st.last_accrual_t) / 3600.0
+        if dt_h > 0 and st.owner != OPERATOR:
+            self.bills[st.owner] = self.bills.get(st.owner, 0.0) \
+                + st.rate * dt_h
+        st.last_accrual_t = self.now
+
+    # --------------------------------------------------------------- books
+    def _book(self, node: int) -> List[Tuple[float, int, int]]:
+        return self._books.setdefault(node, [])
+
+    def _entry_live(self, entry: Tuple[float, int, int]) -> bool:
+        """Live = order active AND entry price not stale (update_order
+        re-pushes; old entries are lazily discarded)."""
+        o = self.orders.get(entry[2])
+        return o is not None and o.active and abs(-entry[0] - o.price) < EPS
+
+    def _compact(self, node: int) -> None:
+        book = self._books.get(node)
+        if book is None:
+            return
+        live = [e for e in book if self._entry_live(e)]
+        heapq.heapify(live)
+        self._books[node] = live
+        self._live_count[node] = len(live)
+
+    def _top_entries(self, node: int, k: int = 8) -> List[Order]:
+        """Best k live orders in one book (price desc, seq asc)."""
+        book = self._books.get(node)
+        if not book:
+            return []
+        while book and not self._entry_live(book[0]):
+            heapq.heappop(book)
+        if len(book) > 2 * self._live_count.get(node, 0) + 16:
+            self._compact(node)
+            book = self._books[node]
+        out: List[Order] = []
+        for entry in heapq.nsmallest(max(k * 2, 16), book):
+            if self._entry_live(entry):
+                out.append(self.orders[entry[2]])
+                if len(out) >= k:
+                    break
+        return out
+
+    def _best_bid(self, leaf: int, exclude: Optional[str]) -> Optional[Order]:
+        best: Optional[Order] = None
+        for node in self.topo.ancestors(leaf):
+            for o in self._top_entries(node):
+                if exclude is not None and o.tenant == exclude:
+                    continue
+                if best is None or (o.price, -o.seq) > (best.price, -best.seq):
+                    best = o
+                break  # only the best non-excluded entry per book matters
+        return best
+
+    # --------------------------------------------------------------- rates
+    def floor(self, leaf: int) -> float:
+        f = 0.0
+        for node in self.topo.ancestors(leaf):
+            v = self._floors.get(node)
+            if v is not None:
+                f = max(f, v[0])
+        return f
+
+    def _rate(self, leaf: int) -> float:
+        st = self.res[leaf]
+        best = self._best_bid(leaf, exclude=st.owner
+                              if st.owner != OPERATOR else None)
+        return max(self.floor(leaf), best.price if best else 0.0)
+
+    def market_rate(self, leaf: int) -> float:
+        return self.res[leaf].rate
+
+    def _refresh_leaf(self, leaf: int) -> None:
+        st = self.res[leaf]
+        if st.owner == OPERATOR:
+            # idle supply: the operator sells immediately to any covering
+            # bid that meets the floor (its standing reclaim price)
+            best = self._best_bid(leaf, exclude=None)
+            if best is not None and best.price >= self.floor(leaf) - EPS:
+                self._transfer(leaf, best)
+                return
+            st.rate = max(self.floor(leaf), best.price if best else 0.0)
+            return
+        new_rate = self._rate(leaf)
+        if abs(new_rate - st.rate) > EPS:
+            self._accrue(leaf)
+            st.rate = new_rate
+        self._check_limit(leaf)
+
+    def _check_limit(self, leaf: int) -> None:
+        st = self.res[leaf]
+        if st.owner == OPERATOR or st.rate <= st.limit + EPS:
+            self._pending_crossings.discard(leaf)
+            return
+        if self.now - st.acquired_t < self.controls.min_holding_s:
+            self._pending_crossings.add(leaf)
+            return
+        self._pending_crossings.discard(leaf)
+        self.stats["implicit_relinquish"] += 1
+        self._do_relinquish(leaf, reason="limit")
+
+    def _refresh_subtree(self, node: int) -> None:
+        for leaf in self.topo.leaves_of(node):
+            self._refresh_leaf(leaf)
+
+    # ------------------------------------------------------------- tenants
+    def place_order(self, tenant: str, scope: int, price: float,
+                    limit: Optional[float] = None) -> int:
+        """Place a scoped buy order (the OCO set over matching leaves)."""
+        assert tenant != OPERATOR
+        price = self._clip_bid(scope, price)
+        limit = max(price, limit if limit is not None else price)
+        oid = next(self._order_seq)
+        o = Order(oid, tenant, scope, price, limit, oid)
+        self.orders[oid] = o
+        prev_top = self._top_entries(scope, 1)
+        prev_price = prev_top[0].price if prev_top else -math.inf
+        heapq.heappush(self._book(scope), (-price, o.seq, oid))
+        self._live_count[scope] = self._live_count.get(scope, 0) + 1
+        self.stats["orders"] += 1
+        self.events.append(("order", self.now, tenant, scope, price, limit))
+        # an incoming marketable order executes against idle supply FIRST;
+        # only if it keeps resting does its pressure propagate (and possibly
+        # evict owners whose retention limit it crosses)
+        self._try_immediate_match(o)
+        if o.active and price > prev_price:
+            # fast path: a bid below the book's current top moves no rate
+            self._refresh_subtree(scope)
+        return oid
+
+    def _find_idle_leaf(self, scope: int, max_floor: float) -> Optional[int]:
+        """Descend idle-count-positive children to an operator-owned leaf
+        whose floor the bid meets — O(depth x branching)."""
+        if self._idle_count.get(scope, 0) == 0:
+            return None
+        node = self.topo.node(scope)
+        if node.is_leaf:
+            return scope if (self.res[scope].owner == OPERATOR and
+                             self.floor(scope) <= max_floor + EPS) else None
+        for c in node.children:
+            found = self._find_idle_leaf(c, max_floor)
+            if found is not None:
+                return found
+        return None
+
+    def _try_immediate_match(self, o: Order) -> None:
+        leaf = self._find_idle_leaf(o.scope, o.price)
+        if leaf is not None and o.active:
+            self._transfer(leaf, o)
+
+    def cancel_order(self, tenant: str, order_id: int) -> None:
+        o = self.orders.get(order_id)
+        if o is None or not o.active:
+            return
+        assert o.tenant == tenant
+        o.active = False
+        self._live_count[o.scope] = max(
+            0, self._live_count.get(o.scope, 1) - 1)
+        self.stats["cancels"] += 1
+        self.events.append(("cancel", self.now, tenant, order_id))
+        # cancelling a non-top bid cannot move any rate
+        top = self._top_entries(o.scope, 1)
+        if not top or top[0].price < o.price - EPS:
+            self._refresh_subtree(o.scope)
+
+    def update_order(self, tenant: str, order_id: int, price: float,
+                     limit: Optional[float] = None) -> int:
+        """Online re-bid: replace price/limit, keeping arrival priority."""
+        o = self.orders[order_id]
+        assert o.tenant == tenant and o.active
+        price = self._clip_bid(o.scope, price)
+        o.price = price
+        o.limit = max(price, limit if limit is not None else price)
+        heapq.heappush(self._book(o.scope), (-price, o.seq, order_id))
+        self.events.append(("update", self.now, tenant, order_id, price))
+        self._try_immediate_match(o)
+        if o.active:
+            self._refresh_subtree(o.scope)
+        return order_id
+
+    def set_retention_limit(self, tenant: str, leaf: int,
+                            limit: float) -> None:
+        st = self.res[leaf]
+        assert st.owner == tenant, (st.owner, tenant)
+        st.limit = limit
+        self._check_limit(leaf)
+
+    def relinquish(self, tenant: str, leaf: int) -> None:
+        st = self.res[leaf]
+        assert st.owner == tenant, (st.owner, tenant)
+        self.stats["explicit_relinquish"] += 1
+        self._do_relinquish(leaf, reason="explicit")
+
+    # ------------------------------------------------------- transfer core
+    def _do_relinquish(self, leaf: int, reason: str) -> None:
+        st = self.res[leaf]
+        old = st.owner
+        self._accrue(leaf)
+        winner = self._best_bid(leaf, exclude=old)
+        if winner is not None and winner.price >= self.floor(leaf) - EPS:
+            self._transfer(leaf, winner, reason=reason)
+        else:
+            # operator's standing reclaim bid wins
+            self._set_owner(leaf, OPERATOR, math.inf)
+            self.events.append(("reclaim", self.now, leaf, old, reason))
+            self._refresh_leaf(leaf)
+            for cb in self.on_transfer:
+                cb(self.now, leaf, old, OPERATOR, self.res[leaf].rate,
+                   reason)
+
+    def _transfer(self, leaf: int, order: Order,
+                  reason: str = "match") -> None:
+        st = self.res[leaf]
+        old = st.owner
+        self._accrue(leaf)
+        order.active = False           # OCO: consuming the order cancels
+        scope = order.scope            # every sibling bid atomically
+        self._live_count[scope] = max(
+            0, self._live_count.get(scope, 1) - 1)
+        self._set_owner(leaf, order.tenant, order.limit)
+        self.stats["transfers"] += 1
+        self.events.append(("transfer", self.now, leaf, old, order.tenant,
+                            reason))
+        self._refresh_leaf(leaf)
+        # the winner's pressure disappears everywhere it was resting
+        self._refresh_subtree(scope)
+        for cb in self.on_transfer:
+            cb(self.now, leaf, old, order.tenant, st.rate, reason)
+
+    def _set_owner(self, leaf: int, tenant: str, limit: float) -> None:
+        st = self.res[leaf]
+        was_idle = st.owner == OPERATOR
+        if not was_idle:
+            self.owned.setdefault(st.owner, set()).discard(leaf)
+        st.owner = tenant
+        st.limit = limit
+        st.acquired_t = self.now
+        st.last_accrual_t = self.now
+        now_idle = tenant == OPERATOR
+        if not now_idle:
+            self.owned.setdefault(tenant, set()).add(leaf)
+        if was_idle != now_idle:
+            delta = 1 if now_idle else -1
+            for node in self.topo.ancestors(leaf):
+                self._idle_count[node] = self._idle_count.get(node, 0) \
+                    + delta
+
+    # ------------------------------------------------------------ operator
+    def set_floor(self, node: int, price: float) -> None:
+        """Operator floor (standing reclaim bid) on a node/subtree."""
+        cur = self._floors.get(node)
+        if cur is not None and price < cur[0] and \
+                self.controls.floor_fall_rate > 0:
+            dt_h = (self.now - cur[1]) / 3600.0
+            min_allowed = cur[0] * max(
+                0.0, 1.0 - self.controls.floor_fall_rate * dt_h)
+            price = max(price, min_allowed)
+        self._floors[node] = (price, self.now)
+        self.events.append(("floor", self.now, node, price))
+        self._refresh_subtree(node)
+
+    def _clip_bid(self, scope: int, price: float) -> float:
+        mult = self.controls.max_bid_multiple
+        if mult <= 0:
+            return price
+        ref = 0.0
+        for node in self.topo.ancestors(scope):
+            v = self._floors.get(node)
+            if v is not None:
+                ref = max(ref, v[0])
+        top = self._top_entries(scope, 1)
+        if top:
+            ref = max(ref, top[0].price)
+        for leaf in self.topo.leaves_of(scope)[:64]:
+            ref = max(ref, self.res[leaf].rate)
+        if ref <= 0:
+            return price
+        return min(price, ref * mult)
+
+    # ---------------------------------------------------- price discovery
+    def visible_domain(self, tenant: str) -> Set[int]:
+        dom: Set[int] = set(self.topo.roots.values())
+        for leaf in self.owned.get(tenant, ()):  # ancestors of owned leaves
+            dom.update(self.topo.ancestors(leaf))
+        return dom
+
+    def acquire_price(self, leaf: int, tenant: str) -> float:
+        """Rate a tenant must exceed to acquire this leaf right now."""
+        st = self.res[leaf]
+        if st.owner == tenant:
+            return math.inf
+        best = self._best_bid(leaf, exclude=None)
+        comp = max(self.floor(leaf), best.price + TICK if best else 0.0)
+        if st.owner == OPERATOR:
+            return comp
+        if math.isinf(st.limit):
+            return math.inf
+        return max(comp, st.limit + TICK)
+
+    def query_price(self, tenant: str, scope: int,
+                    enforce_visibility: bool = True) -> float:
+        """Cheapest acquirable matching descendant's price (paper §4.4)."""
+        if enforce_visibility and scope not in self.visible_domain(tenant):
+            raise VisibilityError(
+                f"{tenant} may not query node {scope}; visible domain is "
+                f"roots + ancestors of owned resources")
+        return min((self.acquire_price(leaf, tenant)
+                    for leaf in self.topo.leaves_of(scope)),
+                   default=math.inf)
+
+    # ------------------------------------------------------------- helpers
+    def owner_of(self, leaf: int) -> str:
+        return self.res[leaf].owner
+
+    def owned_leaves(self, tenant: str) -> Set[int]:
+        return set(self.owned.get(tenant, ()))
+
+    def tenant_orders(self, tenant: str) -> List[Order]:
+        return [o for o in self.orders.values()
+                if o.tenant == tenant and o.active]
+
+    def settle(self, t: Optional[float] = None) -> Dict[str, float]:
+        """Accrue all leaves up to t and return the bills."""
+        if t is not None:
+            self.advance_to(t)
+        for leaf in self.res:
+            self._accrue(leaf)
+        return dict(self.bills)

@@ -1,0 +1,95 @@
+"""Pallas TPU flash-decode kernel: one query token against a long KV cache.
+
+The serving hot-spot at 32k-500k context (assignment shapes decode_32k /
+long_500k). Grid = (B, K, nS): for each (batch, kv-head) the kernel walks
+KV blocks sequentially (innermost grid dim), keeping the online-softmax
+running max / normalizer / accumulator for all G query heads of the group
+in VMEM scratch. KV blocks are streamed HBM->VMEM by the BlockSpec
+pipeline; block sizes are MXU/VPU aligned (hd=128 lanes, bS x hd tiles).
+
+Sliding windows (gemma3 / danube) mask per-block; fully-masked blocks are
+skipped cheaply (the mask zeroes their contribution).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -2.0 ** 30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, bS: int, window: int,
+                   n_sblocks: int):
+    s = pl.program_id(2)
+    pos = pos_ref[0]
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]                       # (G, hd)
+    k = k_ref[0, :, 0, :]                 # (bS, hd)
+    v = v_ref[0, :, 0, :]                 # (bS, hd)
+    hd = q.shape[-1]
+    scale = hd ** -0.5
+    scores = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    t = s * bS + jax.lax.iota(jnp.int32, bS)
+    valid = t <= pos
+    if window:
+        valid &= t > pos - window
+    scores = jnp.where(valid[None, :], scores, NEG_INF)   # (G, bS)
+    m_prev = m_ref[...]                   # (G, 1)
+    m_new = jnp.maximum(m_prev[:, 0], jnp.max(scores, axis=-1))[:, None]
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new)           # (G, bS)
+    l_new = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+    acc = acc_ref[...] * alpha + jnp.dot(p, v.astype(jnp.float32))
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc
+
+    @pl.when(s == n_sblocks - 1)
+    def _fini():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                            pos: jax.Array, window: int = 0,
+                            block_s: int = 512,
+                            interpret: bool = True) -> jax.Array:
+    """q: (B, K, G, hd); k/v: (B, S, K, hd); returns (B, K, G, hd)."""
+    B, S, K, hd = k.shape
+    G = q.shape[2]
+    bS = min(block_s, S)
+    assert S % bS == 0, (S, bS)
+    nS = S // bS
+    grid = (B, K, nS)
+    pos_arr = jnp.broadcast_to(pos.astype(jnp.int32)[None], (1,))
+    kern = functools.partial(_decode_kernel, bS=bS, window=window,
+                             n_sblocks=nS)
+    from jax.experimental.pallas import tpu as pltpu
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),          # pos
+            pl.BlockSpec((1, 1, G, hd), lambda b, kk, s: (b, kk, 0, 0)),
+            pl.BlockSpec((1, bS, 1, hd), lambda b, kk, s: (b, s, kk, 0)),
+            pl.BlockSpec((1, bS, 1, hd), lambda b, kk, s: (b, s, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, kk, s: (b, kk, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, q, k, v)

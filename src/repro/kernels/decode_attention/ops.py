@@ -1,0 +1,23 @@
+"""Jitted decode-attention entry point used by the serving runtime."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("window", "use_pallas",
+                                             "interpret", "block_s"))
+def decode_attention(q, k, v, pos, *, window: int = 0,
+                     use_pallas: bool = False, interpret: bool = True,
+                     block_s: int = 512):
+    """q: (B, K, G, hd); k/v: (B, S, K, hd); pos scalar int32."""
+    if use_pallas:
+        return decode_attention_pallas(q, k, v, pos, window=window,
+                                       block_s=block_s,
+                                       interpret=interpret)
+    return decode_attention_ref(q, k, v, pos, window=window)

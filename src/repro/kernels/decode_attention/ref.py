@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, window: int = 0) -> jax.Array:
+    """q: (B, K, G, hd); k/v: (B, S, K, hd); pos: scalar int32 — attend to
+    cache positions t <= pos (and t > pos-window if window). Returns
+    (B, K, G, hd) in q.dtype; accumulation in f32."""
+    B, S, K, hd = k.shape
+    scale = hd ** -0.5
+    scores = jnp.einsum("bkgh,btkh->bkgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    t = jnp.arange(S)
+    valid = t <= pos
+    if window:
+        valid &= t > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the hierarchical market-clearing pass.
+
+TPU-native formulation (DESIGN.md §3): the tree is regular, so leaf i's
+ancestor at level d is ``i // stride[d]`` — pure index arithmetic, no
+pointer chasing. The grid tiles leaves into VMEM blocks; each level's node
+aggregates arrive as a *contiguous window* via its BlockSpec index map
+(every 128/512-leaf block shares a handful of ancestors), so the kernel
+does only static `jnp.repeat` expansions and vector max/select ops — no
+gathers, fully VPU-friendly.
+
+Block size 512 divides all level strides (8/32/128/512-style topologies);
+lane dim padded to multiples of 128 where needed by the caller (ops.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _clear_kernel(owner_ref, *refs, strides: Sequence[int], block: int):
+    """refs layout: for each level d: (top1, own1, top2, floor) then
+    outputs (rate, best_level)."""
+    n_lvl = len(strides)
+    lvl_refs = refs[:4 * n_lvl]
+    rate_ref, best_ref = refs[4 * n_lvl], refs[4 * n_lvl + 1]
+    owner = owner_ref[...]
+    rate = jnp.zeros((block,), jnp.float32)
+    best_bid = jnp.full((block,), NEG, jnp.float32)
+    best_lvl = jnp.full((block,), -1, jnp.int32)
+    for d, s in enumerate(strides):
+        t1 = lvl_refs[4 * d + 0][...]
+        o1 = lvl_refs[4 * d + 1][...]
+        t2 = lvl_refs[4 * d + 2][...]
+        fl = lvl_refs[4 * d + 3][...]
+        reps = s if s <= block else block
+        # expand the node window to per-leaf lanes (static repeat)
+        t1 = jnp.repeat(t1, reps, total_repeat_length=block)
+        o1 = jnp.repeat(o1, reps, total_repeat_length=block)
+        t2 = jnp.repeat(t2, reps, total_repeat_length=block)
+        fl = jnp.repeat(fl, reps, total_repeat_length=block)
+        eff = jnp.where(o1 == owner, t2, t1)
+        rate = jnp.maximum(rate, fl)
+        better = eff > best_bid
+        best_bid = jnp.where(better, eff, best_bid)
+        best_lvl = jnp.where(better & (eff > NEG / 2), d, best_lvl)
+    rate_ref[...] = jnp.maximum(rate, jnp.maximum(best_bid, 0.0))
+    best_ref[...] = best_lvl
+
+
+def clear_pallas(level_top1: Sequence[jax.Array],
+                 level_owner: Sequence[jax.Array],
+                 level_top2: Sequence[jax.Array],
+                 level_floor: Sequence[jax.Array],
+                 strides: Sequence[int], owner: jax.Array,
+                 block: int = 512, interpret: bool = True
+                 ) -> Tuple[jax.Array, jax.Array]:
+    n_leaves = owner.shape[0]
+    assert n_leaves % block == 0, (n_leaves, block)
+    grid = (n_leaves // block,)
+    in_specs = [pl.BlockSpec((block,), lambda i: (i,))]
+    args = [owner]
+    for d, s in enumerate(strides):
+        w = max(block // s, 1)          # nodes visible to one leaf block
+        # leaf block i covers nodes [i*w, (i+1)*w) at this level
+        spec = pl.BlockSpec((w,), lambda i: (i,))
+        for arr in (level_top1[d], level_owner[d], level_top2[d],
+                    level_floor[d]):
+            pad = (-arr.shape[0]) % w
+            if pad:
+                fillv = NEG if arr.dtype == jnp.float32 else -1
+                arr = jnp.pad(arr, (0, pad), constant_values=fillv)
+            in_specs.append(spec)
+            args.append(arr)
+    out_shape = (jax.ShapeDtypeStruct((n_leaves,), jnp.float32),
+                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32))
+    out_specs = (pl.BlockSpec((block,), lambda i: (i,)),
+                 pl.BlockSpec((block,), lambda i: (i,)))
+    kern = functools.partial(_clear_kernel, strides=tuple(strides),
+                             block=block)
+    return pl.pallas_call(kern, grid=grid, in_specs=in_specs,
+                          out_specs=out_specs, out_shape=out_shape,
+                          interpret=interpret)(*args)

@@ -1,0 +1,26 @@
+"""Jitted wrapper: hierarchical clearing via the Pallas kernel (TPU) or
+the pure-jnp oracle (CPU / differentiability)."""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.market_clear import ref as R
+from repro.kernels.market_clear.kernel import clear_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("strides", "use_pallas",
+                                             "interpret", "block"))
+def clear(level_top1, level_owner, level_top2, level_floor,
+          strides: Tuple[int, ...], owner, *, use_pallas: bool = False,
+          interpret: bool = True, block: int = 512):
+    if use_pallas:
+        return clear_pallas(list(level_top1), list(level_owner),
+                            list(level_top2), list(level_floor),
+                            strides, owner, block=block,
+                            interpret=interpret)
+    return R.clear_ref(list(level_top1), list(level_owner),
+                       list(level_top2), list(level_floor), strides, owner)

@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for the hierarchical market-clearing pass.
+
+Given the resting-bid table of one type-tree and the regular topology
+(per-level node aggregates), compute for every leaf:
+
+  rate   = max(path floor, best covering bid price, owner-excluded)
+  winner = bid id of the best covering bid (or -1)
+
+This is the dense re-expression of the paper's matching hot path
+(DESIGN.md §3): per-level segment top-2 of bids + a depth-bounded
+ancestor-path combine.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
+                 n_seg: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Top-2 prices per segment (+ owner of the top-1 bid).
+
+    prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 node ids;
+    owners: (nb,) int32 tenant of each bid.
+    Returns (top1 (n_seg,), top1_owner (n_seg,), top2 (n_seg,)).
+    """
+    top1 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(prices)
+    is_top = prices >= top1[seg] - 1e-12
+    owner_of_top = jnp.full((n_seg,), -1, jnp.int32).at[
+        jnp.where(is_top, seg, n_seg - 1)].max(
+        jnp.where(is_top, owners, -1), mode="drop")
+    # top2: max over bids strictly below their segment top, PLUS duplicates
+    # of the top value (two bids at the same price)
+    dup = jnp.full((n_seg,), 0, jnp.int32).at[
+        jnp.where(is_top, seg, 0)].add(jnp.where(is_top, 1, 0), mode="drop")
+    below = jnp.where(is_top, NEG, prices)
+    top2 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(below)
+    top2 = jnp.where(dup >= 2, top1, top2)
+    return top1, owner_of_top, top2
+
+
+def clear_ref(level_top1: Sequence[jax.Array],
+              level_owner: Sequence[jax.Array],
+              level_top2: Sequence[jax.Array],
+              level_floor: Sequence[jax.Array],
+              strides: Sequence[int],
+              owner: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Combine per-level aggregates down the ancestor path of each leaf.
+
+    Level d arrays have one entry per node at that level; leaf i's ancestor
+    at level d is i // strides[d] (regular tree). ``owner``: (n_leaves,)
+    int32 current owner of each leaf.
+
+    Returns (rate (n_leaves,), best_level (n_leaves,) int32 — the level
+    whose book holds the winning bid, or -1 if only the floor binds).
+    """
+    n_leaves = owner.shape[0]
+    rate = jnp.zeros((n_leaves,), jnp.float32)
+    best_bid = jnp.full((n_leaves,), NEG, jnp.float32)
+    best_level = jnp.full((n_leaves,), -1, jnp.int32)
+    for d, s in enumerate(strides):
+        idx = jnp.arange(n_leaves) // s
+        t1 = level_top1[d][idx]
+        own1 = level_owner[d][idx]
+        t2 = level_top2[d][idx]
+        fl = level_floor[d][idx]
+        # owner exclusion: if the top bid at this node is the leaf owner's
+        # own order, the effective pressure is the runner-up
+        eff = jnp.where(own1 == owner, t2, t1)
+        rate = jnp.maximum(rate, fl)
+        better = eff > best_bid
+        best_bid = jnp.where(better, eff, best_bid)
+        best_level = jnp.where(better & (eff > NEG / 2), d, best_level)
+    rate = jnp.maximum(rate, jnp.maximum(best_bid, 0.0))
+    return rate, best_level

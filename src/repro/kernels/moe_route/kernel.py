@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused MoE router (softmax + iterative top-k).
+
+Token blocks of bT tokens x E experts live in VMEM; top-k is k rounds of
+(max, argmax-by-iota-min, mask) — pure VPU ops, no sort. E is padded to a
+lane multiple by the wrapper. k is small (2-8 for the assigned MoE archs:
+jamba top-2, olmoe/kimi top-8).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _route_kernel(logits_ref, w_ref, i_ref, *, k: int, E: int,
+                  renormalize: bool):
+    logits = logits_ref[...].astype(jnp.float32)          # (bT, Epad)
+    bT, Epad = logits.shape
+    lane = jax.lax.broadcasted_iota(jnp.int32, (bT, Epad), 1)
+    logits = jnp.where(lane < E, logits, NEG)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    ex = jnp.exp(logits - m)
+    probs = ex / jnp.sum(ex, axis=-1, keepdims=True)
+    ws = []
+    ids = []
+    p = probs
+    for _ in range(k):
+        w = jnp.max(p, axis=-1)                           # (bT,)
+        is_max = p >= w[:, None]
+        idx = jnp.min(jnp.where(is_max, lane, Epad), axis=-1)
+        p = jnp.where(lane == idx[:, None], NEG, p)
+        ws.append(w)
+        ids.append(idx)
+    W = jnp.stack(ws, axis=-1)                            # (bT, k)
+    if renormalize:
+        W = W / jnp.sum(W, axis=-1, keepdims=True)
+    w_ref[...] = W
+    i_ref[...] = jnp.stack(ids, axis=-1).astype(jnp.int32)
+
+
+def route_pallas(logits: jax.Array, k: int, renormalize: bool = True,
+                 block_t: int = 256, interpret: bool = True):
+    T, E = logits.shape
+    Epad = -(-E // 128) * 128
+    if Epad != E:
+        logits = jnp.pad(logits, ((0, 0), (0, Epad - E)),
+                         constant_values=NEG)
+    bT = min(block_t, T)
+    pad_t = (-T) % bT
+    if pad_t:
+        logits = jnp.pad(logits, ((0, pad_t), (0, 0)))
+    Tp = T + pad_t
+    kern = functools.partial(_route_kernel, k=k, E=E,
+                             renormalize=renormalize)
+    w, idx = pl.pallas_call(
+        kern,
+        grid=(Tp // bT,),
+        in_specs=[pl.BlockSpec((bT, Epad), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((bT, k), lambda i: (i, 0)),
+                   pl.BlockSpec((bT, k), lambda i: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((Tp, k), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp, k), jnp.int32)),
+        interpret=interpret,
+    )(logits)
+    return w[:T], idx[:T]

@@ -1,0 +1,21 @@
+"""Jitted MoE-router entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.moe_route.kernel import route_pallas
+from repro.kernels.moe_route.ref import route_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "renormalize",
+                                             "use_pallas", "interpret",
+                                             "block_t"))
+def route(logits, *, k: int, renormalize: bool = True,
+          use_pallas: bool = False, interpret: bool = True,
+          block_t: int = 256):
+    if use_pallas:
+        return route_pallas(logits, k, renormalize, block_t=block_t,
+                            interpret=interpret)
+    return route_ref(logits, k, renormalize)

@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for fused MoE routing (softmax + top-k)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def route_ref(logits: jax.Array, k: int, renormalize: bool = True):
+    """logits: (T, E) -> (weights (T,k) f32, idx (T,k) int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    w, idx = lax.top_k(probs, k)
+    if renormalize:
+        w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return w, idx.astype(jnp.int32)

@@ -1,0 +1,91 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+Grid = (B, H/bH, nC) with chunks innermost: each (batch, head-block) walks
+its chunks sequentially, carrying the (bH, P, N) SSM state in VMEM scratch
+— the inter-chunk recurrence never leaves the core. Intra-chunk work is
+dense (Q x Q) matmuls on the MXU (the SSD "duality"), with the decay tensor
+blocked to (Q, Q, bH) so VMEM stays bounded for wide-head archs (jamba:
+128 SSD heads -> 8 head-blocks of 16).
+
+Tiling: Q (chunk) and N (state) are 128-multiples; P=64/128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref,
+                state_ref, *, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, bH, P)
+    dt = dt_ref[0]                          # (Q, bH) f32
+    A = a_ref[...]                          # (bH,)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+    Q = x.shape[0]
+    dA = dt * A                             # (Q, bH), negative
+    cum = jnp.cumsum(dA, axis=0)
+    mask = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    decay = jnp.where(mask[:, :, None],
+                      jnp.exp(cum[:, None, :] - cum[None, :, :]), 0.0)
+    G = jnp.dot(Cm, Bm.T)                   # (Q, Q) on the MXU
+    xdt = x * dt[:, :, None]                # (Q, bH, P)
+    y = jnp.einsum("ij,ijh,jhp->ihp", G, decay, xdt)
+    state = state_ref[...]                  # (bH, P, N)
+    y = y + jnp.einsum("in,ih,hpn->ihp", Cm, jnp.exp(cum), state)
+    decay_end = jnp.exp(cum[-1])            # (bH,)
+    to_end = jnp.exp(cum[-1][None, :] - cum)  # (Q, bH)
+    new_state = decay_end[:, None, None] * state \
+        + jnp.einsum("jh,jn,jhp->hpn", to_end, Bm, xdt)
+    state_ref[...] = new_state
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(c == n_chunks - 1)
+    def _fini():
+        fs_ref[0] = state_ref[...]
+
+
+def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, block_h: int = 16,
+                    interpret: bool = True):
+    """x: (B,S,H,P) any float dtype; dt: (B,S,H) f32; A: (H,) f32;
+    Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N) f32)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nC = S // chunk
+    bH = min(block_h, H)
+    assert H % bH == 0, (H, bH)
+    grid = (B, H // bH, nC)
+    kern = functools.partial(_ssd_kernel, n_chunks=nC)
+    from jax.experimental.pallas import tpu as pltpu
+    y, fs = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bH, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, bH), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((bH,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, chunk, bH, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, bH, P, N), lambda b, h, c: (b, h, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((B, S, H, P), x.dtype),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ),
+        scratch_shapes=[pltpu.VMEM((bH, P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)
+    return y, fs

@@ -1,0 +1,20 @@
+"""Jitted SSD-scan entry point."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
+                                             "interpret", "block_h"))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             use_pallas: bool = False, interpret: bool = True,
+             block_h: int = 16):
+    if use_pallas:
+        return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk, block_h=block_h,
+                               interpret=interpret)
+    return ssd_scan_ref(x, dt, A, Bm, Cm, chunk)

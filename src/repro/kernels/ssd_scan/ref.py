@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the chunked SSD scan: reuses the model's reference
+implementation (repro.models.layers.ssd_chunked)."""
+from __future__ import annotations
+
+import jax
+
+from repro.models.layers import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, A, Bm, Cm, chunk: int):
+    """x: (B,S,H,P); dt: (B,S,H) f32; A: (H,) f32 negative; Bm/Cm: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N) f32)."""
+    return ssd_chunked(x, dt, A, Bm, Cm, chunk)

@@ -1,0 +1,128 @@
+"""Build one dry-run "cell": (arch × input-shape × mesh) -> step function,
+abstract inputs (ShapeDtypeStructs — never allocated), in/out shardings.
+
+This is the same wiring used by launch/train.py and launch/serve.py, so the
+dry-run proves the production configuration, not a parallel copy of it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES
+from repro.launch import mesh as mesh_lib
+from repro.launch import shardings as sh
+from repro.models import model as M
+from repro.models import steps as S
+from repro.optim import AdamWConfig, abstract_train_state
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract batch inputs for an (arch, shape) cell (train / prefill)."""
+    B, Sq = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.param_dtype)
+    text = Sq
+    specs: Dict[str, Any] = {}
+    if cfg.frontend == "vision_stub":
+        text = Sq - cfg.num_prefix_tokens
+        specs["prefix_embeds"] = _sds((B, cfg.num_prefix_tokens,
+                                       cfg.d_model), dt)
+    if cfg.frontend == "audio_stub":
+        specs["encoder_embeds"] = _sds((B, cfg.num_prefix_tokens,
+                                        cfg.d_model), dt)
+    specs["tokens"] = _sds((B, text), jnp.int32)
+    return specs
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_name: str
+    fn: Any                  # the step callable
+    args: Tuple[Any, ...]    # abstract args
+    in_shardings: Any
+    out_shardings: Any       # or None to infer
+    mesh: jax.sharding.Mesh
+
+
+def mesh_info(cfg: ArchConfig, shape: ShapeConfig,
+              mesh: jax.sharding.Mesh) -> M.MeshInfo:
+    return M.MeshInfo(
+        mesh=mesh, dp_axes=mesh_lib.dp_axes(mesh), ep_axis="model",
+        batch_sharded=sh.batch_sharded(shape.global_batch, mesh))
+
+
+def reduced_depth(cfg: ArchConfig, k: int) -> ArchConfig:
+    """Same arch with k superblocks (for FLOPs extrapolation compiles:
+    cost_analysis counts a scanned body once, so the sweep compiles k=1 and
+    k=2 UNROLLED and extrapolates linearly in n_super)."""
+    head, p, n_super, tail = cfg.plan_blocks()
+    enc = 0
+    if cfg.enc_dec and n_super:
+        enc = k * (cfg.num_encoder_layers // n_super)
+    return dataclasses.replace(cfg, num_layers=head + k * p + tail,
+                               num_encoder_layers=enc)
+
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: jax.sharding.Mesh,
+               opt: Optional[AdamWConfig] = None,
+               scan_layers: bool = True) -> Cell:
+    opt = opt or AdamWConfig(state_dtype=cfg.opt_dtype)
+    mi = mesh_info(cfg, shape, mesh)
+    nmd = lambda tree: sh.to_named(tree, mesh)
+    params_abs = M.abstract_params(cfg)
+    pspecs = sh.param_specs(cfg, mesh)
+
+    if shape.step == "train":
+        state_abs = abstract_train_state(params_abs, opt)
+        batch_abs = input_specs(cfg, shape)
+        fn = S.make_train_step(cfg, opt, mi, scan_layers=scan_layers)
+        in_sh = (nmd(sh.train_state_specs(cfg, mesh)),
+                 nmd(sh.batch_specs(cfg, mesh, shape.global_batch)))
+        out_sh = (nmd(sh.train_state_specs(cfg, mesh)),
+                  {"loss": NamedSharding(mesh, P()),
+                   "grad_norm": NamedSharding(mesh, P())})
+        return Cell(cfg.name, shape.name, "train_step", fn,
+                    (state_abs, batch_abs), in_sh, out_sh, mesh)
+
+    if shape.step == "prefill":
+        batch_abs = input_specs(cfg, shape)
+        fn = S.make_prefill_step(cfg, max_len=shape.seq_len, mesh_info=mi,
+                                 scan_layers=scan_layers)
+        in_sh = (nmd(pspecs),
+                 nmd(sh.batch_specs(cfg, mesh, shape.global_batch)))
+        return Cell(cfg.name, shape.name, "prefill_step", fn,
+                    (params_abs, batch_abs), in_sh, None, mesh)
+
+    # decode: one new token against a seq_len-deep KV cache
+    B = shape.global_batch
+    cache_abs = M.cache_specs(cfg, B, shape.seq_len)
+    tokens_abs = _sds((B, 1), jnp.int32)
+    pos_abs = _sds((), jnp.int32)
+    fn = S.make_decode_step(cfg, mesh_info=mi)
+    cspecs = sh.cache_specs_tree(cfg, mesh, B)
+    dp = mesh_lib.dp_axes(mesh)
+    b = dp if sh.batch_sharded(B, mesh) else None
+    in_sh = (nmd(pspecs), nmd(cspecs),
+             NamedSharding(mesh, P(b, None)), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, sh.logits_spec(cfg, mesh, B)),
+              nmd(cspecs))
+    return Cell(cfg.name, shape.name, "decode_step", fn,
+                (params_abs, cache_abs, tokens_abs, pos_abs),
+                in_sh, out_sh, mesh)
+
+
+def lower_cell(cell: Cell):
+    with cell.mesh:
+        jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                         out_shardings=cell.out_shardings)
+        return jitted.lower(*cell.args)

@@ -1,0 +1,335 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines — jax locks the device count on first init.
+"""Multi-pod dry-run: lower + compile every (architecture × input-shape)
+cell on the production meshes and extract roofline terms.
+
+Per cell this records: per-device HLO FLOPs / bytes (cost_analysis),
+memory_analysis, the collective schedule parsed from the post-SPMD HLO
+(op kind × group size × operand/wire bytes), and lower/compile wall time.
+Results are cached as JSON under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-405b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --sweep          # everything
+"""
+import argparse
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+import traceback
+from typing import Any, Dict, List
+
+ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_OUT = ROOT / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def parse_collectives(hlo_text: str, n_devices: int,
+                      assume_bf16: bool = False) -> Dict[str, Any]:
+    """Sum operand + wire bytes for every collective in post-SPMD HLO.
+
+    Shapes in the partitioned module are per-device. Wire bytes use ring
+    estimates: AG out*(g-1)/g, RS in*(g-1)/g, AR 2*in*(g-1)/g, A2A
+    in*(g-1)/g, permute = in.
+
+    ``assume_bf16``: XLA-CPU upcasts bf16 matmul operands/grads to f32 (no
+    native bf16), so large f32 collectives correspond to bf16 tensors on
+    the TPU target; ``wire_bytes_adj`` halves those.
+    """
+    per_op: Dict[str, Dict[str, float]] = {}
+    n_while = 0
+    for line in hlo_text.splitlines():
+        if " while(" in line:
+            n_while += 1
+        m = re.search(r"=\s+(.+?)\s+(" + "|".join(_COLL_OPS)
+                      + r")(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        op = m.group(2)
+        out_part = m.group(1)
+        rest = line[m.end():]
+        out_bytes = sum(_shape_bytes(d, s)
+                        for d, s in _SHAPE_RE.findall(out_part))
+        # operands: shape tokens before the first ")," metadata section
+        args_part = rest.split("replica_groups")[0]
+        in_bytes = sum(_shape_bytes(d, s)
+                       for d, s in _SHAPE_RE.findall(args_part))
+        g = _group_size(line, n_devices)
+        if g <= 1:
+            continue
+        if in_bytes == 0:
+            # operand shapes are not always printed inline; reconstruct
+            # from the output: AR/permute out==in, RS out==in/g, A2A out==in
+            in_bytes = out_bytes * (g if op == "reduce-scatter" else 1)
+        ratio = (g - 1) / g
+        if op == "all-gather":
+            wire = out_bytes * ratio
+        elif op == "reduce-scatter":
+            wire = in_bytes * ratio
+        elif op == "all-reduce":
+            wire = 2.0 * in_bytes * ratio
+        elif op == "all-to-all":
+            wire = in_bytes * ratio
+        else:
+            wire = in_bytes
+        shapes = _SHAPE_RE.findall(out_part)
+        dtype0 = shapes[0][0] if shapes else "f32"
+        adj = 0.5 if (assume_bf16 and dtype0 == "f32"
+                      and wire > 1e6) else 1.0
+        key = f"{op}@g{g}"
+        d = per_op.setdefault(key, {"count": 0, "operand_bytes": 0.0,
+                                    "wire_bytes": 0.0,
+                                    "wire_bytes_adj": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += in_bytes
+        d["wire_bytes"] += wire
+        d["wire_bytes_adj"] += wire * adj
+    total_operand = sum(d["operand_bytes"] for d in per_op.values())
+    total_wire = sum(d["wire_bytes"] for d in per_op.values())
+    total_adj = sum(d["wire_bytes_adj"] for d in per_op.values())
+    return {"per_op": per_op, "operand_bytes": total_operand,
+            "wire_bytes": total_wire, "wire_bytes_adj": total_adj,
+            "while_ops": n_while}
+
+
+def _parse_overrides(spec: str) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    for kv in (spec or "").split(","):
+        if not kv:
+            continue
+        k, v = kv.split("=", 1)
+        for conv in (int, float):
+            try:
+                v = conv(v)
+                break
+            except ValueError:
+                pass
+        out[k] = v
+    return out
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: pathlib.Path, force: bool = False,
+             overrides: str = "", tag: str = "") -> Dict[str, Any]:
+    import dataclasses as _dc
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    import jax  # after XLA_FLAGS
+    from repro.configs import get_config, SHAPES, applicable_shapes
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch import analytic
+
+    cfg = get_config(arch)
+    ov = _parse_overrides(overrides)
+    if ov:
+        cfg = _dc.replace(cfg, **ov)
+    shape = SHAPES[shape_name]
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind, "overrides": overrides}
+    if shape_name not in applicable_shapes(cfg):
+        rec["status"] = "skipped"
+        rec["reason"] = ("long-context decode requires sub-quadratic "
+                        "attention; this arch is pure full-attention "
+                        "(see DESIGN.md §Arch-applicability)")
+        out_path.write_text(json.dumps(rec, indent=1))
+        return rec
+    try:
+        from repro.launch.cells import reduced_depth
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        n_dev = mesh.size
+        cell = build_cell(cfg, shape, mesh)
+        t0 = time.time()
+        lowered = lower_cell(cell)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        ca = compiled.cost_analysis() or {}
+        ma = compiled.memory_analysis()
+        print(f"[{arch} {shape_name} {mesh_kind}] memory_analysis:", ma,
+              flush=True)
+        print(f"[{arch} {shape_name} {mesh_kind}] cost_analysis flops/dev:",
+              ca.get("flops"), "bytes/dev:", ca.get("bytes accessed"),
+              flush=True)
+        bf16 = cfg.param_dtype == 'bfloat16'
+        colls = parse_collectives(compiled.as_text(), n_dev, assume_bf16=bf16)
+        mf = analytic.model_flops(cfg, shape)
+        dp = (mesh.shape.get("pod", 1) * mesh.shape["data"])
+        mem = analytic.analytic_memory(cfg, shape, n_dev, dp,
+                                       mesh.shape["model"])
+        # --- extrapolation compiles -------------------------------------
+        # train/prefill lower with lax.scan over layer superblocks, whose
+        # body XLA cost analysis counts ONCE.  Recover exact totals by
+        # compiling k=1 and k=2 superblocks UNROLLED and extrapolating
+        # linearly in n_super (exact for per-layer-homogeneous cost).
+        head, p, n_super, tail = cfg.plan_blocks()
+        corrected = None
+        if shape.step in ("train", "prefill") and n_super > 1:
+            probes = {}
+            for k in (1, 2):
+                ck = reduced_depth(cfg, k)
+                cellk = build_cell(ck, shape, mesh, scan_layers=False)
+                lk = lower_cell(cellk)
+                compk = lk.compile()
+                cak = compk.cost_analysis() or {}
+                probes[k] = {
+                    "flops": cak.get("flops", 0.0),
+                    "bytes": cak.get("bytes accessed", 0.0),
+                    "colls": parse_collectives(compk.as_text(), n_dev, assume_bf16=bf16),
+                }
+            d = n_super - 1
+            f1, f2 = probes[1]["flops"], probes[2]["flops"]
+            b1, b2 = probes[1]["bytes"], probes[2]["bytes"]
+            w1 = probes[1]["colls"]["wire_bytes"]
+            w2 = probes[2]["colls"]["wire_bytes"]
+            a1 = probes[1]["colls"]["wire_bytes_adj"]
+            a2 = probes[2]["colls"]["wire_bytes_adj"]
+            o1 = probes[1]["colls"]["operand_bytes"]
+            o2 = probes[2]["colls"]["operand_bytes"]
+            corrected = {
+                "flops_per_dev": f1 + d * (f2 - f1),
+                "bytes_per_dev": b1 + d * (b2 - b1),
+                "wire_bytes_per_dev": w1 + d * (w2 - w1),
+                "wire_bytes_adj_per_dev": a1 + d * (a2 - a1),
+                "operand_bytes_per_dev": o1 + d * (o2 - o1),
+                "probe_k1": probes[1], "probe_k2": probes[2],
+            }
+        rec.update({
+            "status": "ok",
+            "step": cell.step_name,
+            "n_devices": n_dev,
+            "lower_s": round(t1 - t0, 2),
+            "compile_s": round(t2 - t1, 2),
+            "flops_per_dev": ca.get("flops"),
+            "bytes_per_dev": ca.get("bytes accessed"),
+            "cost_analysis": {k: v for k, v in ca.items()
+                              if isinstance(v, (int, float))},
+            "memory_analysis": {
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "generated_code_bytes": ma.generated_code_size_in_bytes,
+            },
+            "collectives": colls,
+            "corrected": corrected,
+            "model_flops": mf,
+            "analytic_memory_per_dev": mem,
+        })
+    except Exception as e:  # record the failure, keep sweeping
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[{arch} {shape_name} {mesh_kind}] FAILED: {e}",
+              file=sys.stderr, flush=True)
+    out_path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def all_cells() -> List[Dict[str, str]]:
+    # import lazily to keep --help fast
+    from repro.configs import ARCHS, SHAPES
+    cells = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                cells.append({"arch": arch, "shape": shape, "mesh": mesh})
+    return cells
+
+
+def sweep(out_dir: pathlib.Path, force: bool, mesh_filter: str) -> int:
+    """Run every cell in a fresh subprocess (isolates XLA state; a cell
+    crash cannot take down the sweep)."""
+    failures = 0
+    cells = [c for c in all_cells()
+             if mesh_filter in ("both", c["mesh"])]
+    for i, c in enumerate(cells):
+        out_path = out_dir / f"{c['arch']}__{c['shape']}__{c['mesh']}.json"
+        if out_path.exists() and not force:
+            rec = json.loads(out_path.read_text())
+            print(f"[{i+1}/{len(cells)}] cached {c['arch']} {c['shape']} "
+                  f"{c['mesh']}: {rec.get('status')}", flush=True)
+            continue
+        print(f"[{i+1}/{len(cells)}] {c['arch']} {c['shape']} {c['mesh']}",
+              flush=True)
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+             c["arch"], "--shape", c["shape"], "--mesh", c["mesh"],
+             "--out", str(out_dir)] + (["--force"] if force else []),
+            env={**os.environ,
+                 "PYTHONPATH": str(ROOT / "src")},
+            capture_output=True, text=True)
+        if r.returncode != 0:
+            failures += 1
+            print(r.stdout[-2000:], r.stderr[-2000:], flush=True)
+    print(f"sweep done: {len(cells)} cells, {failures} subprocess failures",
+          flush=True)
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--override", default="",
+                    help="cfg overrides, e.g. attn_softmax_dtype=bfloat16")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf variants)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run every cell in subprocesses, with caching")
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+    if args.sweep:
+        sys.exit(1 if sweep(out_dir, args.force, args.mesh) else 0)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    assert args.arch and args.shape, "--arch/--shape required (or --sweep)"
+    for mk in meshes:
+        rec = run_cell(args.arch, args.shape, mk, out_dir, args.force,
+                       overrides=args.override, tag=args.tag)
+        status = rec.get("status")
+        print(f"{args.arch} {args.shape} {mk}: {status}")
+        if status == "error":
+            print(rec.get("error"))
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>``.
+
+Batched prefill+decode with fixed slots (continuous-batching-lite); on CPU
+the reduced config of the arch family is served so the path runs anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+import jax
+
+from repro.configs import get_config
+from repro.models.model import init_params
+from repro.serve.server import Request, Server
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    params = init_params(cfg, jax.random.key(0))
+    srv = Server(cfg, params,
+                 max_len=args.prompt_len + args.max_new + 8,
+                 batch_slots=args.slots)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        args.prompt_len).astype(np.int32),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    for r in reqs:
+        srv.submit(r)
+    srv.drain()
+    done = sum(1 for r in reqs if len(r.out) >= args.max_new)
+    print(f"served {done}/{len(reqs)} requests "
+          f"({args.max_new} tokens each, {args.slots} slots)")
+
+
+if __name__ == "__main__":
+    main()

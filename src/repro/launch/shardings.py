@@ -1,0 +1,184 @@
+"""Sharding policy: PartitionSpec trees for params, optimizer state, batches
+and KV caches, per (arch × shape × mesh).
+
+Baseline policy (the paper-faithful starting point for §Perf):
+  * FSDP: every ≥2-D parameter shards one dim over "data" (ZeRO-3 style).
+  * TP:   attention projections / MLP hidden / vocab shard over "model".
+  * EP:   MoE expert dim shards over "model" (shard_map gathers "data").
+  * SSM:  DP-only baseline (in_proj split boundaries are not 16-divisible
+          per head; head-sharded SSD TP is a §Perf iteration).
+  * Multi-pod: "pod" extends data parallelism; params replicated across
+    pods (classic cross-DCI DP; pod-sharded FSDP is a §Perf lever).
+
+Shapes whose global batch can't shard over the dp axes (long_500k, B=1)
+shard the KV-cache sequence dim over every mesh axis instead (SP).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import mesh as mesh_lib
+
+Spec = Any  # pytree of PartitionSpec
+
+
+# --------------------------------------------------------------------------
+# Parameter specs (mirror models.model.init_params structure)
+# --------------------------------------------------------------------------
+def _attn_specs(cfg: ArchConfig, tp: int) -> Dict[str, Any]:
+    s = {
+        "wq": P("data", "model"),
+        "wk": P("data", "model"),
+        "wv": P("data", "model"),
+        "wo": P("model", "data"),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = P(None)
+        s["k_norm"] = P(None)
+    return s
+
+
+def _mlp_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    if cfg.mlp_type == "swiglu":
+        return {"wg": P("data", "model"), "wu": P("data", "model"),
+                "wd": P("model", "data")}
+    return {"wi": P("data", "model"), "wo_mlp": P("model", "data")}
+
+
+def _moe_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"router": P(None, None),
+            "wg": P("model", "data", None),
+            "wu": P("model", "data", None),
+            "wd": P("model", None, "data")}
+
+
+def _ssm_specs(cfg: ArchConfig) -> Dict[str, Any]:
+    return {"in_proj": P("data", None), "conv_w": P(None, None),
+            "conv_b": P(None), "A_log": P(None), "D": P(None),
+            "dt_bias": P(None), "ssm_norm": P(None),
+            "out_proj": P(None, "data")}
+
+
+def _layer_specs(cfg: ArchConfig, spec, tp: int, cross: bool):
+    s: Dict[str, Any] = {"ln1": P(None)}
+    if spec.kind == "attn":
+        s["attn"] = _attn_specs(cfg, tp)
+    else:
+        s["ssm"] = _ssm_specs(cfg)
+    if cross:
+        s["ln_x"] = P(None)
+        s["cross"] = _attn_specs(cfg, tp)
+    if spec.moe:
+        s["ln2"] = P(None)
+        s["moe"] = _moe_specs(cfg)
+    elif cfg.d_ff:
+        s["ln2"] = P(None)
+        s["mlp"] = _mlp_specs(cfg)
+    return s
+
+
+def _prepend_none(tree: Any) -> Any:
+    """Stacked (scanned) storage: add a replicated leading layer dim."""
+    return jax.tree.map(lambda s: P(None, *s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh) -> Spec:
+    tp = mesh.shape["model"]
+    plan = cfg.layer_plan()
+    head, p, n_super, tail = cfg.plan_blocks()
+    lsp = lambda sp: _layer_specs(cfg, sp, tp, cross=cfg.enc_dec)
+    # vocab over model (TP logits) when divisible. NOTE: d_model must stay
+    # unsharded: sharding it over "data" conflicts with batch-over-"data"
+    # at the embedding gather, and GSPMD resolves by REPLICATING the batch
+    # — measured 28 TB/dev of induced all-reduces (see EXPERIMENTS §Perf).
+    vshard = "model" if cfg.vocab_size % tp == 0 else None
+    specs: Dict[str, Any] = {
+        "embed": P(vshard, None),
+        "final_norm": P(None),
+        "head": [lsp(plan[i]) for i in range(head)],
+        "blocks": [_prepend_none(lsp(plan[head + j]))
+                   for j in range(p)] if n_super else [],
+        "tail": [lsp(plan[head + n_super * p + t]) for t in range(tail)],
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = P(None, vshard)
+    if cfg.enc_dec:
+        especs = _layer_specs(cfg, cfg.encoder_plan()[0], tp, cross=False)
+        specs["enc_blocks"] = [_prepend_none(especs)]
+        specs["enc_final_norm"] = P(None)
+    return specs
+
+
+def train_state_specs(cfg: ArchConfig, mesh: jax.sharding.Mesh) -> Spec:
+    ps = param_specs(cfg, mesh)
+    return {"params": ps, "m": ps, "v": ps, "step": P()}
+
+
+# --------------------------------------------------------------------------
+# Batch / cache specs
+# --------------------------------------------------------------------------
+def batch_sharded(global_batch: int, mesh) -> bool:
+    return global_batch % mesh_lib.dp_size(mesh) == 0
+
+
+def batch_specs(cfg: ArchConfig, mesh, global_batch: int) -> Dict[str, Any]:
+    dp = mesh_lib.dp_axes(mesh)
+    b = dp if batch_sharded(global_batch, mesh) else None
+    s: Dict[str, Any] = {"tokens": P(b, None)}
+    if cfg.frontend == "vision_stub":
+        s["prefix_embeds"] = P(b, None, None)
+    if cfg.frontend == "audio_stub":
+        s["encoder_embeds"] = P(b, None, None)
+    return s
+
+
+def cache_specs_tree(cfg: ArchConfig, mesh, global_batch: int) -> Spec:
+    """PartitionSpecs mirroring models.model.cache_specs (head/blocks/tail;
+    block entries carry a leading stacked layer dim)."""
+    dp = mesh_lib.dp_axes(mesh)
+    bs = batch_sharded(global_batch, mesh)
+    if bs:
+        b, seq = dp, "model"          # batch over dp, KV seq over model
+    else:
+        b, seq = None, tuple(mesh.axis_names)   # SP: seq over all axes
+
+    def entry(spec, stacked: bool):
+        lead = (None,) if stacked else ()
+        if spec.kind == "attn":
+            e = {"k": P(*lead, b, seq, None, None),
+                 "v": P(*lead, b, seq, None, None)}
+        else:
+            ssm_h = "model" if cfg.ssm_heads % mesh.shape["model"] == 0 \
+                else None
+            e = {"conv": P(*lead, b, None, None),
+                 "ssm": P(*lead, b, ssm_h, None, None)}
+        if cfg.enc_dec:
+            e["cross_k"] = P(*lead, b, None, None, None)
+            e["cross_v"] = P(*lead, b, None, None, None)
+        return e
+
+    plan = cfg.layer_plan()
+    head, p, n_super, tail = cfg.plan_blocks()
+    return {"head": [entry(plan[i], False) for i in range(head)],
+            "blocks": [entry(plan[head + j], True)
+                       for j in range(p)] if n_super else [],
+            "tail": [entry(plan[head + n_super * p + t], False)
+                     for t in range(tail)]}
+
+
+def logits_spec(cfg: ArchConfig, mesh, global_batch: int):
+    dp = mesh_lib.dp_axes(mesh)
+    b = dp if batch_sharded(global_batch, mesh) else None
+    v = "model" if cfg.vocab_size % mesh.shape["model"] == 0 else None
+    return P(b, None, v)
+
+
+def to_named(tree: Spec, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,64 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On real TPU pods this runs the full config across hosts (one process per
+host; jax.distributed.initialize picks up the pod runtime). On CPU it runs
+the reduced config of the same family so the whole path stays exercisable
+anywhere. The market flags attach a LaissezCloud broker so the job is
+elastic under renegotiation (see examples/elastic_training.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig
+from repro.optim import AdamWConfig
+from repro.train.trainer import (ResourceBroker, MarketBroker, Trainer,
+                                 TrainConfig)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--full", action="store_true",
+                    help="use the full (TPU-scale) config instead of the "
+                         "reduced smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--market", action="store_true",
+                    help="allocate devices through a local LaissezCloud "
+                         "market (elastic)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+                      global_batch=args.global_batch, seed=0)
+    tcfg = TrainConfig(steps=args.steps, checkpoint_every=max(
+        args.steps // 4, 1), checkpoint_dir=args.ckpt_dir)
+    if args.market:
+        from repro.core import Market, build_cluster
+        n = len(jax.devices())
+        topo = build_cluster({"H100": n}, gpus_per_host=min(n, 8))
+        market = Market(topo)
+        market.set_floor(topo.roots["H100"], 2.0)
+        for _ in range(n):
+            market.place_order("trainer", topo.roots["H100"], 3.0,
+                               limit=4.0)
+        broker = MarketBroker(market, "trainer", max_devices=n)
+    else:
+        broker = ResourceBroker(len(jax.devices()))
+    rep = Trainer(cfg, dcfg, AdamWConfig(lr=args.lr), tcfg, broker).run()
+    print(f"steps={rep.steps_done} loss {rep.losses[0]:.4f} -> "
+          f"{rep.losses[-1]:.4f} resizes={rep.resizes} "
+          f"stragglers={rep.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,153 @@
+"""Batch market engine: the paper's matching hot path as fixed-shape array
+ops (beyond-paper scale path; the event-driven ``repro.core.market`` is the
+paper-faithful reference).
+
+One type-tree with regular strides (leaf ancestor at level d = leaf //
+stride[d]). The engine holds a bounded bid table and recomputes per-level
+top-2 aggregates with segment reductions, then runs the clearing pass
+(jnp oracle or the Pallas kernel). All mutating ops are jitted and
+functional — suited to running thousands of requests per batch.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.market_clear import ref as R
+from repro.kernels.market_clear import ops as clear_ops
+
+NEG = R.NEG
+
+
+@dataclass(frozen=True)
+class TreeSpec:
+    """Regular type-tree: strides per level, leaf->root order.
+    E.g. (1, 8, 32, 128, n_leaves) = instance/host/rack/zone/root."""
+    n_leaves: int
+    strides: Tuple[int, ...]
+
+    @property
+    def n_levels(self) -> int:
+        return len(self.strides)
+
+    def nodes_at(self, d: int) -> int:
+        return -(-self.n_leaves // self.strides[d])
+
+
+class BatchEngine:
+    def __init__(self, tree: TreeSpec, capacity: int = 1 << 16,
+                 use_pallas: bool = False) -> None:
+        self.tree = tree
+        self.capacity = capacity
+        self.use_pallas = use_pallas
+
+    def init_state(self) -> Dict[str, jax.Array]:
+        t = self.tree
+        return {
+            "price": jnp.full((self.capacity,), NEG, jnp.float32),
+            "level": jnp.zeros((self.capacity,), jnp.int32),
+            "node": jnp.zeros((self.capacity,), jnp.int32),
+            "tenant": jnp.full((self.capacity,), -1, jnp.int32),
+            "head": jnp.zeros((), jnp.int32),       # ring-buffer cursor
+            "owner": jnp.full((t.n_leaves,), -1, jnp.int32),
+            "limit": jnp.full((t.n_leaves,), jnp.inf, jnp.float32),
+            "floor": [jnp.zeros((t.nodes_at(d),), jnp.float32)
+                      for d in range(t.n_levels)],
+        }
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def place(self, state, prices, levels, nodes, tenants):
+        """Insert a batch of scoped bids (ring-buffer slots)."""
+        n = prices.shape[0]
+        idx = (state["head"] + jnp.arange(n)) % self.capacity
+        state = dict(state)
+        state["price"] = state["price"].at[idx].set(prices)
+        state["level"] = state["level"].at[idx].set(levels)
+        state["node"] = state["node"].at[idx].set(nodes)
+        state["tenant"] = state["tenant"].at[idx].set(tenants)
+        state["head"] = (state["head"] + n) % self.capacity
+        return state
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def cancel(self, state, bid_ids):
+        state = dict(state)
+        state["price"] = state["price"].at[bid_ids].set(NEG)
+        state["tenant"] = state["tenant"].at[bid_ids].set(-1)
+        return state
+
+    # ------------------------------------------------------------------
+    def _aggregates(self, state):
+        t = self.tree
+        top1, own1, top2, arg1 = [], [], [], []
+        for d in range(t.n_levels):
+            n_d = t.nodes_at(d)
+            mask = state["level"] == d
+            prices = jnp.where(mask, state["price"], NEG)
+            seg = jnp.clip(state["node"], 0, n_d - 1)
+            a, o, b = R.segment_top2(prices, seg, state["tenant"], n_d)
+            # arg of top-1 (bid slot) for transfers
+            is_top = (prices >= a[seg] - 1e-12) & mask & (prices > NEG / 2)
+            slot = jnp.arange(self.capacity, dtype=jnp.int32)
+            arg = jnp.full((n_d,), -1, jnp.int32).at[
+                jnp.where(is_top, seg, 0)].max(
+                jnp.where(is_top, slot, -1), mode="drop")
+            top1.append(a)
+            own1.append(o)
+            top2.append(b)
+            arg1.append(arg)
+        return top1, own1, top2, arg1
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def clear(self, state, interpret: bool = True):
+        """Full clearing pass: per-leaf charged rate + winning level."""
+        t = self.tree
+        top1, own1, top2, arg1 = self._aggregates(state)
+        rate, best_level = clear_ops.clear(
+            tuple(top1), tuple(own1), tuple(top2), tuple(state["floor"]),
+            t.strides, state["owner"], use_pallas=self.use_pallas,
+            interpret=interpret)
+        return rate, best_level, arg1
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def transfer(self, state, rate, best_level, arg1, relinquished):
+        """Hand each relinquished leaf to its best covering bid (consuming
+        the OCO order) or back to the operator (-1)."""
+        t = self.tree
+        state = dict(state)
+        lvl = best_level[relinquished]
+        # winning bid slot per leaf: arg1[level][leaf // stride[level]]
+        slots = jnp.full(relinquished.shape, -1, jnp.int32)
+        for d in range(t.n_levels):
+            nd = relinquished // t.strides[d]
+            slots = jnp.where(lvl == d, arg1[d][nd], slots)
+        # OCO within the batch: one order may win at most ONE leaf — the
+        # first (lowest-index) relinquished leaf claims the slot; the rest
+        # fall to the operator and re-clear against the runner-up next pass
+        m = relinquished.shape[0]
+        same = (slots[None, :] == slots[:, None]) \
+            & (jnp.arange(m)[None, :] < jnp.arange(m)[:, None])
+        dup = jnp.any(same, axis=1)
+        slots = jnp.where(dup, -1, slots)
+        winner = jnp.where(slots >= 0, state["tenant"][slots], -1)
+        state["owner"] = state["owner"].at[relinquished].set(winner)
+        # consume winning orders (OCO set dissolves atomically)
+        safe = jnp.where(slots >= 0, slots, 0)
+        state["price"] = state["price"].at[safe].set(
+            jnp.where(slots >= 0, NEG, state["price"][safe]))
+        state["tenant"] = state["tenant"].at[safe].set(
+            jnp.where(slots >= 0, -1, state["tenant"][safe]))
+        return state
+
+
+def build_tree(n_leaves: int, gpus_per_host: int = 8,
+               hosts_per_rack: int = 4, racks_per_zone: int = 4) -> TreeSpec:
+    s_host = gpus_per_host
+    s_rack = s_host * hosts_per_rack
+    s_zone = s_rack * racks_per_zone
+    return TreeSpec(n_leaves=n_leaves,
+                    strides=(1, s_host, s_rack, s_zone, n_leaves))

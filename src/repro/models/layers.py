@@ -1,0 +1,427 @@
+"""Layer library for the assigned architecture pool.
+
+Pure-functional JAX. Every block takes a per-layer parameter dict and the
+``ArchConfig``; the same code paths serve the reduced smoke configs (real
+values on CPU), the dry-run (abstract lowering on the production mesh) and
+the training/serving runtimes.
+
+Attention here is the *reference* einsum formulation (the pure-jnp oracle
+that the Pallas kernels in ``repro.kernels`` are validated against); on the
+CPU container it is also the path the dry-run lowers, since Pallas only
+lowers on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, LayerSpec
+
+NEG_INF = -2.0 ** 30  # large-negative for masking (safe in bf16)
+
+
+# --------------------------------------------------------------------------
+# Basic ops
+# --------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, n_heads, head_dim); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                             # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Attention (GQA / MQA, sliding-window, prefix-LM, cross-attention)
+# --------------------------------------------------------------------------
+def _attn_mask(q_pos: jax.Array, k_pos: jax.Array, window: int,
+               prefix_len: int, causal: bool) -> jax.Array:
+    """Boolean (..., Sq, Sk) mask. True = attend."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    if causal:
+        m = kp <= qp
+        if window:
+            m &= kp > qp - window
+        if prefix_len:
+            m |= (qp < prefix_len) & (kp < prefix_len)   # bidirectional prefix
+    else:
+        m = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), bool)
+    return m
+
+
+def attention(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array,
+              positions: jax.Array, *, window: int = 0, prefix_len: int = 0,
+              kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+              causal: bool = True,
+              return_kv: bool = False):
+    """Full-sequence attention (training / prefill / encoder / cross).
+
+    x: (B, S, D).  kv_override: use these (B, Sk, K, hd) tensors as K/V
+    (cross-attention); otherwise K/V are projected from x.
+    """
+    B, S, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    q = (x @ p["wq"]).reshape(B, S, K, G, hd)
+    if kv_override is None:
+        k = (x @ p["wk"]).reshape(B, S, K, hd)
+        v = (x @ p["wv"]).reshape(B, S, K, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+            k = rms_norm(k, p["k_norm"])
+        if cfg.use_rope:
+            q = rope(q.reshape(B, S, H, hd), positions, cfg.rope_theta) \
+                .reshape(B, S, K, G, hd)
+            k = rope(k, positions, cfg.rope_theta)
+        k_pos = positions
+    else:
+        k, v = kv_override
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+        k_pos = jnp.broadcast_to(jnp.arange(k.shape[1]), (B, k.shape[1]))
+    scale = hd ** -0.5
+    sm_dt = jnp.dtype(cfg.attn_softmax_dtype)
+    scores = jnp.einsum("bskgh,btkh->bkgst", q, k) * scale
+    mask = _attn_mask(positions, k_pos, window, prefix_len, causal)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(sm_dt), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v).reshape(B, S, H * hd)
+    out = out @ p["wo"]
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attention_decode(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array,
+                     cache_k: jax.Array, cache_v: jax.Array, pos: jax.Array,
+                     *, window: int = 0,
+                     cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None):
+    """Single-token decode.  x: (B, 1, D); cache: (B, Smax, K, hd);
+    pos: scalar index where the new token's K/V is written.
+
+    For cross-attention (whisper decoder) pass ``cross_kv`` and the cache is
+    untouched.  Returns (out, cache_k, cache_v).
+    """
+    B, _, D = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // K
+    q = (x @ p["wq"]).reshape(B, 1, K, G, hd)
+    if cross_kv is None:
+        k = (x @ p["wk"]).reshape(B, 1, K, hd)
+        v = (x @ p["wv"]).reshape(B, 1, K, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+            k = rms_norm(k, p["k_norm"])
+        if cfg.use_rope:
+            posb = jnp.broadcast_to(pos[None], (B, 1)) if pos.ndim == 0 \
+                else pos
+            q = rope(q.reshape(B, 1, H, hd), posb, cfg.rope_theta) \
+                .reshape(B, 1, K, G, hd)
+            k = rope(k, posb, cfg.rope_theta)
+        cache_k = lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                           (0, pos, 0, 0))
+        cache_v = lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, pos, 0, 0))
+        keys, vals = cache_k, cache_v
+        t = jnp.arange(keys.shape[1])
+        valid = t <= pos
+        if window:
+            valid &= t > pos - window
+    else:
+        if cfg.qk_norm:
+            q = rms_norm(q, p["q_norm"])
+        keys, vals = cross_kv
+        valid = jnp.ones((keys.shape[1],), bool)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bxkgh,btkh->bkgxt", q,
+                        keys.astype(q.dtype)) * scale
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgxt,btkh->bxkgh", probs,
+                     vals.astype(x.dtype)).reshape(B, 1, H * hd)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# Dense MLP
+# --------------------------------------------------------------------------
+def mlp(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    if cfg.mlp_type == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo_mlp"]
+
+
+# --------------------------------------------------------------------------
+# Mixture-of-Experts
+# --------------------------------------------------------------------------
+def _router_topk(logits: jax.Array, k: int, renormalize: bool):
+    """logits (T, E) -> (weights (T,k), indices (T,k)) in f32."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    weights, idx = lax.top_k(probs, k)
+    if renormalize:
+        weights = weights / jnp.sum(weights, axis=-1, keepdims=True)
+    return weights, idx
+
+
+def moe_dense(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array):
+    """Reference MoE: computes EVERY expert for every token (O(E) compute).
+    The pure-jnp oracle for the EP path and the routing kernel; use only at
+    smoke-test scale."""
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    xf = x.reshape(B * S, D)
+    logits = xf @ p["router"]
+    w, idx = _router_topk(logits, k, cfg.moe_renormalize)
+    dense_w = jnp.zeros((B * S, E), jnp.float32)
+    dense_w = dense_w.at[jnp.arange(B * S)[:, None], idx].set(w)
+    g = jnp.einsum("td,edf->tef", xf, p["wg"])
+    u = jnp.einsum("td,edf->tef", xf, p["wu"])
+    y = jnp.einsum("tef,efd->ted", jax.nn.silu(g) * u, p["wd"])
+    out = jnp.einsum("te,ted->td", dense_w.astype(x.dtype), y)
+    return out.reshape(B, S, D)
+
+
+def moe_ep(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array, *,
+           mesh: jax.sharding.Mesh, dp_axes: Tuple[str, ...],
+           ep_axis: str, batch_sharded: bool) -> jax.Array:
+    """Expert-parallel MoE via shard_map: experts sharded over ``ep_axis``,
+    tokens sharded over ``dp_axes`` (or replicated when the batch is too
+    small to shard, e.g. batch=1 decode).
+
+    Dispatch is sort-based with a static per-expert capacity; each ep-rank
+    computes its local experts' contribution for all of its tokens, partial
+    outputs are combined with a psum over the ep axis (the TPU-native
+    mapping of the paper's workloads' NCCL all-to-all; see DESIGN.md §3).
+    """
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    ep_size = mesh.shape[ep_axis]
+    assert E % ep_size == 0, (E, ep_size)
+    El = E // ep_size
+    B, S, D = x.shape
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    if not batch_sharded:
+        dp_size = 1
+    Tl = (B // dp_size) * S if batch_sharded else B * S
+    cap = int(Tl * k / E * cfg.capacity_factor)
+    cap = max(8, -(-cap // 8) * 8)          # round up to 8, floor 8
+    cap = min(cap, Tl)
+
+    x_spec = P(dp_axes, None, None) if batch_sharded else P(None, None, None)
+
+    def inner(router, wg, wu, wd, xl):
+        Bl, Sl, _ = xl.shape
+        T = Bl * Sl
+        xf = xl.reshape(T, D)
+        logits = xf @ router                       # (T, E)
+        w, idx = _router_topk(logits, k, cfg.moe_renormalize)
+        eid = idx.reshape(-1)                      # (T*k,)
+        wt = w.reshape(-1)
+        order = jnp.argsort(eid)                   # stable
+        sorted_eid = eid[order]
+        counts = jnp.zeros((E,), jnp.int32).at[eid].add(1)
+        offsets = jnp.cumsum(counts) - counts
+        rank = jnp.arange(T * k) - offsets[sorted_eid]
+        j = lax.axis_index(ep_axis)
+        lo = j * El
+        local = (sorted_eid >= lo) & (sorted_eid < lo + El) & (rank < cap)
+        slot = jnp.where(local, (sorted_eid - lo) * cap + rank, El * cap)
+        buf_tok = jnp.full((El * cap + 1,), T, jnp.int32) \
+            .at[slot].set(order // k, mode="drop")[:El * cap]
+        xg = jnp.concatenate([xf, jnp.zeros((1, D), xf.dtype)])[buf_tok]
+        xg = xg.reshape(El, cap, D)
+        g = jnp.einsum("ecd,edf->ecf", xg, wg)
+        u = jnp.einsum("ecd,edf->ecf", xg, wu)
+        y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * u, wd)
+        wslot = jnp.zeros((El * cap + 1,), jnp.float32) \
+            .at[slot].set(wt[order], mode="drop")[:El * cap]
+        yw = y.reshape(El * cap, D) * wslot[:, None].astype(y.dtype)
+        psum_dt = jnp.dtype(cfg.moe_psum_dtype)
+        out = jnp.zeros((T + 1, D), psum_dt).at[buf_tok].add(
+            yw.astype(psum_dt), mode="drop")[:T]
+        if cfg.moe_combine == "scatter_gather" and T % ep_size == 0 \
+                and ep_size > 1:
+            # §Perf: all-reduce (wire 2x(g-1)/g) -> reduce-scatter in f32
+            # + all-gather in bf16 (wire 1.5x(g-1)/g x half) = ~0.62x
+            chunk = lax.psum_scatter(out, ep_axis, scatter_dimension=0,
+                                     tiled=True)
+            chunk = chunk.astype(jnp.bfloat16)
+            out = lax.all_gather(chunk, ep_axis, axis=0, tiled=True)
+        else:
+            out = lax.psum(out, ep_axis)
+        return out.astype(xl.dtype).reshape(Bl, Sl, D)
+
+    fn = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(P(None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None), P(ep_axis, None, None), x_spec),
+        out_specs=x_spec, check_vma=False)
+    return fn(p["router"], p["wg"], p["wu"], p["wd"], x)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 (SSD) block
+# --------------------------------------------------------------------------
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); b: (C,)."""
+    Kk = w.shape[0]
+    w = w.astype(x.dtype)
+    b = b.astype(x.dtype)
+    xp = jnp.pad(x, ((0, 0), (Kk - 1, 0), (0, 0)))
+    S = x.shape[1]
+    acc = jnp.zeros_like(x)
+    for i in range(Kk):
+        acc = acc + xp[:, i:i + S, :] * w[i]
+    return acc + b
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                compute_dtype=jnp.float32):
+    """Chunked SSD scan (state-space duality, Dao & Gu 2024).
+
+    x: (B,S,H,Pd) inputs; dt: (B,S,H) positive step sizes; A: (H,) negative;
+    Bm, Cm: (B,S,N) input/output projections (single group).
+    Returns (y (B,S,H,Pd), final_state (B,H,Pd,N)).
+
+    Inter-chunk recurrence uses an associative scan (log-depth, fully
+    unrolled in HLO — keeps dry-run cost analysis exact, unlike lax.scan).
+    """
+    b, s, h, pd = x.shape
+    n = Bm.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # dt=0 on padded tail: no state decay, no input — final_state and
+        # the real positions' outputs are exact
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    xr = x.reshape(b, nc, chunk, h, pd)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = Bm.reshape(b, nc, chunk, n)
+    Cr = Cm.reshape(b, nc, chunk, n)
+    dA = dtr * A                                     # (b,nc,q,h) negative
+    cum = jnp.cumsum(dA, axis=2)                     # inclusive
+    # intra-chunk (decay tensor in compute_dtype: the (Q,Q,H) decay is the
+    # dominant HBM traffic of the whole block — §Perf hillclimb knob)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay_ij = jnp.where(mask[None, None, :, :, None],
+                         jnp.exp(cum[:, :, :, None, :]
+                                 - cum[:, :, None, :, :]), 0.0) \
+        .astype(compute_dtype)
+    G = jnp.einsum("bcin,bcjn->bcij", Cr, Br)
+    xdt = xr * dtr[..., None]
+    y = jnp.einsum("bcij,bcijh,bcjhp->bcihp", G.astype(compute_dtype),
+                   decay_ij, xdt.astype(compute_dtype)).astype(jnp.float32)
+    # chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # (b,nc,q,h)
+    S_c = jnp.einsum("bcjh,bcjn,bcjhp->bchpn", decay_to_end,
+                     Br.astype(jnp.float32), xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])          # (b,nc,h)
+    if init_state is not None:
+        # fold the incoming state in as a virtual chunk 0
+        S_c = jnp.concatenate(
+            [init_state[:, None].astype(jnp.float32), S_c], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((b, 1, h), jnp.float32), chunk_decay], axis=1)
+
+    def comb(a_, b_):
+        d1, s1 = a_
+        d2, s2 = b_
+        return d1 * d2, d2[..., None, None] * s1 + s2
+
+    _, Scum = lax.associative_scan(comb, (chunk_decay, S_c), axis=1)
+    if init_state is not None:
+        # With the virtual chunk prepended, Scum[:, c] is the state entering
+        # real chunk c (Scum[:, 0] == init_state) and Scum[:, -1] is final.
+        St = Scum[:, :nc]
+        final_state = Scum[:, -1]
+    else:
+        St = jnp.concatenate(
+            [jnp.zeros_like(Scum[:, :1]), Scum[:, :-1]], axis=1)
+        final_state = Scum[:, -1]
+    y_inter = jnp.einsum("bcin,bcih,bchpn->bcihp", Cr.astype(jnp.float32),
+                         jnp.exp(cum), St)
+    out = (y + y_inter).reshape(b, s, h, pd).astype(x.dtype)
+    if pad:
+        out = out[:, :s - pad]
+    return out, final_state
+
+
+def ssd_block(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array):
+    """Mamba2 block (training / prefill). x: (B,S,D) -> (B,S,D)."""
+    B, S, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_headdim
+    zxbcdt = x @ p["in_proj"]
+    z, xbc_raw, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    xbc = jax.nn.silu(causal_conv1d(xbc_raw, p["conv_w"], p["conv_b"]))
+    xs, Bm, Cm = jnp.split(xbc, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs = xs.reshape(B, S, H, Pd)
+    y, final_state = ssd_chunked(xs, dt, A, Bm, Cm, cfg.ssm_chunk,
+                                 compute_dtype=jnp.dtype(
+                                     cfg.ssd_compute_dtype))
+    y = y + xs * p["D"][None, None, :, None].astype(xs.dtype)
+    y = y.reshape(B, S, din)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    conv_tail = xbc_raw[:, -(cfg.ssm_conv - 1):, :]
+    return y @ p["out_proj"], (conv_tail, final_state)
+
+
+def ssd_decode(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array,
+               conv_state: jax.Array, ssm_state: jax.Array):
+    """Single-token SSD recurrence.  x: (B,1,D); conv_state: (B, K-1, C);
+    ssm_state: (B,H,Pd,N).  Returns (out (B,1,D), conv_state, ssm_state)."""
+    B, _, D = x.shape
+    din, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    Pd = cfg.ssm_headdim
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    # conv over cached window
+    full = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", full,
+                          p["conv_w"].astype(full.dtype)) \
+        + p["conv_b"].astype(full.dtype)
+    xbc_c = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(xbc_c, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xs = xs.reshape(B, H, Pd)
+    dA = jnp.exp(dt * A)                                          # (B,H)
+    inp = (dt[..., None] * xs).astype(jnp.float32)                # (B,H,Pd)
+    new_state = dA[..., None, None] * ssm_state \
+        + inp[..., None] * Bm[:, None, None, :].astype(jnp.float32)
+    y = jnp.einsum("bhpn,bn->bhp", new_state,
+                   Cm.astype(jnp.float32))                        # (B,H,Pd)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, din).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["ssm_norm"])
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, full[:, 1:, :], new_state

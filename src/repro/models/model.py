@@ -1,0 +1,476 @@
+"""Model assembly: init / forward / train / prefill / decode for the pool.
+
+One composable LM stack covers all ten assigned architectures; the
+``ArchConfig.layer_plan()`` decides per-depth whether a layer is attention
+or SSD, dense-MLP or MoE, local or global.
+
+Parameter layout (``plan_blocks`` decomposition -> scan-friendly storage):
+
+    params = {
+      "embed": (V, D), ["lm_head": (D, V)], "final_norm": (D,),
+      "head":   [per-layer dicts]            # leading irregular layers
+      "blocks": [j in 0..period) stacked trees, leading dim n_super]
+      "tail":   [per-layer dicts]            # partial trailing period
+      ["enc_blocks", "enc_tail", "enc_final_norm"]   # enc-dec archs
+    }
+
+The training path scans over ``n_super`` superblocks (stacked weights, one
+compiled body — compile memory stays flat in depth); smoke tests and decode
+unroll the same storage. KV caches use the same head/blocks/tail layout so
+scanned prefill emits them directly as scan outputs.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+MoeFn = Callable[..., jax.Array]
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    """How a step is distributed. None => single-device smoke path."""
+    mesh: jax.sharding.Mesh
+    dp_axes: Tuple[str, ...]
+    ep_axis: str
+    batch_sharded: bool = True
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _stack(trees: List[Any]) -> Any:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _slice(tree: Any, i) -> Any:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# --------------------------------------------------------------------------
+# Parameter init
+# --------------------------------------------------------------------------
+def _norm(d):
+    return jnp.zeros((d,), jnp.float32)
+
+
+def _dense(key, shape, dtype, scale=None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[0]
+    scale = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def _attn_params(cfg: ArchConfig, key, dt):
+    D, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense(ks[0], (D, H * hd), dt),
+        "wk": _dense(ks[1], (D, K * hd), dt),
+        "wv": _dense(ks[2], (D, K * hd), dt),
+        "wo": _dense(ks[3], (H * hd, D), dt,
+                     scale=(H * hd) ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = _norm(hd)
+        p["k_norm"] = _norm(hd)
+    return p
+
+
+def _mlp_params(cfg: ArchConfig, key, dt, ff):
+    D = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "swiglu":
+        return {"wg": _dense(ks[0], (D, ff), dt),
+                "wu": _dense(ks[1], (D, ff), dt),
+                "wd": _dense(ks[2], (ff, D), dt,
+                             scale=ff ** -0.5 / (2 * cfg.num_layers) ** 0.5)}
+    return {"wi": _dense(ks[0], (D, ff), dt),
+            "wo_mlp": _dense(ks[1], (ff, D), dt,
+                             scale=ff ** -0.5 / (2 * cfg.num_layers) ** 0.5)}
+
+
+def _moe_params(cfg: ArchConfig, key, dt):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    return {"router": _dense(ks[0], (D, E), jnp.float32),
+            "wg": _dense(ks[1], (E, D, F), dt),
+            "wu": _dense(ks[2], (E, D, F), dt),
+            "wd": _dense(ks[3], (E, F, D), dt,
+                         scale=F ** -0.5 / (2 * cfg.num_layers) ** 0.5)}
+
+
+def _ssm_params(cfg: ArchConfig, key, dt):
+    D, din, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = din + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": _dense(ks[0], (D, 2 * din + 2 * N + H), dt),
+        "conv_w": _dense(ks[1], (cfg.ssm_conv, conv_ch), jnp.float32, 0.2),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))),
+        "ssm_norm": _norm(din),
+        "out_proj": _dense(ks[3], (din, D), dt,
+                           scale=din ** -0.5 / (2 * cfg.num_layers) ** 0.5),
+    }
+
+
+def _layer_params(cfg: ArchConfig, spec: LayerSpec, key, dt,
+                  cross: bool = False):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": _norm(cfg.d_model)}
+    if spec.kind == "attn":
+        p["attn"] = _attn_params(cfg, ks[0], dt)
+    else:
+        p["ssm"] = _ssm_params(cfg, ks[0], dt)
+    if cross:
+        p["ln_x"] = _norm(cfg.d_model)
+        p["cross"] = _attn_params(cfg, ks[1], dt)
+    if spec.moe:
+        p["ln2"] = _norm(cfg.d_model)
+        p["moe"] = _moe_params(cfg, ks[2], dt)
+    elif cfg.d_ff:
+        p["ln2"] = _norm(cfg.d_model)
+        p["mlp"] = _mlp_params(cfg, ks[3], dt, cfg.d_ff)
+    return p
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> Params:
+    dt = _dtype(cfg)
+    plan = cfg.layer_plan()
+    head, p, n_super, tail = cfg.plan_blocks()
+    keys = jax.random.split(key, cfg.num_layers + cfg.num_encoder_layers + 2)
+    per_layer = [
+        _layer_params(cfg, spec, keys[1 + i], dt, cross=cfg.enc_dec)
+        for i, spec in enumerate(plan)]
+    params: Params = {
+        "embed": _dense(keys[0], (cfg.vocab_size, cfg.d_model), dt, 0.02),
+        "final_norm": _norm(cfg.d_model),
+        "head": per_layer[:head],
+        "blocks": [
+            _stack([per_layer[head + s * p + j] for s in range(n_super)])
+            for j in range(p)] if n_super else [],
+        "tail": per_layer[head + n_super * p:],
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _dense(keys[-1], (cfg.d_model, cfg.vocab_size),
+                                   dt, 0.02)
+    if cfg.enc_dec:
+        off = 1 + cfg.num_layers
+        enc = [_layer_params(cfg, spec, keys[off + i], dt)
+               for i, spec in enumerate(cfg.encoder_plan())]
+        params["enc_blocks"] = [_stack(enc)] if enc else []
+        params["enc_final_norm"] = _norm(cfg.d_model)
+    return params
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# --------------------------------------------------------------------------
+# One layer
+# --------------------------------------------------------------------------
+def _ffn(p, cfg, spec, x, moe_fn):
+    if spec.moe:
+        return moe_fn(p["moe"], cfg, x)
+    if cfg.d_ff:
+        return L.mlp(p["mlp"], cfg, x)
+    return None
+
+
+def _apply_layer(p, cfg: ArchConfig, spec: LayerSpec, x, positions, *,
+                 prefix_len: int, moe_fn: MoeFn,
+                 enc_out: Optional[jax.Array] = None,
+                 causal: bool = True, collect: bool = False,
+                 max_len: int = 0):
+    """Returns (x, cache_entry|None)."""
+    B = x.shape[0]
+    entry = None
+    h = L.rms_norm(x, p["ln1"])
+    if spec.kind == "attn":
+        out, (k, v) = L.attention(p["attn"], cfg, h, positions,
+                                  window=spec.window, prefix_len=prefix_len,
+                                  causal=causal, return_kv=True)
+        if collect:
+            pad = max(0, max_len - k.shape[1])
+            entry = {"k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                     "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))}
+    else:
+        out, (conv_tail, ssm_state) = L.ssd_block(p["ssm"], cfg, h)
+        if collect:
+            entry = {"conv": conv_tail, "ssm": ssm_state}
+    x = x + out
+    if enc_out is not None and "cross" in p:
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        ckv = ((enc_out @ p["cross"]["wk"]).reshape(B, -1, K, hd),
+               (enc_out @ p["cross"]["wv"]).reshape(B, -1, K, hd))
+        h = L.rms_norm(x, p["ln_x"])
+        out = L.attention(p["cross"], cfg, h, positions,
+                          kv_override=ckv, causal=False)
+        x = x + out
+        if collect:
+            entry["cross_k"], entry["cross_v"] = ckv
+    f = None
+    if spec.moe or cfg.d_ff:
+        h2 = L.rms_norm(x, p["ln2"])
+        f = _ffn(p, cfg, spec, h2, moe_fn)
+    if f is not None:
+        x = x + f
+    return x, entry
+
+
+# --------------------------------------------------------------------------
+# Forward (unrolled or scanned over superblocks)
+# --------------------------------------------------------------------------
+def _period_specs(cfg: ArchConfig) -> Tuple[List[LayerSpec], int, int, int, int]:
+    plan = cfg.layer_plan()
+    head, p, n_super, tail = cfg.plan_blocks()
+    return plan, head, p, n_super, tail
+
+
+def _run_stack(params, cfg, x, positions, *, prefix_len, moe_fn, enc_out,
+               causal, remat, collect, max_len, scan_layers,
+               shard_act=None):
+    """Apply head + scanned/unrolled superblocks + tail.
+    Returns (x, caches dict with head/blocks/tail lists)."""
+    plan, head, p, n_super, tail = _period_specs(cfg)
+    pspecs = plan[head:head + p] if n_super else []
+    caches: Dict[str, Any] = {"head": [], "blocks": [], "tail": []}
+    pin = shard_act if shard_act is not None else (lambda a: a)
+
+    rpol = (jax.checkpoint_policies.nothing_saveable
+            if cfg.remat_policy == "nothing"
+            else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    def one(lp, spec, xx, collect_):
+        xx, e = _apply_layer(lp, cfg, spec, xx, positions,
+                             prefix_len=prefix_len, moe_fn=moe_fn,
+                             enc_out=enc_out, causal=causal,
+                             collect=collect_, max_len=max_len)
+        return pin(xx), e
+
+    for i in range(head):
+        x, e = one(params["head"][i], plan[i], x, collect)
+        caches["head"].append(e)
+
+    if n_super:
+        def body(xx, block_slice):
+            entries = []
+            for j in range(p):
+                xx, e = one(block_slice[j], pspecs[j], xx, collect)
+                entries.append(e)
+            return xx, (tuple(entries) if collect else None)
+
+        if scan_layers and n_super > 1:
+            b = jax.checkpoint(body, policy=rpol) if remat else body
+            x, ys = lax.scan(b, x, tuple(params["blocks"]))
+            if collect:
+                caches["blocks"] = list(ys)
+        else:
+            collected = [[] for _ in range(p)]
+            for s in range(n_super):
+                blk = [_slice(params["blocks"][j], s) for j in range(p)]
+                fn = jax.checkpoint(body, policy=rpol) if remat \
+                    else body
+                x, entries = fn(x, blk)
+                if collect:
+                    for j in range(p):
+                        collected[j].append(entries[j])
+            if collect:
+                caches["blocks"] = [_stack(c) for c in collected]
+
+    for t in range(tail):
+        i = head + n_super * p + t
+        x, e = one(params["tail"][t], plan[i], x, collect)
+        caches["tail"].append(e)
+    return x, caches
+
+
+def _encoder_forward(params, cfg, enc_embeds, moe_fn, scan_layers):
+    x = enc_embeds.astype(_dtype(cfg))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    eplan = cfg.encoder_plan()
+    if not eplan:
+        return x
+    def body(xx, lp):
+        xx, _ = _apply_layer(lp, cfg, eplan[0], xx, positions,
+                             prefix_len=0, moe_fn=moe_fn, causal=False)
+        return xx, None
+    if scan_layers and len(eplan) > 1:
+        x, _ = lax.scan(body, x, params["enc_blocks"][0])
+    else:
+        for i in range(len(eplan)):
+            x, _ = body(x, _slice(params["enc_blocks"][0], i))
+    return L.rms_norm(x, params["enc_final_norm"])
+
+
+def forward(params: Params, cfg: ArchConfig, batch: Dict[str, jax.Array], *,
+            moe_fn: MoeFn = L.moe_dense, remat: bool = False,
+            collect_cache: bool = False, max_len: int = 0,
+            scan_layers: bool = True, shard_act=None):
+    dt = _dtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(dt)
+    if shard_act is not None:
+        x = shard_act(x)
+    prefix_len = 0
+    enc_out = None
+    if cfg.frontend == "vision_stub":
+        pe = batch["prefix_embeds"].astype(dt)
+        x = jnp.concatenate([pe, x], axis=1)
+        prefix_len = pe.shape[1]
+    elif cfg.frontend == "audio_stub":
+        enc_out = _encoder_forward(params, cfg, batch["encoder_embeds"],
+                                   moe_fn, scan_layers)
+    St = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(St), (B, St))
+    x, caches = _run_stack(
+        params, cfg, x, positions, prefix_len=prefix_len, moe_fn=moe_fn,
+        enc_out=enc_out, causal=True, remat=remat, collect=collect_cache,
+        max_len=max_len, scan_layers=scan_layers, shard_act=shard_act)
+    x = L.rms_norm(x, params["final_norm"])
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head_w
+    return logits, (caches if collect_cache else None)
+
+
+# --------------------------------------------------------------------------
+# Loss / train step
+# --------------------------------------------------------------------------
+def lm_loss(logits: jax.Array, tokens: jax.Array, prefix_len: int = 0):
+    preds = logits[:, prefix_len:prefix_len + tokens.shape[1] - 1, :]
+    labels = tokens[:, 1:]
+    preds = preds.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(preds, axis=-1)
+    gold = jnp.take_along_axis(preds, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def loss_fn(params: Params, cfg: ArchConfig, batch, moe_fn: MoeFn,
+            scan_layers: bool = True, shard_act=None):
+    logits, _ = forward(params, cfg, batch, moe_fn=moe_fn, remat=cfg.remat,
+                        scan_layers=scan_layers, shard_act=shard_act)
+    prefix = cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0
+    return lm_loss(logits, batch["tokens"], prefix)
+
+
+# --------------------------------------------------------------------------
+# Serving: prefill + decode
+# --------------------------------------------------------------------------
+def prefill(params: Params, cfg: ArchConfig, batch, *, max_len: int,
+            moe_fn: MoeFn = L.moe_dense, scan_layers: bool = True,
+            shard_act=None):
+    logits, cache = forward(params, cfg, batch, moe_fn=moe_fn,
+                            collect_cache=True, max_len=max_len,
+                            scan_layers=scan_layers, shard_act=shard_act)
+    return logits[:, -1:, :], cache
+
+
+def decode_step(params: Params, cfg: ArchConfig, cache, tokens: jax.Array,
+                pos: jax.Array, *, moe_fn: MoeFn = L.moe_dense):
+    """One decode step. tokens: (B,1); pos: scalar int32 index where the
+    new token's KV is written; attends to cache[<=pos]."""
+    dt = _dtype(cfg)
+    x = params["embed"][tokens].astype(dt)
+    plan, head, p, n_super, tail = _period_specs(cfg)
+
+    def dec_layer(lp, spec, xx, entry):
+        h = L.rms_norm(xx, lp["ln1"])
+        new_entry = dict(entry)
+        if spec.kind == "attn":
+            out, ck, cv = L.attention_decode(lp["attn"], cfg, h, entry["k"],
+                                             entry["v"], pos,
+                                             window=spec.window)
+            new_entry["k"], new_entry["v"] = ck, cv
+        else:
+            out, conv, ssm = L.ssd_decode(lp["ssm"], cfg, h, entry["conv"],
+                                          entry["ssm"])
+            new_entry["conv"], new_entry["ssm"] = conv, ssm
+        xx = xx + out
+        if "cross_k" in entry:
+            h = L.rms_norm(xx, lp["ln_x"])
+            out, _, _ = L.attention_decode(
+                lp["cross"], cfg, h, entry["cross_k"], entry["cross_v"],
+                pos, cross_kv=(entry["cross_k"], entry["cross_v"]))
+            xx = xx + out
+        if spec.moe or cfg.d_ff:
+            h2 = L.rms_norm(xx, lp["ln2"])
+            f = _ffn(lp, cfg, spec, h2, moe_fn)
+            if f is not None:
+                xx = xx + f
+        return xx, new_entry
+
+    new_cache: Dict[str, Any] = {"head": [], "blocks": [], "tail": []}
+    for i in range(head):
+        x, e = dec_layer(params["head"][i], plan[i], x, cache["head"][i])
+        new_cache["head"].append(e)
+    for j in range(p):
+        if not n_super:
+            break
+        blk_cache = cache["blocks"][j]
+        for s in range(n_super):
+            lp = _slice(params["blocks"][j], s)
+            entry = _slice(blk_cache, s)
+            x, e = dec_layer(lp, plan[head + s * p + j], x, entry)
+            blk_cache = jax.tree.map(
+                lambda full, new: full.at[s].set(new), blk_cache, e)
+        new_cache["blocks"].append(blk_cache)
+    for t in range(tail):
+        i = head + n_super * p + t
+        x, e = dec_layer(params["tail"][t], plan[i], x, cache["tail"][t])
+        new_cache["tail"].append(e)
+    x = L.rms_norm(x, params["final_norm"])
+    head_w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head_w
+    return logits, new_cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """Abstract cache pytree (head/blocks/tail layout) for the decode
+    dry-run — ShapeDtypeStructs only, no allocation."""
+    dt = _dtype(cfg)
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    plan, head, p, n_super, tail = _period_specs(cfg)
+
+    def entry(spec: LayerSpec, lead: Tuple[int, ...] = ()):
+        if spec.kind == "attn":
+            e = {"k": jax.ShapeDtypeStruct(lead + (batch, max_len, K, hd),
+                                           dt),
+                 "v": jax.ShapeDtypeStruct(lead + (batch, max_len, K, hd),
+                                           dt)}
+        else:
+            conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+            e = {"conv": jax.ShapeDtypeStruct(
+                     lead + (batch, cfg.ssm_conv - 1, conv_ch), dt),
+                 "ssm": jax.ShapeDtypeStruct(
+                     lead + (batch, cfg.ssm_heads, cfg.ssm_headdim,
+                             cfg.ssm_state), jnp.float32)}
+        if cfg.enc_dec:
+            e["cross_k"] = jax.ShapeDtypeStruct(
+                lead + (batch, cfg.num_prefix_tokens, K, hd), dt)
+            e["cross_v"] = jax.ShapeDtypeStruct(
+                lead + (batch, cfg.num_prefix_tokens, K, hd), dt)
+        return e
+
+    return {"head": [entry(plan[i]) for i in range(head)],
+            "blocks": [entry(plan[head + j], (n_super,))
+                       for j in range(p)] if n_super else [],
+            "tail": [entry(plan[head + n_super * p + t])
+                     for t in range(tail)]}

@@ -1,0 +1,79 @@
+"""Step factories: train / prefill / decode, parameterized by MoE backend."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_moe_fn(mesh_info: Optional[M.MeshInfo]):
+    """Dense-reference MoE on a single device; expert-parallel shard_map MoE
+    on a mesh."""
+    if mesh_info is None:
+        return L.moe_dense
+    return functools.partial(
+        L.moe_ep, mesh=mesh_info.mesh, dp_axes=mesh_info.dp_axes,
+        ep_axis=mesh_info.ep_axis, batch_sharded=mesh_info.batch_sharded)
+
+
+def make_shard_act(mesh_info: Optional[M.MeshInfo]):
+    """Pin the (B, S, D) residual stream to batch-over-dp, D replicated.
+    Without this, GSPMD propagation can pick batch-replicated layouts from
+    weight shardings (measured 28 TB/dev of induced all-reduce on
+    llama3-405b before pinning; see EXPERIMENTS.md §Perf)."""
+    if mesh_info is None:
+        return None
+    b = mesh_info.dp_axes if mesh_info.batch_sharded else None
+    ns = NamedSharding(mesh_info.mesh, P(b, None, None))
+
+    def pin(x):
+        return jax.lax.with_sharding_constraint(x, ns)
+    return pin
+
+
+def make_train_step(cfg: ArchConfig, opt: AdamWConfig,
+                    mesh_info: Optional[M.MeshInfo] = None,
+                    scan_layers: bool = True) -> Callable:
+    moe_fn = make_moe_fn(mesh_info)
+    shard_act = make_shard_act(mesh_info)
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch, moe_fn,
+                                scan_layers=scan_layers,
+                                shard_act=shard_act))(state["params"])
+        state, gnorm = adamw_update(state, grads, opt)
+        return state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_len: int,
+                      mesh_info: Optional[M.MeshInfo] = None,
+                      scan_layers: bool = True) -> Callable:
+    moe_fn = make_moe_fn(mesh_info)
+    shard_act = make_shard_act(mesh_info)
+
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, max_len=max_len, moe_fn=moe_fn,
+                         scan_layers=scan_layers, shard_act=shard_act)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig,
+                     mesh_info: Optional[M.MeshInfo] = None) -> Callable:
+    moe_fn = make_moe_fn(mesh_info)
+
+    def decode_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos, moe_fn=moe_fn)
+
+    return decode_step

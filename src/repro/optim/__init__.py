@@ -1,0 +1,6 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               TrainState, make_train_state,
+                               abstract_train_state)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "TrainState",
+           "make_train_state", "abstract_train_state"]

@@ -1,0 +1,83 @@
+"""AdamW with decoupled weight decay, global-norm clipping and configurable
+state dtype (bf16 m/v halves optimizer HBM — required to fit kimi-k2 on a
+single 256-chip v5e pod; see EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"
+    warmup_steps: int = 100
+
+
+TrainState = Dict[str, Any]   # {"params", "m", "v", "step"}
+
+
+def adamw_init(params, state_dtype: str = "float32") -> Tuple[Any, Any]:
+    dt = jnp.dtype(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return jax.tree.map(zeros, params), jax.tree.map(zeros, params)
+
+
+def make_train_state(params, opt: AdamWConfig) -> TrainState:
+    m, v = adamw_init(params, opt.state_dtype)
+    return {"params": params, "m": m, "v": v,
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(params_abstract, opt: AdamWConfig) -> TrainState:
+    return jax.eval_shape(lambda p: make_train_state(p, opt),
+                          params_abstract)
+
+
+def _schedule(opt: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(opt.warmup_steps, 1),
+                       1.0)
+    return opt.lr * warm
+
+
+def adamw_update(state: TrainState, grads, opt: AdamWConfig) -> TrainState:
+    step = state["step"] + 1
+    # global-norm clip in f32
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), grads)
+    gnorm = jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+    scale = jnp.minimum(1.0, opt.clip_norm / (gnorm + 1e-9))
+    lr = _schedule(opt, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - opt.b1 ** t
+    bc2 = 1.0 - opt.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * opt.b1 + (1 - opt.b1) * g
+        v32 = v.astype(jnp.float32) * opt.b2 + (1 - opt.b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        step_ = mhat / (jnp.sqrt(vhat) + opt.eps)
+        decay = opt.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * (step_ + decay)
+        return (newp.astype(p.dtype), m32.astype(m.dtype),
+                v32.astype(v.dtype))
+
+    flat_p, treedef = jax.tree.flatten(state["params"])
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return {"params": new_p, "m": new_m, "v": new_v, "step": step}, gnorm

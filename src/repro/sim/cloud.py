@@ -1,0 +1,185 @@
+"""Cloud allocation interfaces: LaissezCloud vs the paper's two baselines.
+
+All three expose the same surface to tenants (grant/revoke callbacks, a
+step() driven by the shared autoscaler), so the ONLY difference between
+runs is the cloud-side allocation contract — continuous negotiation,
+static allocation (FCFS), or spot-style preemption (FCFS-P) — exactly the
+paper's §5.1 isolation.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.core.econadapter import AdapterConfig, EconAdapter
+from repro.core.market import Market, OPERATOR, VolatilityControls
+from repro.core.topology import Topology
+from repro.sim.workloads import ON_DEMAND, Tenant
+
+
+class CloudBase:
+    def __init__(self, topo: Topology) -> None:
+        self.topo = topo
+        self.tenants: Dict[str, Tenant] = {}
+
+    def add_tenant(self, tenant: Tenant, **kw) -> None:
+        self.tenants[tenant.name] = tenant
+
+    def step(self, now: float) -> None:
+        raise NotImplementedError
+
+    def cost_of(self, name: str) -> float:
+        raise NotImplementedError
+
+    # helpers shared by the non-market clouds ------------------------------
+    def _free_leaves(self, owned: Dict[int, Optional[str]],
+                     compat: Sequence[str]) -> List[int]:
+        out = []
+        for rtype in compat:
+            root = self.topo.roots.get(rtype)
+            if root is None:
+                continue
+            out.extend(l for l in self.topo.leaves_of(root)
+                       if owned.get(l) is None)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# FCFS: requests allocate in arrival order; tenants wait if HW is occupied.
+# ---------------------------------------------------------------------------
+class FCFSCloud(CloudBase):
+    preemptive = False
+
+    def __init__(self, topo: Topology) -> None:
+        super().__init__(topo)
+        self.owner: Dict[int, Optional[str]] = {
+            n.node_id: None for n in topo.nodes if n.is_leaf}
+        self.queue: Deque[Tuple[str]] = deque()
+        self.costs: Dict[str, float] = {}
+        self.last_t = 0.0
+
+    def _bill(self, now: float) -> None:
+        dt_h = (now - self.last_t) / 3600.0
+        if dt_h > 0:
+            for leaf, owner in self.owner.items():
+                if owner is not None:
+                    self.costs[owner] = self.costs.get(owner, 0.0) \
+                        + ON_DEMAND[self.topo.node(leaf).rtype] * dt_h
+        self.last_t = now
+
+    def _grant(self, tenant: Tenant, leaf: int, now: float) -> None:
+        self.owner[leaf] = tenant.name
+        tenant.on_grant(leaf, now)
+
+    def _revoke(self, tenant: Tenant, leaf: int, now: float,
+                graceful: bool) -> None:
+        self.owner[leaf] = None
+        tenant.on_revoke(leaf, now, graceful=graceful)
+
+    def step(self, now: float) -> None:
+        self._bill(now)
+        # releases first (shared pruning policy)
+        for t in self.tenants.values():
+            for leaf in t.surplus_nodes(now):
+                self._revoke(t, leaf, now, graceful=True)
+        # then queue wants in arrival order
+        for t in sorted(self.tenants.values(), key=lambda x: x.arrival_s):
+            want = t.desired_nodes(now) - len(t.nodes)
+            if want <= 0:
+                continue
+            free = self._free_leaves(self.owner, t.p.compat)
+            # prefer faster hardware first (greedy; both baselines do this)
+            free.sort(key=lambda l: -1.0 if self.topo.node(l).rtype == "H100"
+                      else 0.0)
+            for leaf in free[:want]:
+                self._grant(t, leaf, now)
+            want -= min(want, len(free))
+            if want > 0 and self.preemptive:
+                self._preempt(t, want, now)
+
+    def _preempt(self, t: Tenant, want: int, now: float) -> None:
+        pass
+
+    def cost_of(self, name: str) -> float:
+        return self.costs.get(name, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# FCFS-P: inference tenants preempt training/batch, spot-style (coarse
+# victim choice, unilateral revocation — the paper's §2.2 FCFS-P).
+# ---------------------------------------------------------------------------
+class FCFSPCloud(FCFSCloud):
+    preemptive = True
+
+    def _preempt(self, t: Tenant, want: int, now: float) -> None:
+        if t.p.kind != "inference":
+            return
+        # spot-style: the operator sees only "preemptible", not current
+        # inconvenience — coarse victim choice (paper §2.1), but rate-
+        # limited like real spot reclaim (not every scheduler tick)
+        if now - getattr(t, "_last_preempt", -1e9) < 120.0:
+            return
+        t._last_preempt = now
+        victims: List[Tuple[int, Tenant]] = []
+        for leaf, owner in self.owner.items():
+            if owner is None:
+                continue
+            vt = self.tenants[owner]
+            if vt.p.kind in ("training", "batch") \
+                    and self.topo.node(leaf).rtype in t.p.compat:
+                victims.append((leaf, vt))
+        for leaf, vt in victims[:want]:
+            self._revoke(vt, leaf, now, graceful=False)  # wastes work
+            self._grant(t, leaf, now)
+
+
+# ---------------------------------------------------------------------------
+# LaissezCloud: tenants negotiate through the market via EconAdapters.
+# ---------------------------------------------------------------------------
+class LaissezCloud(CloudBase):
+    def __init__(self, topo: Topology,
+                 controls: Optional[VolatilityControls] = None,
+                 base_prices: Optional[Dict[str, float]] = None) -> None:
+        super().__init__(topo)
+        self.market = Market(topo, controls)
+        # operator seeds the market: break-even floors (~0.7x on-demand)
+        prices = base_prices or {t: ON_DEMAND.get(t, 2.0) * 0.7
+                                 for t in topo.roots}
+        for rtype, root in topo.roots.items():
+            self.market.set_floor(root, prices.get(rtype, 1.0))
+        self.adapters: Dict[str, EconAdapter] = {}
+        self.market.on_transfer.append(self._on_transfer)
+
+    def add_tenant(self, tenant: Tenant,
+                   adapter_cfg: Optional[AdapterConfig] = None) -> None:
+        super().add_tenant(tenant)
+        self.adapters[tenant.name] = EconAdapter(
+            self.market, tenant.name, tenant, adapter_cfg)
+
+    def _on_transfer(self, now: float, leaf: int, old: str, new: str,
+                     rate: float, reason: str) -> None:
+        if old in self.tenants:
+            # explicit relinquishment is the tenant's own (checkpoint-
+            # timed) decision => no wasted work; limit crossings behave
+            # like revocation (work since checkpoint is lost)
+            self.tenants[old].on_revoke(leaf, now,
+                                        graceful=(reason == "explicit"))
+        if new in self.tenants:
+            self.tenants[new].on_grant(leaf, now)
+
+    def step(self, now: float) -> None:
+        self.market.advance_to(now)
+        for name in sorted(self.adapters):
+            t = self.tenants[name]
+            if now < t.arrival_s:
+                continue
+            if t.done_at is not None and t.nodes:
+                self.adapters[name].shutdown()
+                continue
+            self.adapters[name].step(now)
+
+    def cost_of(self, name: str) -> float:
+        self.market.settle()
+        return self.market.bills.get(name, 0.0)

@@ -1,0 +1,190 @@
+"""Fault-tolerant, market-driven elastic trainer.
+
+The training loop is the *tenant application* from LaissezCloud's point of
+view: a ``ResourceBroker`` (EconAdapter-backed or fixed) tells it how many
+devices it currently owns; on grant/revoke the trainer checkpoints,
+re-meshes (new data-parallel degree) and resumes — the "shrink-and-
+continue / checkpoint-restart" behaviors from paper Table 2.  Straggler
+mitigation: a step-time EWMA flags slow steps; the broker receives the
+degradation signal as a utility drop (the paper's time-varying resource
+value) so the EconAdapter can trade the slow node away.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, SyntheticTokens
+from repro.launch import shardings as sh
+from repro.launch.mesh import make_mesh
+from repro.models import model as M
+from repro.models import steps as S
+from repro.optim import AdamWConfig, make_train_state
+
+
+@dataclass
+class TrainConfig:
+    steps: int = 200
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    async_checkpoint: bool = True
+    log_every: int = 10
+    straggler_factor: float = 2.0     # step > factor x EWMA => straggler
+    seed: int = 0
+    scan_layers: bool = True
+
+
+class ResourceBroker:
+    """Fixed-allocation broker (baseline). Market-driven subclass below."""
+
+    def __init__(self, n_devices: int) -> None:
+        self.n = n_devices
+
+    def current_devices(self, step: int) -> int:
+        return self.n
+
+    def report_degradation(self, step: int, slowdown: float) -> None:
+        pass
+
+
+class ScheduledBroker(ResourceBroker):
+    """Deterministic grant/revoke schedule — used to test elasticity and
+    to replay market decisions: {step: n_devices}."""
+
+    def __init__(self, schedule: Dict[int, int], n0: int) -> None:
+        super().__init__(n0)
+        self.schedule = dict(schedule)
+
+    def current_devices(self, step: int) -> int:
+        for s in sorted(self.schedule):
+            if step >= s:
+                self.n = self.schedule[s]
+        return self.n
+
+
+class MarketBroker(ResourceBroker):
+    """Drives device count from a live LaissezCloud market: owned leaves
+    of this tenant => data-parallel degree (capped at available local
+    devices for simulation)."""
+
+    def __init__(self, market, tenant: str, max_devices: int) -> None:
+        super().__init__(1)
+        self.market = market
+        self.tenant = tenant
+        self.max = max_devices
+
+    def current_devices(self, step: int) -> int:
+        owned = len(self.market.owned_leaves(self.tenant))
+        n = max(1, min(self.max, owned))
+        # mesh size must divide batch cleanly; use the largest power of 2
+        while n & (n - 1):
+            n -= 1
+        return n
+
+
+@dataclass
+class TrainReport:
+    losses: List[float] = field(default_factory=list)
+    resizes: List[Tuple[int, int, int]] = field(default_factory=list)
+    restores: int = 0
+    stragglers: int = 0
+    steps_done: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, data_cfg: DataConfig,
+                 opt: Optional[AdamWConfig] = None,
+                 tcfg: Optional[TrainConfig] = None,
+                 broker: Optional[ResourceBroker] = None) -> None:
+        self.cfg = cfg
+        self.data_cfg = data_cfg
+        self.opt = opt or AdamWConfig(state_dtype=cfg.opt_dtype)
+        self.tcfg = tcfg or TrainConfig()
+        self.broker = broker or ResourceBroker(1)
+        self.data = SyntheticTokens(data_cfg)
+        self.ckpt = CheckpointManager(self.tcfg.checkpoint_dir)
+        self.mesh = None
+        self._jit_step = None
+        self.state = None
+
+    # ------------------------------------------------------------ meshes
+    def _build(self, n_devices: int, state_host: Optional[Any]) -> None:
+        """(Re)build mesh, shardings and the jitted step; place state."""
+        tp = 1                                    # CPU sim: DP-only elastic
+        self.mesh = make_mesh((n_devices, tp), ("data", "model"))
+        mi = M.MeshInfo(self.mesh, ("data",), "model",
+                        batch_sharded=True)
+        step_fn = S.make_train_step(self.cfg, self.opt, mi,
+                                    scan_layers=self.tcfg.scan_layers)
+        sspec = sh.train_state_specs(self.cfg, self.mesh)
+        named = sh.to_named(sspec, self.mesh)
+        bspec = sh.batch_specs(self.cfg, self.mesh,
+                               self.data_cfg.global_batch)
+        bnamed = sh.to_named(bspec, self.mesh)
+        self._jit_step = jax.jit(step_fn, in_shardings=(named, bnamed),
+                                 out_shardings=(named, None))
+        if state_host is None:
+            params = M.init_params(self.cfg, jax.random.key(
+                self.tcfg.seed))
+            state = make_train_state(params, self.opt)
+            self.state = jax.device_put(state, named)
+        else:
+            self.state = jax.tree.map(
+                lambda a, s: jax.device_put(np.asarray(a), s),
+                state_host, named)
+
+    def _to_host(self, state) -> Any:
+        return jax.tree.map(np.asarray, state)
+
+    # ------------------------------------------------------------- loop
+    def run(self, resume: bool = True) -> TrainReport:
+        rep = TrainReport()
+        tc = self.tcfg
+        n_dev = self.broker.current_devices(0)
+        start = 0
+        state_host = None
+        if resume and self.ckpt.latest_step() is not None:
+            start = self.ckpt.latest_step()
+            template = jax.eval_shape(
+                lambda: make_train_state(
+                    M.init_params(self.cfg, jax.random.key(tc.seed)),
+                    self.opt))
+            state_host = self.ckpt.restore(start, template)
+            rep.restores += 1
+        self._build(n_dev, state_host)
+        ewma = None
+        for step in range(start, tc.steps):
+            want = self.broker.current_devices(step)
+            if want != n_dev:
+                # elastic re-mesh: snapshot -> rebuild -> resume
+                host = self._to_host(self.state)
+                rep.resizes.append((step, n_dev, want))
+                n_dev = want
+                self._build(n_dev, host)
+            batch_np = self.data.batch(step)
+            batch = {k: jax.numpy.asarray(v) for k, v in batch_np.items()}
+            t0 = time.perf_counter()
+            self.state, metrics = self._jit_step(self.state, batch)
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            if ewma is None:
+                ewma = dt
+            elif step > start + 2:
+                if dt > tc.straggler_factor * ewma:
+                    rep.stragglers += 1
+                    self.broker.report_degradation(step, dt / ewma)
+                ewma += 0.2 * (dt - ewma)
+            rep.losses.append(loss)
+            rep.steps_done = step + 1
+            if (step + 1) % tc.checkpoint_every == 0:
+                self.ckpt.save(step + 1, self._to_host(self.state),
+                               blocking=not tc.async_checkpoint)
+        self.ckpt.wait()
+        return rep

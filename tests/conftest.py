@@ -1,0 +1,23 @@
+"""Shared test helpers.
+
+NOTE: we deliberately do NOT set xla_force_host_platform_device_count here
+— unit tests and benches must see the real single device. Tests that need
+a multi-device host (elastic re-meshing) spawn a subprocess with the flag
+via ``run_with_devices``.
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def run_with_devices(code: str, n_devices: int = 4,
+                     timeout: int = 600) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)

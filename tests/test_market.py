@@ -1,0 +1,250 @@
+"""Market engine semantics + hypothesis property tests on its invariants."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.market import Market, VolatilityControls, OPERATOR, \
+    VisibilityError
+from repro.core.topology import build_cluster
+
+
+def small_cluster():
+    return build_cluster({"H100": 8, "A100": 8}, gpus_per_host=4,
+                         hosts_per_rack=2, racks_per_zone=1)
+
+
+def seeded_market(controls=None):
+    topo = small_cluster()
+    m = Market(topo, controls)
+    m.set_floor(topo.roots["H100"], 2.0)
+    m.set_floor(topo.roots["A100"], 1.0)
+    return topo, m
+
+
+class TestOwnershipAndBilling:
+    def test_initial_operator_ownership(self):
+        topo, m = seeded_market()
+        assert all(m.owner_of(l) == OPERATOR
+                   for l in topo.leaves_of(topo.roots["H100"]))
+
+    def test_buy_from_operator_at_floor(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=3.0)
+        assert len(m.owned_leaves("A")) == 1
+        leaf = next(iter(m.owned_leaves("A")))
+        assert m.market_rate(leaf) == pytest.approx(2.0)  # floor binds
+
+    def test_bill_is_rate_time_integral(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=3.0)
+        m.advance_to(7200.0)             # 2 h at the 2.0 floor
+        assert m.settle()["A"] == pytest.approx(4.0)
+
+    def test_losing_bid_raises_owner_rate(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=5.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        # exhaust idle supply so B's bid presses A
+        for _ in range(7):
+            m.place_order("Z", topo.roots["H100"], 2.1, limit=99.0)
+        m.place_order("B", topo.roots["H100"], 4.0, limit=4.0)
+        assert m.market_rate(leaf) == pytest.approx(4.0)
+        assert m.owner_of(leaf) == "A"   # limit 5.0 not crossed
+
+    def test_limit_crossing_relinquishes(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=3.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        for _ in range(7):
+            m.place_order("Z", topo.roots["H100"], 2.1, limit=99.0)
+        m.place_order("B", topo.roots["H100"], 3.5, limit=6.0)
+        assert m.owner_of(leaf) == "B"
+        # B pays the best losing price (second price), not its own bid
+        assert m.market_rate(leaf) <= 3.5
+
+    def test_explicit_relinquish_to_queued_bid(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=10.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        for _ in range(7):
+            m.place_order("Z", topo.roots["H100"], 2.1, limit=99.0)
+        m.place_order("B", topo.roots["H100"], 3.0, limit=3.0)
+        assert m.owner_of(leaf) == "A"   # A's limit 10 holds
+        m.relinquish("A", leaf)
+        assert m.owner_of(leaf) == "B"   # earliest queued matching buy
+
+    def test_reclaim_when_no_bids(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5)
+        leaf = next(iter(m.owned_leaves("A")))
+        m.relinquish("A", leaf)
+        assert m.owner_of(leaf) == OPERATOR
+
+    def test_oco_set_commits_once(self):
+        topo, m = seeded_market()
+        oid = m.place_order("A", topo.roots["H100"], 2.5)
+        assert len(m.owned_leaves("A")) == 1
+        assert not m.orders[oid].active   # consumed atomically
+
+
+class TestTopologyScoping:
+    def test_scoped_order_targets_subtree(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5)
+        leaf = next(iter(m.owned_leaves("A")))
+        host = topo.ancestors(leaf)[1]
+        m.place_order("A", host, 2.5)     # same NVLink domain
+        leaves = m.owned_leaves("A")
+        assert len(leaves) == 2
+        hosts = {topo.ancestors(l)[1] for l in leaves}
+        assert hosts == {host}
+
+    def test_operator_subtree_floor_pressure(self):
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=3.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        rack = topo.ancestors(leaf)[2]
+        m.set_floor(rack, 3.5)            # power-constrained rack
+        assert m.owner_of(leaf) == OPERATOR   # price-evicted
+
+
+class TestPriceDiscovery:
+    def test_visibility_roots_only_initially(self):
+        topo, m = seeded_market()
+        assert m.query_price("T", topo.roots["H100"]) == pytest.approx(2.0)
+        zone = topo.node(topo.roots["H100"]).children[0]
+        with pytest.raises(VisibilityError):
+            m.query_price("T", zone)
+
+    def test_owned_resources_widen_domain(self):
+        topo, m = seeded_market()
+        m.place_order("T", topo.roots["H100"], 2.5)
+        leaf = next(iter(m.owned_leaves("T")))
+        for node in topo.ancestors(leaf):
+            m.query_price("T", node)      # no VisibilityError
+
+    def test_on_demand_like_owner_blocks_acquisition(self):
+        # on-demand-like tenants hold with an infinite retention limit
+        # (paper §7 adoption path)
+        topo, m = seeded_market()
+        for _ in range(8):
+            m.place_order("A", topo.roots["H100"], 2.5, limit=math.inf)
+        assert math.isinf(m.query_price("B", topo.roots["H100"]))
+
+
+class TestVolatilityControls:
+    def test_bid_clipping(self):
+        topo, m = seeded_market(VolatilityControls(max_bid_multiple=2.0))
+        oid = m.place_order("A", topo.roots["H100"], 1000.0)
+        # clipped relative to the 2.0 floor reference
+        for o in m.orders.values():
+            assert o.price <= 2.0 * 2.0 + 1e-9
+
+    def test_floor_fall_rate_bound(self):
+        topo, m = seeded_market(VolatilityControls(floor_fall_rate=0.5))
+        root = topo.roots["H100"]
+        m.advance_to(1800.0)              # half an hour
+        m.set_floor(root, 0.0)
+        # may fall at most 50%/h => >= 1.5 after 30 min
+        assert m.floor(topo.leaves_of(root)[0]) >= 1.5 - 1e-9
+
+    def test_min_holding_defers_eviction(self):
+        topo, m = seeded_market(VolatilityControls(min_holding_s=600.0))
+        m.place_order("A", topo.roots["H100"], 2.5, limit=3.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        for _ in range(7):
+            m.place_order("Z", topo.roots["H100"], 2.1, limit=99.0)
+        m.place_order("B", topo.roots["H100"], 3.5, limit=9.0)
+        assert m.owner_of(leaf) == "A"    # protected by min holding
+        m.advance_to(601.0)
+        assert m.owner_of(leaf) == "B"    # deferred crossing fires
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random op sequences preserve the market invariants.
+# ---------------------------------------------------------------------------
+op_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["place", "cancel", "relinquish", "limit",
+                         "floor", "advance"]),
+        st.integers(0, 4),                 # tenant id
+        st.floats(0.1, 20.0),              # price-ish
+        st.integers(0, 30),                # node selector
+    ), min_size=1, max_size=60)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=op_strategy)
+def test_market_invariants(ops):
+    topo, m = seeded_market(VolatilityControls(max_bid_multiple=0.0))
+    tenants = [f"t{i}" for i in range(5)]
+    placed = []
+    now = 0.0
+    for kind, tid, price, sel in ops:
+        t = tenants[tid]
+        if kind == "place":
+            scope = (list(topo.roots.values()) +
+                     [n.node_id for n in topo.nodes])[sel
+                                                      % (len(topo.nodes))]
+            placed.append(m.place_order(t, scope, price,
+                                        limit=price * 1.5))
+        elif kind == "cancel" and placed:
+            oid = placed[sel % len(placed)]
+            o = m.orders[oid]
+            if o.active:
+                m.cancel_order(o.tenant, oid)
+        elif kind == "relinquish":
+            owned = sorted(m.owned_leaves(t))
+            if owned:
+                m.relinquish(t, owned[sel % len(owned)])
+        elif kind == "limit":
+            owned = sorted(m.owned_leaves(t))
+            if owned:
+                m.set_retention_limit(t, owned[sel % len(owned)], price)
+        elif kind == "floor":
+            root = list(topo.roots.values())[sel % 2]
+            m.set_floor(root, price)
+        else:
+            now += price * 60
+            m.advance_to(now)
+
+        # INVARIANTS ---------------------------------------------------
+        # 1. exactly one owner per leaf; owned sets partition correctly
+        seen = {}
+        for tt, leaves in m.owned.items():
+            for l in leaves:
+                assert l not in seen
+                seen[l] = tt
+                assert m.res[l].owner == tt
+        for l, stt in m.res.items():
+            if stt.owner != OPERATOR:
+                assert l in m.owned.get(stt.owner, ())
+        # 2. rate >= floor for owned leaves
+        for l, stt in m.res.items():
+            if stt.owner != OPERATOR:
+                assert stt.rate >= m.floor(l) - 1e-6
+        # 3. bills never negative
+        assert all(b >= -1e-9 for b in m.bills.values())
+        # 4. consumed orders never own book pressure (spot check stats)
+        assert m.stats["transfers"] >= 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(prices=st.lists(st.floats(2.1, 50.0), min_size=2, max_size=10))
+def test_second_price_property(prices):
+    """After all bids, the winner pays max(floor, best losing bid)."""
+    topo = build_cluster({"H100": 1}, gpus_per_host=1, hosts_per_rack=1,
+                         racks_per_zone=1)
+    m = Market(topo)
+    root = topo.roots["H100"]
+    m.set_floor(root, 2.0)
+    for i, p in enumerate(prices):
+        m.place_order(f"t{i}", root, p, limit=p)
+    leaf = topo.leaves_of(root)[0]
+    st_ = m.res[leaf]
+    assert st_.owner != "__operator__"
+    # owner's own (consumed) bid exerts no pressure; rate = best loser
+    resting = [o.price for o in m.orders.values() if o.active]
+    expect = max([2.0] + resting)
+    assert st_.rate == pytest.approx(expect)

@@ -1,0 +1,140 @@
+"""Per-arch smoke tests (reduced configs, real values on CPU) + decode/
+prefill consistency + loss sanity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config, applicable_shapes, SHAPES
+from repro.models import layers as L
+from repro.models import model as M
+from repro.optim import AdamWConfig, make_train_state, adamw_update
+
+KEY = jax.random.key(0)
+
+
+def tiny_batch(cfg, B=2, S=32):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend == "vision_stub":
+        batch["prefix_embeds"] = jnp.full(
+            (B, cfg.num_prefix_tokens, cfg.d_model), 0.01, jnp.float32)
+    if cfg.frontend == "audio_stub":
+        batch["encoder_embeds"] = jnp.full((B, 16, cfg.d_model), 0.01,
+                                           jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_smoke_forward_and_train_step(name):
+    """One forward + one AdamW train step on a reduced config of the same
+    family: output shapes correct, no NaNs."""
+    cfg = ARCHS[name].reduced()
+    params = M.init_params(cfg, KEY)
+    batch = tiny_batch(cfg)
+    logits, _ = M.forward(params, cfg, batch)
+    S_total = batch["tokens"].shape[1] + (
+        cfg.num_prefix_tokens if cfg.frontend == "vision_stub" else 0)
+    assert logits.shape == (2, S_total, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    loss, grads = jax.value_and_grad(
+        lambda p: M.loss_fn(p, cfg, batch, L.moe_dense))(params)
+    assert np.isfinite(float(loss))
+    state = make_train_state(params, AdamWConfig())
+    state, gnorm = adamw_update(state, grads, AdamWConfig())
+    assert np.isfinite(float(gnorm))
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_arch_prefill_decode(name):
+    cfg = ARCHS[name].reduced()
+    params = M.init_params(cfg, KEY)
+    B, S = 2, 16
+    batch = tiny_batch(cfg, B, S)
+    logits, cache = M.prefill(params, cfg, batch, max_len=S + 8)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = M.decode_step(params, cfg, cache, tok,
+                                    jnp.array(S, jnp.int32))
+    assert logits2.shape[-1] == cfg.vocab_size
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+def test_decode_matches_forward_logits():
+    """Teacher-forced decode reproduces full-forward logits (causal LMs):
+    prefill tokens[:, :t] then decode tokens[t] => logits == forward."""
+    cfg = get_config("qwen3-0.6b").reduced(num_layers=3)
+    params = M.init_params(cfg, KEY)
+    B, S = 1, 12
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = M.forward(params, cfg, {"tokens": tokens})
+    t = S - 1
+    _, cache = M.prefill(params, cfg, {"tokens": tokens[:, :t]},
+                         max_len=S + 2)
+    dec_logits, _ = M.decode_step(params, cfg, cache, tokens[:, t:t + 1],
+                                  jnp.array(t, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_ssm_decode_matches_forward():
+    cfg = get_config("mamba2-780m").reduced(num_layers=2)
+    params = M.init_params(cfg, KEY)
+    B, S = 1, 16
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full_logits, _ = M.forward(params, cfg, {"tokens": tokens})
+    _, cache = M.prefill(params, cfg, {"tokens": tokens[:, :S - 1]},
+                         max_len=S + 2)
+    dec_logits, _ = M.decode_step(params, cfg, cache,
+                                  tokens[:, S - 1:S],
+                                  jnp.array(S - 1, jnp.int32))
+    np.testing.assert_allclose(
+        np.asarray(dec_logits[:, 0], np.float32),
+        np.asarray(full_logits[:, -1], np.float32), rtol=2e-3, atol=2e-3)
+
+
+def test_scan_equals_unrolled():
+    cfg = get_config("qwen3-0.6b").reduced(num_layers=4)
+    params = M.init_params(cfg, KEY)
+    batch = tiny_batch(cfg)
+    l1, _ = M.forward(params, cfg, batch, scan_layers=True)
+    l2, _ = M.forward(params, cfg, batch, scan_layers=False)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_moe_ep_equals_dense():
+    """Expert-parallel shard_map MoE == dense reference on a 1-device
+    mesh with ample capacity."""
+    import functools
+    cfg = get_config("olmoe-1b-7b").reduced(num_layers=2,
+                                            capacity_factor=8.0)
+    params = M.init_params(cfg, KEY)
+    batch = tiny_batch(cfg)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    moe_ep = functools.partial(L.moe_ep, mesh=mesh, dp_axes=("data",),
+                               ep_axis="model", batch_sharded=True)
+    l_dense, _ = M.forward(params, cfg, batch, moe_fn=L.moe_dense)
+    with mesh:
+        l_ep, _ = M.forward(params, cfg, batch, moe_fn=moe_ep)
+    np.testing.assert_allclose(np.asarray(l_dense), np.asarray(l_ep),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_param_counts_match_actual():
+    """Analytic param_counts (used for MODEL_FLOPS) ~ actual leaf sizes."""
+    for name in ("qwen3-0.6b", "olmoe-1b-7b", "mamba2-780m"):
+        cfg = ARCHS[name].reduced()
+        params = M.init_params(cfg, KEY)
+        actual = sum(np.prod(l.shape) for l in jax.tree.leaves(params))
+        total, _ = cfg.param_counts()
+        # norms/biases are excluded from the analytic count => small delta
+        assert abs(actual - total) / actual < 0.05, (name, actual, total)
+
+
+def test_long_context_skip_policy():
+    assert "long_500k" not in applicable_shapes(get_config("llama3-405b"))
+    assert "long_500k" in applicable_shapes(get_config("mamba2-780m"))
+    assert "long_500k" in applicable_shapes(get_config("jamba-v0.1-52b"))
+    assert "long_500k" in applicable_shapes(get_config("gemma3-27b"))
+    assert "long_500k" not in applicable_shapes(get_config("whisper-base"))
