@@ -75,6 +75,7 @@ def run(quick: bool = False):
              f"{1e6 / us_c:.0f} req/s")
 
     # JAX batch engine: full clearing pass over the largest pool
+    import jax
     import jax.numpy as jnp
     from repro.market_jax.engine import BatchEngine, build_tree
     for n in ((2048,) if quick else (2048, 16_384, 65_536)):
@@ -92,12 +93,57 @@ def run(quick: bool = False):
                        jnp.array(rng.integers(0, 999, nb), jnp.int32))
 
         def clear():
-            r, l, a = eng.clear(st)
+            r, l, w = eng.clear(st)
             r.block_until_ready()
         us = time_op(clear, repeat=5, warmup=2)
         emit(f"fig12/jax_batch/clear_pass/n={n}", us,
              f"{n / (us / 1e6):.2e} leaf-clears/s (8192 resting bids)")
 
+    # JAX batch engine: the FULL market epoch — place -> clear -> evict ->
+    # transfer -> bill — i.e. one complete step() of the renegotiation
+    # runtime, with a live bid inflow every epoch
+    for n in ((2048, 16_384) if quick else (2048, 16_384, 65_536)):
+        tree = build_tree(n)
+        eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024)
+        st = eng.init_state()
+        st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+        rng = np.random.default_rng(0)
+        # contested steady state: ~95% of the pool owned, random limits.
+        # (A cold-start flood of marketable bids onto idle supply pays one
+        # OCO wave per matched order — the same sequential cost the event
+        # engine pays per place_order, see fig12a.)
+        st["owner"] = jnp.array(
+            np.where(rng.random(n) < 0.95, rng.integers(0, 1024, n), -1),
+            jnp.int32)
+        st["limit"] = jnp.array(rng.uniform(3.0, 9.0, n), jnp.float32)
+        nb = 2048
+        def fresh_bids():
+            levels = rng.integers(0, tree.n_levels, nb).astype(np.int32)
+            return {
+                "price": jnp.array(rng.uniform(1, 8, nb), jnp.float32),
+                "limit": jnp.array(rng.uniform(8, 12, nb), jnp.float32),
+                "level": jnp.array(levels),
+                "node": jnp.array(np.array(
+                    [rng.integers(0, tree.nodes_at(d)) for d in levels],
+                    np.int32)),
+                "tenant": jnp.array(rng.integers(0, 1024, nb), jnp.int32),
+            }
+        clock = [0.0]
+        holder = [st]
+        def full_step():
+            clock[0] += 30.0
+            s2, transfers, bills = eng.step(holder[0], clock[0],
+                                            fresh_bids())
+            holder[0] = jax.block_until_ready(s2)
+        us = time_op(full_step, repeat=5, warmup=2)
+        emit(f"fig12/jax_batch/full_step/n={n}", us,
+             f"{n / (us / 1e6):.2e} leaf-clears/s "
+             f"({nb} new bids/epoch, billing+evictions on)")
+
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2048/16384-leaf pools only")
+    run(quick=ap.parse_args().quick)

@@ -160,15 +160,56 @@ class Market:
                     break
         return out
 
+    def _second_tenant_price(self, node: int) -> float:
+        """Best live price from a SECOND distinct tenant in this book.
+
+        Any bid strictly below this price cannot move any leaf's charged
+        rate, whoever the leaf's owner is: charged rates exclude the
+        owner's own orders, and with two distinct tenants resting at or
+        above p, at least one of them is a non-owner for every owner.
+        Comparing against the raw top of book is NOT safe — the top bid
+        may belong to the owner itself (the undercharging bug).
+        Returns -inf (forces a refresh) when no such second tenant is
+        found among the book's top entries.
+        """
+        top = self._top_entries(node, k=8)
+        if not top:
+            return -math.inf
+        first = top[0].tenant
+        for o in top[1:]:
+            if o.tenant != first:
+                return o.price
+        return -math.inf
+
+    def _best_in_book(self, node: int,
+                      exclude: Optional[str]) -> Optional[Order]:
+        """Best live non-excluded order in one book (price desc, seq asc).
+        Falls back to a full sorted scan when the excluded tenant
+        monopolizes the top entries — truncating there would hide real
+        competing pressure (the undercharging bug class)."""
+        for o in self._top_entries(node):
+            if exclude is None or o.tenant != exclude:
+                return o
+        if exclude is None:
+            return None
+        book = self._books.get(node)
+        if not book:
+            return None
+        for entry in sorted(book):
+            if self._entry_live(entry):
+                o = self.orders[entry[2]]
+                if o.tenant != exclude:
+                    return o
+        return None
+
     def _best_bid(self, leaf: int, exclude: Optional[str]) -> Optional[Order]:
         best: Optional[Order] = None
         for node in self.topo.ancestors(leaf):
-            for o in self._top_entries(node):
-                if exclude is not None and o.tenant == exclude:
-                    continue
-                if best is None or (o.price, -o.seq) > (best.price, -best.seq):
-                    best = o
-                break  # only the best non-excluded entry per book matters
+            o = self._best_in_book(node, exclude)
+            if o is not None and (
+                    best is None
+                    or (o.price, -o.seq) > (best.price, -best.seq)):
+                best = o
         return best
 
     # --------------------------------------------------------------- rates
@@ -232,8 +273,7 @@ class Market:
         oid = next(self._order_seq)
         o = Order(oid, tenant, scope, price, limit, oid)
         self.orders[oid] = o
-        prev_top = self._top_entries(scope, 1)
-        prev_price = prev_top[0].price if prev_top else -math.inf
+        covered = self._second_tenant_price(scope)
         heapq.heappush(self._book(scope), (-price, o.seq, oid))
         self._live_count[scope] = self._live_count.get(scope, 0) + 1
         self.stats["orders"] += 1
@@ -242,8 +282,9 @@ class Market:
         # only if it keeps resting does its pressure propagate (and possibly
         # evict owners whose retention limit it crosses)
         self._try_immediate_match(o)
-        if o.active and price > prev_price:
-            # fast path: a bid below the book's current top moves no rate
+        if o.active and price > covered + EPS:
+            # fast path: a bid below the best second-distinct-tenant price
+            # moves no rate (owner-exclusion-safe skip condition)
             self._refresh_subtree(scope)
         return oid
 
@@ -277,9 +318,11 @@ class Market:
             0, self._live_count.get(o.scope, 1) - 1)
         self.stats["cancels"] += 1
         self.events.append(("cancel", self.now, tenant, order_id))
-        # cancelling a non-top bid cannot move any rate
-        top = self._top_entries(o.scope, 1)
-        if not top or top[0].price < o.price - EPS:
+        # a cancel can only LOWER rates, and only if the cancelled bid was
+        # the best non-owner pressure for some owner; with a second
+        # distinct tenant still resting at or above its price, every
+        # owner-excluded rate is unchanged
+        if o.price > self._second_tenant_price(o.scope) + EPS:
             self._refresh_subtree(o.scope)
 
     def update_order(self, tenant: str, order_id: int, price: float,
@@ -404,11 +447,15 @@ class Market:
         return dom
 
     def acquire_price(self, leaf: int, tenant: str) -> float:
-        """Rate a tenant must exceed to acquire this leaf right now."""
+        """Rate a tenant must exceed to acquire this leaf right now.
+
+        The querying tenant's own resting bids are excluded from the
+        competing price — they would be OCO-replaced, not outbid (a tenant
+        never has to outbid itself)."""
         st = self.res[leaf]
         if st.owner == tenant:
             return math.inf
-        best = self._best_bid(leaf, exclude=None)
+        best = self._best_bid(leaf, exclude=tenant)
         comp = max(self.floor(leaf), best.price + TICK if best else 0.0)
         if st.owner == OPERATOR:
             return comp

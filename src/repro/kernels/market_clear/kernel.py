@@ -8,6 +8,12 @@ aggregates arrive as a *contiguous window* via its BlockSpec index map
 does only static `jnp.repeat` expansions and vector max/select ops — no
 gathers, fully VPU-friendly.
 
+Per level the inputs are the exact owner-exclusion aggregates computed by
+``ref.segment_aggregates``: best bid (price p1, tenant o1, slot s1), best
+bid from any OTHER tenant (p2, s2), and the operator floor. Outputs per
+leaf: charged rate, winning level, winning (owner-excluded) bid slot with
+the floor gate applied, and the retention-limit eviction mask.
+
 Block size 512 divides all level strides (8/32/128/512-style topologies);
 lane dim padded to multiples of 128 where needed by the caller (ops.py).
 """
@@ -21,56 +27,79 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -1e30
+EPSF = 1e-6
+_REFS_PER_LEVEL = 6   # p1, o1, s1, p2, s2, floor
 
 
-def _clear_kernel(owner_ref, *refs, strides: Sequence[int], block: int):
-    """refs layout: for each level d: (top1, own1, top2, floor) then
-    outputs (rate, best_level)."""
+def _clear_kernel(owner_ref, limit_ref, *refs,
+                  strides: Sequence[int], block: int):
+    """refs layout: for each level d: (p1, o1, s1, p2, s2, floor) then
+    outputs (rate, best_level, winner_slot, evict)."""
     n_lvl = len(strides)
-    lvl_refs = refs[:4 * n_lvl]
-    rate_ref, best_ref = refs[4 * n_lvl], refs[4 * n_lvl + 1]
+    lvl_refs = refs[:_REFS_PER_LEVEL * n_lvl]
+    rate_ref, lvl_out, slot_out, evict_out = refs[_REFS_PER_LEVEL * n_lvl:]
     owner = owner_ref[...]
-    rate = jnp.zeros((block,), jnp.float32)
+    limit = limit_ref[...]
+    floor = jnp.zeros((block,), jnp.float32)
     best_bid = jnp.full((block,), NEG, jnp.float32)
     best_lvl = jnp.full((block,), -1, jnp.int32)
+    best_slot = jnp.full((block,), -1, jnp.int32)
     for d, s in enumerate(strides):
-        t1 = lvl_refs[4 * d + 0][...]
-        o1 = lvl_refs[4 * d + 1][...]
-        t2 = lvl_refs[4 * d + 2][...]
-        fl = lvl_refs[4 * d + 3][...]
+        p1, o1, s1, p2, s2, fl = (
+            lvl_refs[_REFS_PER_LEVEL * d + i][...] for i in range(6))
         reps = s if s <= block else block
         # expand the node window to per-leaf lanes (static repeat)
-        t1 = jnp.repeat(t1, reps, total_repeat_length=block)
+        p1 = jnp.repeat(p1, reps, total_repeat_length=block)
         o1 = jnp.repeat(o1, reps, total_repeat_length=block)
-        t2 = jnp.repeat(t2, reps, total_repeat_length=block)
+        s1 = jnp.repeat(s1, reps, total_repeat_length=block)
+        p2 = jnp.repeat(p2, reps, total_repeat_length=block)
+        s2 = jnp.repeat(s2, reps, total_repeat_length=block)
         fl = jnp.repeat(fl, reps, total_repeat_length=block)
-        eff = jnp.where(o1 == owner, t2, t1)
-        rate = jnp.maximum(rate, fl)
-        better = eff > best_bid
-        best_bid = jnp.where(better, eff, best_bid)
-        best_lvl = jnp.where(better & (eff > NEG / 2), d, best_lvl)
-    rate_ref[...] = jnp.maximum(rate, jnp.maximum(best_bid, 0.0))
-    best_ref[...] = best_lvl
+        excl = (o1 == owner) & (owner >= 0)
+        eff = jnp.where(excl, p2, p1)
+        esl = jnp.where(excl, s2, s1)
+        floor = jnp.maximum(floor, fl)
+        live = eff > NEG / 2
+        tie = live & (eff == best_bid) & (esl >= 0) \
+            & ((best_slot < 0) | (esl < best_slot))
+        take = (eff > best_bid) | tie
+        best_bid = jnp.where(take, eff, best_bid)
+        best_lvl = jnp.where(take & live, d, best_lvl)
+        best_slot = jnp.where(take & live, esl, best_slot)
+    rate = jnp.maximum(floor, jnp.maximum(best_bid, 0.0))
+    ok = (best_slot >= 0) & (best_bid >= floor - EPSF)
+    rate_ref[...] = rate
+    lvl_out[...] = best_lvl
+    slot_out[...] = jnp.where(ok, best_slot, -1)
+    evict_out[...] = ((owner >= 0)
+                      & (rate > limit + EPSF)).astype(jnp.int32)
 
 
-def clear_pallas(level_top1: Sequence[jax.Array],
-                 level_owner: Sequence[jax.Array],
-                 level_top2: Sequence[jax.Array],
+def clear_pallas(level_p1: Sequence[jax.Array],
+                 level_o1: Sequence[jax.Array],
+                 level_s1: Sequence[jax.Array],
+                 level_p2: Sequence[jax.Array],
+                 level_s2: Sequence[jax.Array],
                  level_floor: Sequence[jax.Array],
                  strides: Sequence[int], owner: jax.Array,
+                 limit: jax.Array,
                  block: int = 512, interpret: bool = True
-                 ) -> Tuple[jax.Array, jax.Array]:
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     n_leaves = owner.shape[0]
+    block = min(block, n_leaves)    # tiny trees: one block over all leaves
     assert n_leaves % block == 0, (n_leaves, block)
     grid = (n_leaves // block,)
-    in_specs = [pl.BlockSpec((block,), lambda i: (i,))]
-    args = [owner]
+    leaf_spec = pl.BlockSpec((block,), lambda i: (i,))
+    in_specs = [leaf_spec, leaf_spec]
+    args = [owner, limit]
     for d, s in enumerate(strides):
         w = max(block // s, 1)          # nodes visible to one leaf block
-        # leaf block i covers nodes [i*w, (i+1)*w) at this level
-        spec = pl.BlockSpec((w,), lambda i: (i,))
-        for arr in (level_top1[d], level_owner[d], level_top2[d],
-                    level_floor[d]):
+        # leaf block i starts at node (i*block)//s, i.e. node-block
+        # (i*block)//s//w — for s <= block this reduces to (i,)
+        spec = pl.BlockSpec(
+            (w,), lambda i, s=s, w=w: (i * block // s // w,))
+        for arr in (level_p1[d], level_o1[d], level_s1[d],
+                    level_p2[d], level_s2[d], level_floor[d]):
             pad = (-arr.shape[0]) % w
             if pad:
                 fillv = NEG if arr.dtype == jnp.float32 else -1
@@ -78,9 +107,10 @@ def clear_pallas(level_top1: Sequence[jax.Array],
             in_specs.append(spec)
             args.append(arr)
     out_shape = (jax.ShapeDtypeStruct((n_leaves,), jnp.float32),
+                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
+                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
                  jax.ShapeDtypeStruct((n_leaves,), jnp.int32))
-    out_specs = (pl.BlockSpec((block,), lambda i: (i,)),
-                 pl.BlockSpec((block,), lambda i: (i,)))
+    out_specs = (leaf_spec, leaf_spec, leaf_spec, leaf_spec)
     kern = functools.partial(_clear_kernel, strides=tuple(strides),
                              block=block)
     return pl.pallas_call(kern, grid=grid, in_specs=in_specs,

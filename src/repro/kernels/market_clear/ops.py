@@ -1,5 +1,10 @@
 """Jitted wrapper: hierarchical clearing via the Pallas kernel (TPU) or
-the pure-jnp oracle (CPU / differentiability)."""
+the pure-jnp oracle (CPU / differentiability).
+
+Both paths take the per-level owner-exclusion aggregates from
+``ref.segment_aggregates`` plus the per-leaf owner/limit arrays and return
+``(rate, best_level, winner_slot, evict)`` — see ref.clear_ref.
+"""
 from __future__ import annotations
 
 import functools
@@ -14,13 +19,15 @@ from repro.kernels.market_clear.kernel import clear_pallas
 
 @functools.partial(jax.jit, static_argnames=("strides", "use_pallas",
                                              "interpret", "block"))
-def clear(level_top1, level_owner, level_top2, level_floor,
-          strides: Tuple[int, ...], owner, *, use_pallas: bool = False,
-          interpret: bool = True, block: int = 512):
+def clear(level_p1, level_o1, level_s1, level_p2, level_s2, level_floor,
+          strides: Tuple[int, ...], owner, limit, *,
+          use_pallas: bool = False, interpret: bool = True,
+          block: int = 512):
     if use_pallas:
-        return clear_pallas(list(level_top1), list(level_owner),
-                            list(level_top2), list(level_floor),
-                            strides, owner, block=block,
-                            interpret=interpret)
-    return R.clear_ref(list(level_top1), list(level_owner),
-                       list(level_top2), list(level_floor), strides, owner)
+        return clear_pallas(list(level_p1), list(level_o1), list(level_s1),
+                            list(level_p2), list(level_s2),
+                            list(level_floor), strides, owner, limit,
+                            block=block, interpret=interpret)
+    return R.clear_ref(list(level_p1), list(level_o1), list(level_s1),
+                       list(level_p2), list(level_s2), list(level_floor),
+                       strides, owner, limit)

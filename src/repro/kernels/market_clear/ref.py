@@ -3,12 +3,27 @@
 Given the resting-bid table of one type-tree and the regular topology
 (per-level node aggregates), compute for every leaf:
 
-  rate   = max(path floor, best covering bid price, owner-excluded)
-  winner = bid id of the best covering bid (or -1)
+  rate        = max(path floor, best covering bid price, owner-excluded)
+  winner_slot = bid-table slot of the best owner-excluded covering bid
+                whose price meets the leaf's path floor (or -1)
+  evict       = 1 where the leaf is owned and rate exceeds the owner's
+                retention limit (the eviction mask; min-holding deferral
+                is applied by the engine, which also knows the clock)
 
 This is the dense re-expression of the paper's matching hot path
-(DESIGN.md §3): per-level segment top-2 of bids + a depth-bounded
+(DESIGN.md §3): per-level segment aggregates of bids + a depth-bounded
 ancestor-path combine.
+
+Owner exclusion is EXACT here: per node we keep the best bid (p1, from
+tenant o1, earliest slot s1) and the best bid from any OTHER tenant
+(p2, earliest slot s2).  For a leaf owned by ``o1`` the effective book
+pressure is (p2, s2) — excluding o1 removes *all* of o1's bids, and the
+best of the rest is by construction the best bid from a different
+tenant.  For any other owner it is (p1, s1).  (A plain "top-2 prices"
+aggregate is wrong when one tenant holds both top bids.)
+
+Tie-breaks mirror the event-driven engine: price desc, then arrival
+(slot asc) — the ring-buffer slot order is arrival order.
 """
 from __future__ import annotations
 
@@ -18,62 +33,99 @@ import jax
 import jax.numpy as jnp
 
 NEG = -1e30
+EPSF = 1e-6
+
+
+def segment_aggregates(prices: jax.Array, seg: jax.Array,
+                       tenants: jax.Array, n_seg: int
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                  jax.Array, jax.Array]:
+    """Per-segment best bid and best distinct-second-tenant bid.
+
+    prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 node ids;
+    tenants: (nb,) int32 tenant of each bid (-1 inactive).
+    Returns (p1, o1, s1, p2, s2), each (n_seg,):
+      p1/s1 — best price and its earliest slot; o1 — that bid's tenant;
+      p2/s2 — best price/earliest slot among tenants != o1.
+    """
+    nb = prices.shape[0]
+    live = (prices > NEG / 2) & (tenants >= 0)
+    p = jnp.where(live, prices, NEG)
+    slot = jnp.arange(nb, dtype=jnp.int32)
+    big = jnp.int32(nb)
+
+    p1 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(p)
+    is1 = live & (p >= p1[seg] - 1e-12)
+    s1 = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
+        jnp.where(is1, slot, big))
+    s1 = jnp.where(s1 >= big, -1, s1)
+    o1 = jnp.where(s1 >= 0, tenants[jnp.clip(s1, 0, nb - 1)], -1)
+
+    alt = jnp.where(live & (tenants != o1[seg]), p, NEG)
+    p2 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(alt)
+    is2 = (alt > NEG / 2) & (alt >= p2[seg] - 1e-12)
+    s2 = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
+        jnp.where(is2, slot, big))
+    s2 = jnp.where(s2 >= big, -1, s2)
+    return p1, o1, s1, p2, s2
 
 
 def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
                  n_seg: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Top-2 prices per segment (+ owner of the top-1 bid).
-
-    prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 node ids;
-    owners: (nb,) int32 tenant of each bid.
-    Returns (top1 (n_seg,), top1_owner (n_seg,), top2 (n_seg,)).
-    """
-    top1 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(prices)
-    is_top = prices >= top1[seg] - 1e-12
-    owner_of_top = jnp.full((n_seg,), -1, jnp.int32).at[
-        jnp.where(is_top, seg, n_seg - 1)].max(
-        jnp.where(is_top, owners, -1), mode="drop")
-    # top2: max over bids strictly below their segment top, PLUS duplicates
-    # of the top value (two bids at the same price)
-    dup = jnp.full((n_seg,), 0, jnp.int32).at[
-        jnp.where(is_top, seg, 0)].add(jnp.where(is_top, 1, 0), mode="drop")
-    below = jnp.where(is_top, NEG, prices)
-    top2 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(below)
-    top2 = jnp.where(dup >= 2, top1, top2)
-    return top1, owner_of_top, top2
+    """Compatibility wrapper: (top1, top1_owner, top2) per segment, where
+    top2 is the best bid from a tenant OTHER than top1's (the correct
+    owner-exclusion runner-up)."""
+    p1, o1, _, p2, _ = segment_aggregates(prices, seg, owners, n_seg)
+    return p1, o1, p2
 
 
-def clear_ref(level_top1: Sequence[jax.Array],
-              level_owner: Sequence[jax.Array],
-              level_top2: Sequence[jax.Array],
+def clear_ref(level_p1: Sequence[jax.Array],
+              level_o1: Sequence[jax.Array],
+              level_s1: Sequence[jax.Array],
+              level_p2: Sequence[jax.Array],
+              level_s2: Sequence[jax.Array],
               level_floor: Sequence[jax.Array],
               strides: Sequence[int],
-              owner: jax.Array) -> Tuple[jax.Array, jax.Array]:
+              owner: jax.Array,
+              limit: jax.Array
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Combine per-level aggregates down the ancestor path of each leaf.
 
     Level d arrays have one entry per node at that level; leaf i's ancestor
     at level d is i // strides[d] (regular tree). ``owner``: (n_leaves,)
-    int32 current owner of each leaf.
+    int32 current owner of each leaf (-1 = operator/idle); ``limit``:
+    (n_leaves,) f32 retention limit of the current owner.
 
-    Returns (rate (n_leaves,), best_level (n_leaves,) int32 — the level
-    whose book holds the winning bid, or -1 if only the floor binds).
+    Returns (rate, best_level, winner_slot, evict) — see module docstring.
     """
     n_leaves = owner.shape[0]
-    rate = jnp.zeros((n_leaves,), jnp.float32)
+    leaf = jnp.arange(n_leaves)
+    floor = jnp.zeros((n_leaves,), jnp.float32)
     best_bid = jnp.full((n_leaves,), NEG, jnp.float32)
     best_level = jnp.full((n_leaves,), -1, jnp.int32)
+    best_slot = jnp.full((n_leaves,), -1, jnp.int32)
     for d, s in enumerate(strides):
-        idx = jnp.arange(n_leaves) // s
-        t1 = level_top1[d][idx]
-        own1 = level_owner[d][idx]
-        t2 = level_top2[d][idx]
+        idx = leaf // s
+        p1 = level_p1[d][idx]
+        o1 = level_o1[d][idx]
+        s1 = level_s1[d][idx]
+        p2 = level_p2[d][idx]
+        s2 = level_s2[d][idx]
         fl = level_floor[d][idx]
-        # owner exclusion: if the top bid at this node is the leaf owner's
-        # own order, the effective pressure is the runner-up
-        eff = jnp.where(own1 == owner, t2, t1)
-        rate = jnp.maximum(rate, fl)
-        better = eff > best_bid
-        best_bid = jnp.where(better, eff, best_bid)
-        best_level = jnp.where(better & (eff > NEG / 2), d, best_level)
-    rate = jnp.maximum(rate, jnp.maximum(best_bid, 0.0))
-    return rate, best_level
+        excl = (o1 == owner) & (owner >= 0)
+        eff = jnp.where(excl, p2, p1)
+        esl = jnp.where(excl, s2, s1)
+        floor = jnp.maximum(floor, fl)
+        live = eff > NEG / 2
+        # price desc, then earliest arrival (lowest slot) across books
+        tie = live & (eff == best_bid) & (esl >= 0) \
+            & ((best_slot < 0) | (esl < best_slot))
+        take = (eff > best_bid) | tie
+        best_bid = jnp.where(take, eff, best_bid)
+        best_level = jnp.where(take & live, d, best_level)
+        best_slot = jnp.where(take & live, esl, best_slot)
+    rate = jnp.maximum(floor, jnp.maximum(best_bid, 0.0))
+    ok = (best_slot >= 0) & (best_bid >= floor - EPSF)
+    winner_slot = jnp.where(ok, best_slot, -1)
+    evict = ((owner >= 0) & (rate > limit + EPSF)).astype(jnp.int32)
+    return rate, best_level, winner_slot, evict

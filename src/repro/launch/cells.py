@@ -25,6 +25,15 @@ def _sds(shape, dtype):
     return jax.ShapeDtypeStruct(shape, dtype)
 
 
+def cost_analysis_dict(compiled) -> Dict[str, float]:
+    """``Compiled.cost_analysis()`` returns a dict on newer JAX and a
+    one-entry list of dicts on older releases; normalize to a dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
 def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
     """Abstract batch inputs for an (arch, shape) cell (train / prefill)."""
     B, Sq = shape.global_batch, shape.seq_len

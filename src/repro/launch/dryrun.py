@@ -152,7 +152,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
     import jax  # after XLA_FLAGS
     from repro.configs import get_config, SHAPES, applicable_shapes
     from repro.launch.mesh import make_production_mesh
-    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.cells import build_cell, cost_analysis_dict, \
+        lower_cell
     from repro.launch import analytic
 
     cfg = get_config(arch)
@@ -179,7 +180,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         t1 = time.time()
         compiled = lowered.compile()
         t2 = time.time()
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         ma = compiled.memory_analysis()
         print(f"[{arch} {shape_name} {mesh_kind}] memory_analysis:", ma,
               flush=True)
@@ -206,7 +207,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
                 cellk = build_cell(ck, shape, mesh, scan_layers=False)
                 lk = lower_cell(cellk)
                 compk = lk.compile()
-                cak = compk.cost_analysis() or {}
+                cak = cost_analysis_dict(compk)
                 probes[k] = {
                     "flops": cak.get("flops", 0.0),
                     "bytes": cak.get("bytes accessed", 0.0),

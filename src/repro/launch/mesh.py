@@ -12,22 +12,28 @@ from typing import Tuple
 
 import jax
 
+# ``jax.sharding.AxisType`` only exists in newer JAX releases; older ones
+# default every axis to auto sharding, so the kwarg is simply omitted.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def _mesh_kwargs(n_axes: int) -> dict:
+    if _AXIS_TYPE is None:
+        return {}
+    return {"axis_types": (_AXIS_TYPE.Auto,) * n_axes}
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """Single pod: (data=16, model=16) = 256 chips.
     Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh for tests / elastic re-meshing."""
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_mesh_kwargs(len(axes)))
 
 
 def dp_axes(mesh: jax.sharding.Mesh) -> Tuple[str, ...]:

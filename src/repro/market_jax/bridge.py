@@ -1,0 +1,372 @@
+"""BatchMarket: a ``repro.core.market.Market``-compatible facade over the
+JAX batch engine (the int-tenant-id mapping layer).
+
+The simulator, EconAdapters and tests speak the event-driven Market's
+vocabulary: string tenants, Topology node ids, synchronous place/cancel/
+relinquish calls. The batch engine speaks dense arrays: int tenant ids,
+(level, node-index) scopes over one regular ``TreeSpec`` per resource
+type. This facade owns the mapping:
+
+  * string tenant  <-> dense int id (< n_tenants), interned on first use;
+  * Topology node  <-> (rtype, level-from-leaf d, node index), derived
+    from the DFS leaf order (build_cluster fills sequentially, so node k
+    at level d covers leaves [k*stride_d, (k+1)*stride_d));
+  * every mutating call runs one jitted ``BatchEngine.step`` at the
+    current clock, so callers observe the same synchronous semantics as
+    the event engine (tests/test_differential.py replays identical traces
+    through both and asserts matching owners, rates and bills).
+
+One engine per resource type (each type root is its own tree, exactly as
+the event market keeps one book forest).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.market import OPERATOR, TICK, VisibilityError, \
+    VolatilityControls
+from repro.core.topology import Topology
+from repro.market_jax.engine import NEG, BatchEngine, TreeSpec
+
+
+@dataclass
+class _Order:
+    """Lightweight handle mirroring ``market.Order`` for adapter code.
+    ``gen`` guards against ring-buffer slot reuse: a stale handle whose
+    slot was recycled reports inactive instead of aliasing the newer
+    order."""
+    order_id: int
+    tenant: str
+    scope: int
+    price: float
+    limit: float
+    rtype: str
+    slot: int
+    gen: int
+    market: "BatchMarket"
+
+    @property
+    def active(self) -> bool:
+        if self.market._slot_gen[self.rtype][self.slot] != self.gen:
+            return False
+        host = self.market._host(self.rtype)
+        return bool(host["tenant"][self.slot]
+                    == self.market._tenant_id(self.tenant)) \
+            and host["price"][self.slot] > NEG / 2
+
+
+class BatchMarket:
+    """Market-compatible surface over per-rtype BatchEngines."""
+
+    def __init__(self, topo: Topology,
+                 controls: Optional[VolatilityControls] = None,
+                 capacity: int = 1 << 12, n_tenants: int = 256,
+                 use_pallas: bool = False) -> None:
+        self.topo = topo
+        self.controls = controls or VolatilityControls()
+        self.now = 0.0
+        self.n_tenants = n_tenants
+        self.engines: Dict[str, BatchEngine] = {}
+        self.states: Dict[str, dict] = {}
+        self._np: Dict[str, Optional[dict]] = {}
+        # topology <-> dense layout maps
+        self._leaf_local: Dict[int, Tuple[str, int]] = {}
+        self._leaf_global: Dict[str, List[int]] = {}
+        self._node_map: Dict[int, Tuple[str, int, int]] = {}
+        self._tenants: Dict[str, int] = {}
+        self._tenant_names: List[str] = []
+        self.orders: Dict[int, _Order] = {}
+        self._slot_gen: Dict[str, np.ndarray] = {}
+        self._next_oid = 0
+        self.bills: Dict[str, float] = {}
+        self.on_transfer: List[Callable] = []
+        self.stats = {"orders": 0, "transfers": 0, "implicit_relinquish": 0,
+                      "explicit_relinquish": 0, "cancels": 0}
+        for rtype, root in topo.roots.items():
+            self._build_tree(rtype, root, capacity, use_pallas)
+
+    # ---------------------------------------------------------- layout
+    def _build_tree(self, rtype: str, root: int, capacity: int,
+                    use_pallas: bool) -> None:
+        topo = self.topo
+        leaves = topo.leaves_of(root)
+        depth = max(len(topo.ancestors(l)) for l in leaves)
+        assert all(len(topo.ancestors(l)) == depth for l in leaves), \
+            "BatchMarket needs uniform-depth trees"
+        self._leaf_global[rtype] = list(leaves)
+        leaf_pos = {leaf: i for i, leaf in enumerate(leaves)}
+        for leaf, i in leaf_pos.items():
+            self._leaf_local[leaf] = (rtype, i)
+        # stride at level d (from leaf) = max leaf count under any node
+        # at that level; build_cluster fills sequentially so only tail
+        # nodes are partial and node index = first_leaf // stride
+        by_level: Dict[int, List[int]] = {}
+        for leaf in leaves:
+            for d, nid in enumerate(topo.ancestors(leaf)):
+                by_level.setdefault(d, [])
+                if nid not in by_level[d]:
+                    by_level[d].append(nid)
+        strides = []
+        for d in range(depth):
+            strides.append(max(len(topo.leaves_of(nid))
+                               for nid in by_level[d]))
+        tree = TreeSpec(n_leaves=len(leaves), strides=tuple(strides))
+        for d in range(depth):
+            for nid in by_level[d]:
+                idx = leaf_pos[topo.leaves_of(nid)[0]] // strides[d]
+                assert idx < tree.nodes_at(d), (rtype, d, nid)
+                self._node_map[nid] = (rtype, d, idx)
+        eng = BatchEngine(tree, capacity=capacity, use_pallas=use_pallas,
+                          n_tenants=self.n_tenants,
+                          controls=self.controls)
+        self.engines[rtype] = eng
+        self.states[rtype] = eng.init_state()
+        self._np[rtype] = None
+        self._slot_gen[rtype] = np.zeros(capacity, np.int64)
+
+    def _tenant_id(self, tenant: str) -> int:
+        tid = self._tenants.get(tenant)
+        if tid is None:
+            tid = len(self._tenant_names)
+            assert tid < self.n_tenants, "tenant table full"
+            self._tenants[tenant] = tid
+            self._tenant_names.append(tenant)
+        return tid
+
+    def _tenant_name(self, tid: int) -> str:
+        return self._tenant_names[tid] if tid >= 0 else OPERATOR
+
+    def _host(self, rtype: str) -> dict:
+        """Host (numpy) view of the engine state, cached per step."""
+        h = self._np[rtype]
+        if h is None:
+            st = self.states[rtype]
+            h = {k: np.asarray(st[k]) for k in
+                 ("price", "blimit", "level", "node", "tenant", "owner",
+                  "limit", "rate", "bills")}
+            h["floor"] = [np.asarray(f) for f in st["floor"]]
+            self._np[rtype] = h
+        return h
+
+    # ------------------------------------------------------------ steps
+    def _step(self, rtype: str, new_bids=None, floors=None,
+              relinquish=None, explicit: Set[int] = frozenset()) -> None:
+        eng = self.engines[rtype]
+        st, transfers, _ = eng.step(self.states[rtype], self.now,
+                                    new_bids, floors, relinquish)
+        self.states[rtype] = st
+        self._np[rtype] = None
+        self._fire(rtype, transfers, explicit)
+
+    def _fire(self, rtype: str, transfers, explicit: Set[int]) -> None:
+        moved = np.asarray(transfers["moved"])
+        if not moved.any():
+            return
+        old = np.asarray(transfers["old"])
+        new = np.asarray(transfers["new"])
+        rates = self._host(rtype)["rate"]
+        leaves = self._leaf_global[rtype]
+        for i in np.nonzero(moved)[0]:
+            leaf = leaves[i]
+            if int(new[i]) >= 0:
+                reason = "explicit" if i in explicit else (
+                    "match" if int(old[i]) < 0 else "limit")
+                self.stats["transfers"] += 1
+                if reason == "limit":
+                    self.stats["implicit_relinquish"] += 1
+            else:
+                reason = "explicit" if i in explicit else "reclaim"
+            for cb in self.on_transfer:
+                cb(self.now, leaf, self._tenant_name(int(old[i])),
+                   self._tenant_name(int(new[i])), float(rates[i]),
+                   reason)
+
+    @staticmethod
+    def _bid_arrays(price, limit, level, node, tenant):
+        return {"price": jnp.array([price], jnp.float32),
+                "limit": jnp.array([limit], jnp.float32),
+                "level": jnp.array([level], jnp.int32),
+                "node": jnp.array([node], jnp.int32),
+                "tenant": jnp.array([tenant], jnp.int32)}
+
+    # ----------------------------------------------------------- tenants
+    def advance_to(self, t: float) -> None:
+        assert t >= self.now - 1e-9, (t, self.now)
+        if t <= self.now:
+            return
+        self.now = max(self.now, t)
+        for rtype in self.engines:
+            self._step(rtype)
+
+    def place_order(self, tenant: str, scope: int, price: float,
+                    limit: Optional[float] = None) -> int:
+        assert tenant != OPERATOR
+        rtype, d, idx = self._node_map[scope]
+        tid = self._tenant_id(tenant)
+        limit = limit if limit is not None else price
+        slot = int(self.states[rtype]["head"])
+        host = self._host(rtype)
+        if host["price"][slot] > NEG / 2 and host["tenant"][slot] >= 0:
+            # the ring cursor wrapped onto a LIVE resting order; silently
+            # overwriting it would corrupt the book — fail loudly
+            raise RuntimeError(
+                f"{rtype} bid table full (capacity "
+                f"{self.engines[rtype].capacity}): ring wrapped onto a "
+                f"live order; raise BatchMarket(capacity=...)")
+        self._slot_gen[rtype][slot] += 1
+        self._step(rtype, new_bids=self._bid_arrays(
+            price, limit, d, idx, tid))
+        oid = self._next_oid
+        self._next_oid += 1
+        self.orders[oid] = _Order(oid, tenant, scope, price, limit,
+                                  rtype, slot,
+                                  int(self._slot_gen[rtype][slot]), self)
+        self.stats["orders"] += 1
+        return oid
+
+    def cancel_order(self, tenant: str, order_id: int) -> None:
+        o = self.orders.get(order_id)
+        if o is None or not o.active:
+            return
+        assert o.tenant == tenant
+        eng = self.engines[o.rtype]
+        self.states[o.rtype] = eng.cancel(
+            self.states[o.rtype], jnp.array([o.slot], jnp.int32))
+        self._np[o.rtype] = None
+        self.stats["cancels"] += 1
+        # re-clear at the same timestamp so cached rates refresh
+        self._step(o.rtype)
+
+    def relinquish(self, tenant: str, leaf: int) -> None:
+        rtype, i = self._leaf_local[leaf]
+        host = self._host(rtype)
+        assert int(host["owner"][i]) == self._tenant_id(tenant), \
+            (self.owner_of(leaf), tenant)
+        self.stats["explicit_relinquish"] += 1
+        self._step(rtype, relinquish=jnp.array([i], jnp.int32),
+                   explicit={i})
+
+    def set_retention_limit(self, tenant: str, leaf: int,
+                            limit: float) -> None:
+        rtype, i = self._leaf_local[leaf]
+        host = self._host(rtype)
+        assert int(host["owner"][i]) == self._tenant_id(tenant)
+        st = dict(self.states[rtype])
+        st["limit"] = st["limit"].at[i].set(limit)
+        self.states[rtype] = st
+        self._np[rtype] = None
+        self._step(rtype)   # the new limit may fire an eviction
+
+    # ----------------------------------------------------------- operator
+    def set_floor(self, node: int, price: float) -> None:
+        rtype, d, idx = self._node_map[node]
+        eng = self.engines[rtype]
+        floors = [jnp.full((eng.tree.nodes_at(l),), -1.0, jnp.float32)
+                  for l in range(eng.tree.n_levels)]
+        floors[d] = floors[d].at[idx].set(price)
+        self._step(rtype, floors=tuple(floors))
+
+    def floor(self, leaf: int) -> float:
+        rtype, i = self._leaf_local[leaf]
+        host = self._host(rtype)
+        strides = self.engines[rtype].tree.strides
+        return max(float(host["floor"][d][i // s])
+                   for d, s in enumerate(strides))
+
+    # ------------------------------------------------------------ queries
+    def market_rate(self, leaf: int) -> float:
+        rtype, i = self._leaf_local[leaf]
+        return float(self._host(rtype)["rate"][i])
+
+    def owner_of(self, leaf: int) -> str:
+        rtype, i = self._leaf_local[leaf]
+        return self._tenant_name(int(self._host(rtype)["owner"][i]))
+
+    def owned_leaves(self, tenant: str) -> Set[int]:
+        tid = self._tenants.get(tenant)
+        if tid is None:
+            return set()
+        out: Set[int] = set()
+        for rtype, leaves in self._leaf_global.items():
+            owner = self._host(rtype)["owner"]
+            out.update(leaves[i] for i in np.nonzero(owner == tid)[0])
+        return out
+
+    def tenant_orders(self, tenant: str) -> List[_Order]:
+        return [o for o in self.orders.values()
+                if o.tenant == tenant and o.active]
+
+    def visible_domain(self, tenant: str) -> Set[int]:
+        dom: Set[int] = set(self.topo.roots.values())
+        for leaf in self.owned_leaves(tenant):
+            dom.update(self.topo.ancestors(leaf))
+        return dom
+
+    def _best_excl(self, rtype: str, i: int, exclude_tid: int) -> float:
+        """Best live covering bid price for local leaf i, excluding one
+        tenant (vectorized over the bid table)."""
+        host = self._host(rtype)
+        strides = np.array(self.engines[rtype].tree.strides)
+        live = (host["price"] > NEG / 2) & (host["tenant"] >= 0) \
+            & (host["tenant"] != exclude_tid)
+        covers = host["node"] == (i // strides[host["level"]])
+        prices = np.where(live & covers, host["price"], NEG)
+        best = float(prices.max()) if prices.size else NEG
+        return best
+
+    def acquire_price(self, leaf: int, tenant: str) -> float:
+        rtype, i = self._leaf_local[leaf]
+        host = self._host(rtype)
+        tid = self._tenant_id(tenant)
+        if int(host["owner"][i]) == tid:
+            return math.inf
+        best = self._best_excl(rtype, i, tid)
+        comp = max(self.floor(leaf), best + TICK if best > NEG / 2 else 0.0)
+        if int(host["owner"][i]) < 0:
+            return comp
+        lim = float(host["limit"][i])
+        if math.isinf(lim):
+            return math.inf
+        return max(comp, lim + TICK)
+
+    def query_price(self, tenant: str, scope: int,
+                    enforce_visibility: bool = True) -> float:
+        if enforce_visibility and scope not in self.visible_domain(tenant):
+            raise VisibilityError(
+                f"{tenant} may not query node {scope}; visible domain is "
+                f"roots + ancestors of owned resources")
+        return min((self.acquire_price(leaf, tenant)
+                    for leaf in self.topo.leaves_of(scope)),
+                   default=math.inf)
+
+    # ------------------------------------------------------------ billing
+    def settle(self, t: Optional[float] = None) -> Dict[str, float]:
+        if t is not None:
+            self.advance_to(t)
+        else:
+            # force a zero-dt step so rates are current (cheap no-op when
+            # nothing changed; billing itself is exact between steps)
+            pass
+        bills: Dict[str, float] = {}
+        for rtype in self.engines:
+            st = self.states[rtype]
+            vec = np.asarray(st["bills"])
+            # add the accrual since the last step without mutating state
+            dt_h = max(self.now - float(st["t"]), 0.0) / 3600.0
+            owner = np.asarray(st["owner"])
+            rate = np.asarray(st["rate"])
+            extra = np.zeros_like(vec)
+            if dt_h > 0:
+                np.add.at(extra, owner[owner >= 0],
+                          rate[owner >= 0] * dt_h)
+            for tid, total in enumerate(vec + extra):
+                if total != 0.0:
+                    name = self._tenant_name(tid)
+                    bills[name] = bills.get(name, 0.0) + float(total)
+        self.bills = bills
+        return dict(bills)

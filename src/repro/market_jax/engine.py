@@ -1,26 +1,61 @@
-"""Batch market engine: the paper's matching hot path as fixed-shape array
-ops (beyond-paper scale path; the event-driven ``repro.core.market`` is the
-paper-faithful reference).
+"""Batch market engine: the paper's full renegotiation loop as fixed-shape
+array ops (beyond-paper scale path; the event-driven ``repro.core.market``
+is the paper-faithful reference, and tests/test_differential.py pins the
+two against each other on random traces).
 
 One type-tree with regular strides (leaf ancestor at level d = leaf //
-stride[d]). The engine holds a bounded bid table and recomputes per-level
-top-2 aggregates with segment reductions, then runs the clearing pass
-(jnp oracle or the Pallas kernel). All mutating ops are jitted and
-functional — suited to running thousands of requests per batch.
+stride[d]). The engine holds a bounded bid table (a ring buffer of OCO
+scoped orders) plus per-leaf ownership state and per-tenant bills, and the
+jitted ``step`` runs one complete market epoch:
+
+  step(state, t, new_bids, floor_updates, relinquish)
+      -> (state, transfers, bills)
+
+  1. **Billing accrual** — every owned leaf accrues ``rate * dt`` into its
+     owner's bill (``bill = ∫ rate dt``), where ``rate`` is the cached
+     charged rate from the end of the previous step (rates only change at
+     step boundaries, so the integral is exact).
+  2. **Deferred evictions** — retention-limit crossings deferred by
+     ``min_holding_s`` fire once the holding window has elapsed.
+  3. **Operator floor updates** — per-level proposals (-1 = no change);
+     drops are bounded by ``floor_fall_rate`` per hour since that node's
+     last update.
+  4. **Bid admission** — incoming bids are clipped to ``max_bid_multiple``
+     x the scope's reference price (max of path floors, top of the scope's
+     book, charged rates under the scope) and inserted into the table.
+  5. **Clear / evict / transfer cascade** — repeat until fixpoint:
+     recompute per-level aggregates and the clearing pass (jnp oracle or
+     Pallas kernel: per-leaf charged rate, owner-excluded winning bid,
+     eviction mask); evict owners whose rate exceeds their retention limit
+     (outside the min-holding window); hand each evicted / explicitly
+     relinquished / idle leaf to its best covering bid meeting the path
+     floor (OCO: a winning order is consumed everywhere atomically, and a
+     single order wins at most one leaf per wave — contested leaves retry
+     against the runner-up next wave); leaves nobody covers fall back to
+     the operator.  The loop is a ``lax.while_loop`` so the whole step
+     stays jitted.
+
+``transfers`` reports per-leaf {moved, old, new} owner ids for the step;
+``bills`` is the cumulative per-tenant bill vector. Tenants are dense int
+ids (< n_tenants); ``repro.market_jax.bridge`` maps the simulator's string
+tenants and Topology node ids onto this layout.
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
+from repro.core.market import VolatilityControls
 from repro.kernels.market_clear import ref as R
 from repro.kernels.market_clear import ops as clear_ops
 
 NEG = R.NEG
+EPSF = R.EPSF
 
 
 @dataclass(frozen=True)
@@ -40,41 +75,70 @@ class TreeSpec:
 
 class BatchEngine:
     def __init__(self, tree: TreeSpec, capacity: int = 1 << 16,
-                 use_pallas: bool = False) -> None:
+                 use_pallas: bool = False, n_tenants: int = 1024,
+                 controls: Optional[VolatilityControls] = None,
+                 interpret: bool = True) -> None:
         self.tree = tree
         self.capacity = capacity
         self.use_pallas = use_pallas
+        self.n_tenants = n_tenants
+        self.controls = controls or VolatilityControls()
+        self.interpret = interpret
 
     def init_state(self) -> Dict[str, jax.Array]:
         t = self.tree
         return {
+            # bid table (ring buffer of OCO scoped orders)
             "price": jnp.full((self.capacity,), NEG, jnp.float32),
+            "blimit": jnp.full((self.capacity,), jnp.inf, jnp.float32),
             "level": jnp.zeros((self.capacity,), jnp.int32),
             "node": jnp.zeros((self.capacity,), jnp.int32),
             "tenant": jnp.full((self.capacity,), -1, jnp.int32),
             "head": jnp.zeros((), jnp.int32),       # ring-buffer cursor
+            # per-leaf ownership
             "owner": jnp.full((t.n_leaves,), -1, jnp.int32),
             "limit": jnp.full((t.n_leaves,), jnp.inf, jnp.float32),
+            "acq_t": jnp.zeros((t.n_leaves,), jnp.float32),
+            "rate": jnp.zeros((t.n_leaves,), jnp.float32),
+            # billing
+            "bills": jnp.zeros((self.n_tenants,), jnp.float32),
+            "t": jnp.zeros((), jnp.float32),
+            # operator floors (+ per-node last-update time for the
+            # floor_fall_rate bound); lists so callers can seed floors
+            # by item assignment — step normalizes to tuples
             "floor": [jnp.zeros((t.nodes_at(d),), jnp.float32)
                       for d in range(t.n_levels)],
+            "floor_t": [jnp.zeros((t.nodes_at(d),), jnp.float32)
+                        for d in range(t.n_levels)],
         }
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
-    def place(self, state, prices, levels, nodes, tenants):
-        """Insert a batch of scoped bids (ring-buffer slots)."""
+    def place(self, state, prices, levels, nodes, tenants, limits=None):
+        """Insert a batch of scoped bids (ring-buffer slots). NOTE: this
+        low-level insert skips volatility clipping and does not re-clear;
+        use ``step`` for full semantics."""
+        if limits is None:
+            limits = prices
         n = prices.shape[0]
         idx = (state["head"] + jnp.arange(n)) % self.capacity
+        live = tenants >= 0
         state = dict(state)
-        state["price"] = state["price"].at[idx].set(prices)
+        state["price"] = state["price"].at[idx].set(
+            jnp.where(live, prices, NEG))
+        state["blimit"] = state["blimit"].at[idx].set(
+            jnp.maximum(prices, limits))
         state["level"] = state["level"].at[idx].set(levels)
         state["node"] = state["node"].at[idx].set(nodes)
-        state["tenant"] = state["tenant"].at[idx].set(tenants)
+        state["tenant"] = state["tenant"].at[idx].set(
+            jnp.where(live, tenants, -1))
         state["head"] = (state["head"] + n) % self.capacity
         return state
 
     @functools.partial(jax.jit, static_argnums=0)
     def cancel(self, state, bid_ids):
+        """Deactivate bid slots. Follow with a zero-event ``step`` at the
+        same timestamp so cached rates refresh before billing resumes."""
         state = dict(state)
         state["price"] = state["price"].at[bid_ids].set(NEG)
         state["tenant"] = state["tenant"].at[bid_ids].set(-1)
@@ -82,66 +146,208 @@ class BatchEngine:
 
     # ------------------------------------------------------------------
     def _aggregates(self, state):
+        """Per-level owner-exclusion aggregates (p1, o1, s1, p2, s2)."""
         t = self.tree
-        top1, own1, top2, arg1 = [], [], [], []
+        p1s, o1s, s1s, p2s, s2s = [], [], [], [], []
         for d in range(t.n_levels):
             n_d = t.nodes_at(d)
-            mask = state["level"] == d
+            mask = (state["level"] == d) & (state["tenant"] >= 0)
             prices = jnp.where(mask, state["price"], NEG)
             seg = jnp.clip(state["node"], 0, n_d - 1)
-            a, o, b = R.segment_top2(prices, seg, state["tenant"], n_d)
-            # arg of top-1 (bid slot) for transfers
-            is_top = (prices >= a[seg] - 1e-12) & mask & (prices > NEG / 2)
-            slot = jnp.arange(self.capacity, dtype=jnp.int32)
-            arg = jnp.full((n_d,), -1, jnp.int32).at[
-                jnp.where(is_top, seg, 0)].max(
-                jnp.where(is_top, slot, -1), mode="drop")
-            top1.append(a)
-            own1.append(o)
-            top2.append(b)
-            arg1.append(arg)
-        return top1, own1, top2, arg1
+            p1, o1, s1, p2, s2 = R.segment_aggregates(
+                prices, seg, state["tenant"], n_d)
+            p1s.append(p1)
+            o1s.append(o1)
+            s1s.append(s1)
+            p2s.append(p2)
+            s2s.append(s2)
+        return p1s, o1s, s1s, p2s, s2s
+
+    def _clear_arrays(self, state, interpret: Optional[bool] = None):
+        p1s, o1s, s1s, p2s, s2s = self._aggregates(state)
+        return clear_ops.clear(
+            tuple(p1s), tuple(o1s), tuple(s1s), tuple(p2s), tuple(s2s),
+            tuple(state["floor"]), self.tree.strides, state["owner"],
+            state["limit"], use_pallas=self.use_pallas,
+            interpret=self.interpret if interpret is None else interpret)
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
     def clear(self, state, interpret: bool = True):
-        """Full clearing pass: per-leaf charged rate + winning level."""
-        t = self.tree
-        top1, own1, top2, arg1 = self._aggregates(state)
-        rate, best_level = clear_ops.clear(
-            tuple(top1), tuple(own1), tuple(top2), tuple(state["floor"]),
-            t.strides, state["owner"], use_pallas=self.use_pallas,
-            interpret=interpret)
-        return rate, best_level, arg1
+        """Full clearing pass: per-leaf charged rate, winning level, and
+        winning (owner-excluded, floor-gated) bid slot."""
+        rate, best_level, winner_slot, _ = self._clear_arrays(
+            state, interpret)
+        return rate, best_level, winner_slot
 
-    @functools.partial(jax.jit, static_argnums=0)
-    def transfer(self, state, rate, best_level, arg1, relinquished):
-        """Hand each relinquished leaf to its best covering bid (consuming
-        the OCO order) or back to the operator (-1)."""
-        t = self.tree
-        state = dict(state)
-        lvl = best_level[relinquished]
-        # winning bid slot per leaf: arg1[level][leaf // stride[level]]
-        slots = jnp.full(relinquished.shape, -1, jnp.int32)
-        for d in range(t.n_levels):
-            nd = relinquished // t.strides[d]
-            slots = jnp.where(lvl == d, arg1[d][nd], slots)
-        # OCO within the batch: one order may win at most ONE leaf — the
-        # first (lowest-index) relinquished leaf claims the slot; the rest
-        # fall to the operator and re-clear against the runner-up next pass
-        m = relinquished.shape[0]
-        same = (slots[None, :] == slots[:, None]) \
-            & (jnp.arange(m)[None, :] < jnp.arange(m)[:, None])
-        dup = jnp.any(same, axis=1)
-        slots = jnp.where(dup, -1, slots)
-        winner = jnp.where(slots >= 0, state["tenant"][slots], -1)
-        state["owner"] = state["owner"].at[relinquished].set(winner)
-        # consume winning orders (OCO set dissolves atomically)
-        safe = jnp.where(slots >= 0, slots, 0)
-        state["price"] = state["price"].at[safe].set(
-            jnp.where(slots >= 0, NEG, state["price"][safe]))
-        state["tenant"] = state["tenant"].at[safe].set(
-            jnp.where(slots >= 0, -1, state["tenant"][safe]))
+    # ------------------------------------------------------------------
+    def _clip_bids(self, state, prices, levels, nodes):
+        """Volatility control: clip each incoming bid to max_bid_multiple
+        x its scope's reference price (max of path floors, top of the
+        scope's own book, charged rates under the scope); a zero reference
+        disables clipping, mirroring the event engine."""
+        mult = self.controls.max_bid_multiple
+        if mult <= 0:
+            return prices
+        tree = self.tree
+        strides = jnp.array(tree.strides, jnp.int32)
+        first_leaf = nodes * strides[levels]
+        leaf_ids = jnp.arange(tree.n_leaves, dtype=jnp.int32)
+        live = (state["price"] > NEG / 2) & (state["tenant"] >= 0)
+        ref = jnp.zeros(prices.shape, jnp.float32)
+        # all O(capacity + n_leaves + n_bids) per level: segment maxima
+        # per node, gathered per incoming bid
+        for d2, s2 in enumerate(tree.strides):
+            n_d = tree.nodes_at(d2)
+            anc = jnp.clip(first_leaf // s2, 0, n_d - 1)
+            # path floors (ancestors of the scope, i.e. levels >= scope's)
+            f = state["floor"][d2][anc]
+            ref = jnp.maximum(ref, jnp.where(d2 >= levels, f, 0.0))
+            # top of the scope's own book
+            seg = jnp.clip(state["node"], 0, n_d - 1)
+            at_d2 = live & (state["level"] == d2)
+            top_d2 = jnp.full((n_d,), NEG, jnp.float32).at[seg].max(
+                jnp.where(at_d2, state["price"], NEG))
+            top = top_d2[jnp.clip(nodes, 0, n_d - 1)]
+            ref = jnp.maximum(ref, jnp.where(
+                (d2 == levels) & (top > NEG / 2), top, 0.0))
+            # max charged rate among leaves under the scope
+            rmax_d2 = jnp.zeros((n_d,), jnp.float32).at[
+                leaf_ids // s2].max(state["rate"])
+            ref = jnp.maximum(ref, jnp.where(
+                d2 == levels, rmax_d2[jnp.clip(nodes, 0, n_d - 1)], 0.0))
+        return jnp.where(ref > 0, jnp.minimum(prices, ref * mult), prices)
+
+    # ------------------------------------------------------------------
+    def _cascade(self, state, t, release):
+        """Clear / evict / transfer to fixpoint (see module docstring)."""
+        n_leaves = self.tree.n_leaves
+        leafid = jnp.arange(n_leaves, dtype=jnp.int32)
+        min_hold = self.controls.min_holding_s
+
+        def body(carry):
+            st, rel, _ = carry
+            rate, _lvl, slot, evict_p = self._clear_arrays(st)
+            st = dict(st)
+            st["rate"] = rate
+            owner = st["owner"]
+            evict = evict_p != 0
+            if min_hold > 0:
+                evict = evict & ((t - st["acq_t"]) >= min_hold)
+            sell = (owner < 0) & (slot >= 0)        # idle supply matching
+            # idle supply FIRST (matching Market._try_immediate_match):
+            # while any marketable bid can still fill an idle leaf, its
+            # pressure must not evict anyone — it will be consumed
+            sell_pending = jnp.any(sell)
+            evict = evict & ~sell_pending
+            releasing = rel & (owner >= 0) & ~sell_pending
+            moving = evict | releasing
+            claim = (moving | sell) & (slot >= 0)
+            # OCO within a wave: one order wins at most one leaf — the
+            # lowest-index claiming leaf takes the slot; contested
+            # evictions re-decide against the runner-up next wave
+            claimer = jnp.full((self.capacity,), n_leaves, jnp.int32).at[
+                jnp.where(claim, slot, self.capacity)].min(
+                jnp.where(claim, leafid, n_leaves), mode="drop")
+            slot_safe = jnp.clip(slot, 0, self.capacity - 1)
+            win = claim & (claimer[slot_safe] == leafid)
+            reclaim = moving & (slot < 0)           # operator reclaims
+            new_own = st["tenant"][slot_safe]
+            new_lim = st["blimit"][slot_safe]
+            moved = win | reclaim
+            st["owner"] = jnp.where(win, new_own,
+                                    jnp.where(reclaim, -1, owner))
+            st["limit"] = jnp.where(win, new_lim,
+                                    jnp.where(reclaim, jnp.inf,
+                                              st["limit"]))
+            st["acq_t"] = jnp.where(moved, t, st["acq_t"])
+            # consume winning orders (the OCO set dissolves atomically)
+            cons = jnp.zeros((self.capacity,), jnp.bool_).at[
+                jnp.where(win, slot, self.capacity)].set(
+                True, mode="drop")
+            st["price"] = jnp.where(cons, NEG, st["price"])
+            st["tenant"] = jnp.where(cons, -1, st["tenant"])
+            return st, rel & ~moved, jnp.any(moved)
+
+        def cond(carry):
+            return carry[2]
+
+        state, release, _ = lax.while_loop(
+            cond, body, (state, release, jnp.asarray(True)))
         return state
+
+    # ------------------------------------------------------------------
+    @functools.partial(jax.jit, static_argnums=0)
+    def step(self, state, t, new_bids=None, floor_updates=None,
+             relinquish=None):
+        """One market epoch at time ``t`` — see module docstring.
+
+        new_bids: optional dict with (k,) arrays ``price``, ``limit``,
+            ``level``, ``node``, ``tenant`` (tenant -1 = padding).
+        floor_updates: optional per-level sequence of proposal arrays
+            (value < 0 = no change for that node).
+        relinquish: optional (m,) int32 leaf ids to explicitly release
+            (-1 = padding).
+        Returns (state, transfers, bills) where transfers is a dict of
+        per-leaf {moved, old, new} owner ids and bills the cumulative
+        per-tenant vector.
+        """
+        tree = self.tree
+        state = dict(state)
+        state["floor"] = tuple(state["floor"])
+        state["floor_t"] = tuple(state["floor_t"])
+        t = jnp.asarray(t, jnp.float32)
+        # 1) integral billing accrual at the previous step's rates
+        dt_h = jnp.maximum(t - state["t"], 0.0) / 3600.0
+        owner0 = state["owner"]
+        bill_idx = jnp.where(owner0 >= 0, owner0, self.n_tenants)
+        state["bills"] = state["bills"].at[bill_idx].add(
+            jnp.where(owner0 >= 0, state["rate"] * dt_h, 0.0),
+            mode="drop")
+        state["t"] = t
+        no_release = jnp.zeros((tree.n_leaves,), jnp.bool_)
+        # 2) deferred min-holding evictions matured by time passage fire
+        #    BEFORE this step's events (matching Market.advance_to)
+        if self.controls.min_holding_s > 0:
+            state = self._cascade(state, t, no_release)
+        # 3) operator floor updates, drops bounded by floor_fall_rate
+        if floor_updates is not None:
+            fall = self.controls.floor_fall_rate
+            floors, floor_ts = [], []
+            for d in range(tree.n_levels):
+                prop = floor_updates[d]
+                old = state["floor"][d]
+                upd = prop >= 0.0
+                if fall > 0:
+                    dt_node = jnp.maximum(
+                        t - state["floor_t"][d], 0.0) / 3600.0
+                    min_allowed = old * jnp.maximum(
+                        0.0, 1.0 - fall * dt_node)
+                    val = jnp.where(prop < old,
+                                    jnp.maximum(prop, min_allowed), prop)
+                else:
+                    val = prop
+                floors.append(jnp.where(upd, val, old))
+                floor_ts.append(jnp.where(upd, t, state["floor_t"][d]))
+            state["floor"] = tuple(floors)
+            state["floor_t"] = tuple(floor_ts)
+        # 4) admit new bids (clipped)
+        if new_bids is not None:
+            prices = self._clip_bids(state, new_bids["price"],
+                                     new_bids["level"], new_bids["node"])
+            state = dict(self.place(state, prices, new_bids["level"],
+                                    new_bids["node"], new_bids["tenant"],
+                                    new_bids.get("limit")))
+        # 5) explicit relinquishments + clear/evict/transfer cascade
+        release = no_release
+        if relinquish is not None:
+            hits = jnp.zeros((tree.n_leaves,), jnp.int32).at[
+                jnp.where(relinquish >= 0, relinquish,
+                          tree.n_leaves)].add(1, mode="drop")
+            release = hits > 0
+        state = self._cascade(state, t, release)
+        transfers = {"moved": owner0 != state["owner"], "old": owner0,
+                     "new": state["owner"]}
+        return state, transfers, state["bills"]
 
 
 def build_tree(n_leaves: int, gpus_per_host: int = 8,

@@ -24,6 +24,15 @@ from repro.configs.base import ArchConfig, LayerSpec
 
 NEG_INF = -2.0 ** 30  # large-negative for masking (safe in bf16)
 
+# ``jax.shard_map`` (with check_vma) only exists in newer JAX; fall back to
+# the experimental module (check_rep) on older releases.
+if getattr(jax, "shard_map", None) is not None:
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:  # pragma: no cover - exercised on older JAX only
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
 
 # --------------------------------------------------------------------------
 # Basic ops
@@ -272,11 +281,11 @@ def moe_ep(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array, *,
             out = lax.psum(out, ep_axis)
         return out.astype(xl.dtype).reshape(Bl, Sl, D)
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         inner, mesh=mesh,
         in_specs=(P(None, None), P(ep_axis, None, None),
                   P(ep_axis, None, None), P(ep_axis, None, None), x_spec),
-        out_specs=x_spec, check_vma=False)
+        out_specs=x_spec, **_SHARD_MAP_KW)
     return fn(p["router"], p["wg"], p["wu"], p["wd"], x)
 
 

@@ -143,7 +143,7 @@ class LaissezCloud(CloudBase):
                  controls: Optional[VolatilityControls] = None,
                  base_prices: Optional[Dict[str, float]] = None) -> None:
         super().__init__(topo)
-        self.market = Market(topo, controls)
+        self.market = self._make_market(topo, controls)
         # operator seeds the market: break-even floors (~0.7x on-demand)
         prices = base_prices or {t: ON_DEMAND.get(t, 2.0) * 0.7
                                  for t in topo.roots}
@@ -151,6 +151,9 @@ class LaissezCloud(CloudBase):
             self.market.set_floor(root, prices.get(rtype, 1.0))
         self.adapters: Dict[str, EconAdapter] = {}
         self.market.on_transfer.append(self._on_transfer)
+
+    def _make_market(self, topo: Topology, controls):
+        return Market(topo, controls)
 
     def add_tenant(self, tenant: Tenant,
                    adapter_cfg: Optional[AdapterConfig] = None) -> None:
@@ -183,3 +186,14 @@ class LaissezCloud(CloudBase):
     def cost_of(self, name: str) -> float:
         self.market.settle()
         return self.market.bills.get(name, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# LaissezBatchCloud: the SAME negotiation contract, arbitrated by the JAX
+# batch engine (repro.market_jax) behind the Market-compatible facade —
+# the paper's §5.5.1 scale path wired into the simulator end to end.
+# ---------------------------------------------------------------------------
+class LaissezBatchCloud(LaissezCloud):
+    def _make_market(self, topo: Topology, controls):
+        from repro.market_jax.bridge import BatchMarket
+        return BatchMarket(topo, controls)

@@ -18,7 +18,8 @@ from repro.core.market import VolatilityControls
 from repro.core.topology import Topology, build_cluster
 from repro.core.econadapter import AdapterConfig
 from repro.sim import traces
-from repro.sim.cloud import CloudBase, FCFSCloud, FCFSPCloud, LaissezCloud
+from repro.sim.cloud import CloudBase, FCFSCloud, FCFSPCloud, \
+    LaissezBatchCloud, LaissezCloud
 from repro.sim.workloads import Tenant, WorkloadParams
 
 
@@ -106,6 +107,8 @@ def build_cloud(kind: str, topo: Topology, cfg: ScenarioConfig) -> CloudBase:
         return FCFSPCloud(topo)
     if kind == "laissez":
         return LaissezCloud(topo, cfg.controls)
+    if kind == "laissez_batch":
+        return LaissezBatchCloud(topo, cfg.controls)
     raise ValueError(kind)
 
 

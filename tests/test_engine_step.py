@@ -1,0 +1,241 @@
+"""Deterministic batch-engine step() tests: hand-computed bills,
+retention-limit evictions with min-holding deferral, bounded floor
+updates, bid clipping edge cases, and ref-vs-Pallas kernel equality.
+
+(The hypothesis property tests live in tests/test_engine_props.py; the
+event-engine equivalence pin is tests/test_differential.py.)
+"""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.market import VolatilityControls
+from repro.market_jax.engine import BatchEngine, TreeSpec, build_tree, NEG
+
+
+def tiny_engine(controls=None, n_leaves=4, root_floor=1.0):
+    tree = TreeSpec(n_leaves, (1, 2, n_leaves))
+    eng = BatchEngine(tree, capacity=64, n_tenants=8, controls=controls)
+    st = eng.init_state()
+    st["floor"][-1] = st["floor"][-1].at[0].set(root_floor)
+    return eng, st
+
+
+def bids(price, limit, level, node, tenant):
+    return {"price": jnp.array([price], jnp.float32),
+            "limit": jnp.array([limit], jnp.float32),
+            "level": jnp.array([level], jnp.int32),
+            "node": jnp.array([node], jnp.int32),
+            "tenant": jnp.array([tenant], jnp.int32)}
+
+
+def owners(st):
+    return np.asarray(st["owner"]).tolist()
+
+
+class TestBilling:
+    def test_bill_is_rate_time_integral(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        assert owners(st) == [0, -1, -1, -1]
+        assert float(st["rate"][0]) == pytest.approx(1.0)  # floor binds
+        st, _, bills = eng.step(st, 7200.0)                # 2 h at 1.0
+        assert float(bills[0]) == pytest.approx(2.0)
+
+    def test_competing_bid_raises_rate_and_bill(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        # fill remaining idle supply so tenant 1's next bid must rest
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        st, _, _ = eng.step(st, 3600.0, bids(4.0, 4.0, 2, 0, 1))
+        assert owners(st)[0] == 0                 # limit 5.0 holds
+        assert float(st["rate"][0]) == pytest.approx(4.0)
+        st, _, bills = eng.step(st, 7200.0)
+        # 1 h at the 1.0 floor + 1 h at the 4.0 competing pressure
+        assert float(bills[0]) == pytest.approx(5.0)
+
+    def test_owners_own_bid_exerts_no_pressure(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 9.0, 2, 0, 0))
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        # tenant 0 rests ANOTHER bid above everything: not self-pressure
+        st, _, _ = eng.step(st, 0.0, bids(8.0, 8.0, 2, 0, 0))
+        assert float(st["rate"][0]) == pytest.approx(1.0)
+
+
+class TestEviction:
+    def test_limit_crossing_evicts_to_best_bid(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        st, tr, _ = eng.step(st, 3600.0, bids(6.0, 9.0, 2, 0, 1))
+        assert owners(st)[0] == 1                 # 6.0 > limit 5.0
+        assert float(st["limit"][0]) == pytest.approx(9.0)
+        assert bool(np.asarray(tr["moved"])[0])
+        # second price: winner pays the floor (no other resting bids)
+        assert float(st["rate"][0]) == pytest.approx(1.0)
+
+    def test_explicit_relinquish_to_queued_bid_else_operator(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 9.0, 2, 0, 0))
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        st, _, _ = eng.step(st, 0.0, bids(2.5, 3.0, 2, 0, 1))  # rests
+        st, tr, _ = eng.step(st, 100.0,
+                             relinquish=jnp.array([0], jnp.int32))
+        assert owners(st)[0] == 1                 # queued bid wins
+        st, tr, _ = eng.step(st, 200.0,
+                             relinquish=jnp.array([0], jnp.int32))
+        assert owners(st)[0] == -1                # nobody left: operator
+        assert math.isinf(float(st["limit"][0]))
+
+    def test_min_holding_defers_then_fires(self):
+        eng, st = tiny_engine(VolatilityControls(min_holding_s=600.0))
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        st, _, _ = eng.step(st, 100.0, bids(6.0, 9.0, 2, 0, 1))
+        assert owners(st)[0] == 0                 # protected
+        st, _, _ = eng.step(st, 601.0)            # window elapsed
+        assert owners(st)[0] == 1
+        st2, _, bills = eng.step(st, 601.0)
+        # the evicted owner was billed through the deferral window at the
+        # competing 6.0 rate (100s at 1.0 + 501s at 6.0)
+        assert float(bills[0]) == pytest.approx(
+            (100 * 1.0 + 501 * 6.0) / 3600.0, rel=1e-4)
+
+
+class TestFloors:
+    def test_floor_rise_price_evicts(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        floors = [jnp.full(f.shape, -1.0, jnp.float32)
+                  for f in st["floor"]]
+        floors[-1] = floors[-1].at[0].set(6.0)
+        st, _, _ = eng.step(st, 100.0, floor_updates=floors)
+        assert owners(st)[0] == -1                # 6.0 > limit 5.0
+        assert float(st["rate"][0]) == pytest.approx(6.0)
+
+    def test_floor_fall_rate_bound_over_multiple_updates(self):
+        eng, st = tiny_engine(VolatilityControls(floor_fall_rate=0.5),
+                              root_floor=0.0)
+        def drop(st, t, val):
+            floors = [jnp.full(f.shape, -1.0, jnp.float32)
+                      for f in st["floor"]]
+            floors[-1] = floors[-1].at[0].set(val)
+            st, _, _ = eng.step(st, t, floor_updates=floors)
+            return st
+        st = drop(st, 0.0, 4.0)                   # rises are unbounded
+        assert float(st["floor"][-1][0]) == pytest.approx(4.0)
+        st = drop(st, 1800.0, 0.0)                # max 50%/h -> >= 3.0
+        assert float(st["floor"][-1][0]) == pytest.approx(3.0)
+        st = drop(st, 3600.0, 0.0)                # compounding bound
+        assert float(st["floor"][-1][0]) == pytest.approx(2.25)
+
+    def test_floor_drop_sells_idle_supply(self):
+        eng, st = tiny_engine(root_floor=5.0)
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 9.0, 2, 0, 0))
+        assert owners(st) == [-1, -1, -1, -1]     # below floor: rests
+        floors = [jnp.full(f.shape, -1.0, jnp.float32)
+                  for f in st["floor"]]
+        floors[-1] = floors[-1].at[0].set(2.0)
+        st, _, _ = eng.step(st, 100.0, floor_updates=floors)
+        assert owners(st)[0] == 0                 # resting bid now buys
+
+
+class TestBidClipping:
+    def test_clip_disabled_at_zero_reference(self):
+        eng, st = tiny_engine(VolatilityControls(max_bid_multiple=2.0),
+                              root_floor=0.0)
+        st, _, _ = eng.step(st, 0.0, bids(1000.0, 1000.0, 2, 0, 0))
+        # zero reference price -> no clipping (mirrors the event engine):
+        # the consumed winning bid carried its unclipped limit
+        assert owners(st)[0] == 0
+        assert float(st["limit"][0]) == pytest.approx(1000.0)
+
+    def test_clip_against_floor_reference(self):
+        eng, st = tiny_engine(VolatilityControls(max_bid_multiple=2.0),
+                              root_floor=3.0)
+        st, _, _ = eng.step(st, 0.0, bids(1000.0, 1000.0, 2, 0, 0))
+        assert owners(st)[0] == 0
+        # clipped to 2 x 3.0 floor; charged rate still the floor
+        live = np.asarray(st["price"])
+        assert live.max() <= 6.0 + 1e-6
+        assert float(st["rate"][0]) == pytest.approx(3.0)
+
+    def test_clip_against_charged_rate_reference(self):
+        eng, st = tiny_engine(VolatilityControls(max_bid_multiple=2.0),
+                              root_floor=2.0)
+        for _ in range(4):                       # t0 owns all supply
+            st, _, _ = eng.step(st, 0.0, bids(3.0, 9.0, 2, 0, 0))
+        assert owners(st) == [0, 0, 0, 0]
+        st, _, _ = eng.step(st, 0.0, bids(100.0, 100.0, 2, 0, 1))
+        # reference = max(floor 2.0, charged rates 2.0): the resting bid
+        # is clipped to 4.0, so it presses rates to 4.0 instead of 100
+        assert owners(st) == [0, 0, 0, 0]        # below t0's limit 9.0
+        assert float(st["rate"][0]) == pytest.approx(4.0)
+
+
+class TestPallasKernelParity:
+    def test_pallas_kernel_across_pool_sizes(self):
+        from repro.kernels.market_clear.ops import clear
+        rng = np.random.default_rng(3)
+        for n_leaves in (512, 4096):
+            tree = build_tree(n_leaves)
+            eng = BatchEngine(tree, capacity=4096)
+            st = eng.init_state()
+            st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+            nb = 500
+            levels = rng.integers(0, tree.n_levels, nb).astype(np.int32)
+            nodes = np.array([rng.integers(0, tree.nodes_at(d))
+                              for d in levels], np.int32)
+            st = eng.place(st, jnp.array(rng.uniform(1, 9, nb),
+                                         jnp.float32),
+                           jnp.array(levels), jnp.array(nodes),
+                           jnp.array(rng.integers(0, 30, nb), jnp.int32))
+            st["owner"] = jnp.array(
+                rng.integers(-1, 30, n_leaves), jnp.int32)
+            st["limit"] = jnp.array(
+                rng.uniform(3, 8, n_leaves), jnp.float32)
+            p1, o1, s1, p2, s2 = eng._aggregates(st)
+            args = (tuple(p1), tuple(o1), tuple(s1), tuple(p2),
+                    tuple(s2), tuple(st["floor"]), tree.strides,
+                    st["owner"], st["limit"])
+            r_ref, l_ref, w_ref, e_ref = clear(*args, use_pallas=False)
+            r_pal, l_pal, w_pal, e_pal = clear(*args, use_pallas=True,
+                                               interpret=True)
+            np.testing.assert_allclose(np.asarray(r_ref),
+                                       np.asarray(r_pal), rtol=1e-6)
+            np.testing.assert_array_equal(np.asarray(l_ref),
+                                          np.asarray(l_pal))
+            np.testing.assert_array_equal(np.asarray(w_ref),
+                                          np.asarray(w_pal))
+            np.testing.assert_array_equal(np.asarray(e_ref),
+                                          np.asarray(e_pal))
+
+    def test_full_step_with_pallas_clearing(self):
+        """The whole step() runs with the Pallas kernel (interpret) and
+        matches the jnp-oracle engine state for state."""
+        results = []
+        for use_pallas in (False, True):
+            tree = TreeSpec(8, (1, 2, 4, 8))
+            eng = BatchEngine(tree, capacity=64, n_tenants=8,
+                              use_pallas=use_pallas)
+            st = eng.init_state()
+            st["floor"][-1] = st["floor"][-1].at[0].set(1.0)
+            st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 3, 0, 0))
+            st, _, _ = eng.step(st, 0.0, bids(2.5, 9.0, 3, 0, 1))
+            st, _, _ = eng.step(st, 3600.0, bids(6.0, 7.0, 1, 0, 2))
+            st, _, bills = eng.step(st, 7200.0)
+            results.append((np.asarray(st["owner"]),
+                            np.asarray(st["rate"]), np.asarray(bills)))
+        np.testing.assert_array_equal(results[0][0], results[1][0])
+        np.testing.assert_allclose(results[0][1], results[1][1],
+                                   rtol=1e-6)
+        np.testing.assert_allclose(results[0][2], results[1][2],
+                                   rtol=1e-6)

@@ -135,7 +135,9 @@ def test_market_clear_pallas_equals_ref():
     tree = build_tree(1024)
     eng = BatchEngine(tree, capacity=4096)
     st = eng.init_state()
-    st["floor"][-1] = st["floor"][-1].at[0].set(1.5)
+    floors = list(st["floor"])
+    floors[-1] = floors[-1].at[0].set(1.5)
+    st["floor"] = tuple(floors)
     n = 700
     levels = RNG.integers(0, tree.n_levels, n).astype(np.int32)
     nodes = np.array([RNG.integers(0, tree.nodes_at(d)) for d in levels],
@@ -143,14 +145,22 @@ def test_market_clear_pallas_equals_ref():
     st = eng.place(st, jnp.array(RNG.uniform(1, 9, n), jnp.float32),
                    jnp.array(levels), jnp.array(nodes),
                    jnp.array(RNG.integers(0, 9, n), jnp.int32))
-    top1, own1, top2, _ = eng._aggregates(st)
-    args = (tuple(top1), tuple(own1), tuple(top2), tuple(st["floor"]),
-            tree.strides, st["owner"])
-    r_ref, l_ref = clear(*args, use_pallas=False)
-    r_pal, l_pal = clear(*args, use_pallas=True, interpret=True)
+    # mixed ownership so the owner-exclusion and eviction paths exercise
+    st["owner"] = st["owner"].at[:512].set(
+        jnp.array(RNG.integers(0, 9, 512), jnp.int32))
+    st["limit"] = st["limit"].at[:512].set(
+        jnp.array(RNG.uniform(2, 8, 512), jnp.float32))
+    p1, o1, s1, p2, s2 = eng._aggregates(st)
+    args = (tuple(p1), tuple(o1), tuple(s1), tuple(p2), tuple(s2),
+            tuple(st["floor"]), tree.strides, st["owner"], st["limit"])
+    r_ref, l_ref, w_ref, e_ref = clear(*args, use_pallas=False)
+    r_pal, l_pal, w_pal, e_pal = clear(*args, use_pallas=True,
+                                       interpret=True)
     np.testing.assert_allclose(np.asarray(r_ref), np.asarray(r_pal),
                                rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
+    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_pal))
+    np.testing.assert_array_equal(np.asarray(e_ref), np.asarray(e_pal))
 
 
 def test_segment_top2():
@@ -159,5 +169,17 @@ def test_segment_top2():
     owners = jnp.array([10, 11, 12, 13, 14, 15], jnp.int32)
     t1, o1, t2 = clear_ref.segment_top2(prices, seg, owners, 3)
     assert float(t1[0]) == 5.0 and float(t2[0]) == 3.0
-    assert float(t1[1]) == 7.0 and float(t2[1]) == 7.0   # duplicate top
-    assert int(o1[0]) == 10
+    assert float(t1[1]) == 7.0 and float(t2[1]) == 7.0   # distinct-tenant
+    assert int(o1[0]) == 10                              # duplicate top
+
+
+def test_segment_aggregates_owner_exclusion_exact():
+    """When one tenant holds BOTH top bids in a node, p2 must be the best
+    bid from a DIFFERENT tenant (a plain top-2 would undercharge)."""
+    prices = jnp.array([9.0, 8.0, 5.0, 1.0], jnp.float32)
+    seg = jnp.zeros((4,), jnp.int32)
+    tenants = jnp.array([7, 7, 3, 2], jnp.int32)
+    p1, o1, s1, p2, s2 = clear_ref.segment_aggregates(prices, seg,
+                                                      tenants, 1)
+    assert float(p1[0]) == 9.0 and int(o1[0]) == 7 and int(s1[0]) == 0
+    assert float(p2[0]) == 5.0 and int(s2[0]) == 2

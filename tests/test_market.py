@@ -1,10 +1,14 @@
-"""Market engine semantics + hypothesis property tests on its invariants."""
+"""Market engine semantics tests (deterministic).
+
+The hypothesis property tests on market invariants live in
+tests/test_market_props.py behind ``pytest.importorskip("hypothesis")`` so
+this module always collects.
+"""
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.market import Market, VolatilityControls, OPERATOR, \
+from repro.core.market import Market, VolatilityControls, OPERATOR, TICK, \
     VisibilityError
 from repro.core.topology import build_cluster
 
@@ -161,90 +165,101 @@ class TestVolatilityControls:
         assert m.owner_of(leaf) == "B"    # deferred crossing fires
 
 
-# ---------------------------------------------------------------------------
-# Property tests: random op sequences preserve the market invariants.
-# ---------------------------------------------------------------------------
-op_strategy = st.lists(
-    st.tuples(
-        st.sampled_from(["place", "cancel", "relinquish", "limit",
-                         "floor", "advance"]),
-        st.integers(0, 4),                 # tenant id
-        st.floats(0.1, 20.0),              # price-ish
-        st.integers(0, 30),                # node selector
-    ), min_size=1, max_size=60)
+class TestFastPathRateRefresh:
+    """Regressions for the place/cancel fast paths: a bid below the book's
+    top CAN move a charged rate, because charged rates exclude the owner's
+    own orders (undercharging bug)."""
+
+    def one_leaf_market(self):
+        topo = build_cluster({"H100": 1}, gpus_per_host=1,
+                             hosts_per_rack=1, racks_per_zone=1)
+        m = Market(topo)
+        root = topo.roots["H100"]
+        leaf = topo.leaves_of(root)[0]
+        return topo, m, root, leaf
+
+    def test_lower_competing_bid_raises_owner_rate(self):
+        # A owns the leaf and rests the top bid; B's LOWER bid is the best
+        # non-owner pressure and must raise A's charged rate immediately.
+        topo, m, root, leaf = self.one_leaf_market()
+        m.place_order("A", root, 5.0, limit=math.inf)   # consumed: A owns
+        m.place_order("A", root, 6.0, limit=6.0)        # rests at the top
+        assert m.market_rate(leaf) == pytest.approx(0.0)
+        m.place_order("B", root, 4.0, limit=4.0)        # below A's 6.0
+        assert m.market_rate(leaf) == pytest.approx(4.0)
+        m.advance_to(3600.0)
+        assert m.settle()["A"] == pytest.approx(4.0)    # billed, not $0
+
+    def test_cancel_non_top_bid_lowers_owner_rate(self):
+        topo, m, root, leaf = self.one_leaf_market()
+        m.place_order("A", root, 5.0, limit=math.inf)
+        m.place_order("A", root, 6.0, limit=6.0)
+        oid_b = m.place_order("B", root, 4.0, limit=4.0)
+        assert m.market_rate(leaf) == pytest.approx(4.0)
+        m.advance_to(1800.0)
+        m.cancel_order("B", oid_b)       # non-top cancel must refresh
+        assert m.market_rate(leaf) == pytest.approx(0.0)
+        m.advance_to(7200.0)
+        # only the first half hour was charged at 4.0
+        assert m.settle()["A"] == pytest.approx(2.0)
+
+    def test_owner_monopolizing_top_of_book_still_charged(self):
+        # A rests MORE top bids than the top-entries scan width; B's low
+        # bid is the only real pressure and must still set A's rate
+        topo, m, root, leaf = self.one_leaf_market()
+        m.place_order("A", root, 5.0, limit=math.inf)
+        for i in range(12):
+            m.place_order("A", root, 20.0 + i, limit=99.0)
+        m.place_order("B", root, 6.0, limit=6.0)
+        assert m.market_rate(leaf) == pytest.approx(6.0)
+        assert m.acquire_price(leaf, "B") == math.inf  # A's inf limit
+        m.advance_to(3600.0)
+        assert m.settle()["A"] == pytest.approx(6.0)
+
+    def test_fast_path_still_skips_when_truly_covered(self):
+        # two distinct non-owner tenants already rest >= the new bid:
+        # rates cannot move, whoever the owner is
+        topo, m = seeded_market()
+        m.place_order("A", topo.roots["H100"], 2.5, limit=5.0)
+        leaf = next(iter(m.owned_leaves("A")))
+        for _ in range(7):                  # exhaust idle supply
+            m.place_order("Z", topo.roots["H100"], 2.1, limit=99.0)
+        m.place_order("B", topo.roots["H100"], 4.0, limit=4.0)
+        m.place_order("C", topo.roots["H100"], 4.5, limit=4.5)
+        rate_before = m.market_rate(leaf)
+        m.place_order("D", topo.roots["H100"], 3.0, limit=3.0)
+        assert m.market_rate(leaf) == pytest.approx(rate_before)
+        assert m.market_rate(leaf) == pytest.approx(m._rate(leaf))
 
 
-@settings(max_examples=40, deadline=None)
-@given(ops=op_strategy)
-def test_market_invariants(ops):
-    topo, m = seeded_market(VolatilityControls(max_bid_multiple=0.0))
-    tenants = [f"t{i}" for i in range(5)]
-    placed = []
-    now = 0.0
-    for kind, tid, price, sel in ops:
-        t = tenants[tid]
-        if kind == "place":
-            scope = (list(topo.roots.values()) +
-                     [n.node_id for n in topo.nodes])[sel
-                                                      % (len(topo.nodes))]
-            placed.append(m.place_order(t, scope, price,
-                                        limit=price * 1.5))
-        elif kind == "cancel" and placed:
-            oid = placed[sel % len(placed)]
-            o = m.orders[oid]
-            if o.active:
-                m.cancel_order(o.tenant, oid)
-        elif kind == "relinquish":
-            owned = sorted(m.owned_leaves(t))
-            if owned:
-                m.relinquish(t, owned[sel % len(owned)])
-        elif kind == "limit":
-            owned = sorted(m.owned_leaves(t))
-            if owned:
-                m.set_retention_limit(t, owned[sel % len(owned)], price)
-        elif kind == "floor":
-            root = list(topo.roots.values())[sel % 2]
-            m.set_floor(root, price)
-        else:
-            now += price * 60
-            m.advance_to(now)
+class TestPriceDiscoveryExcludesSelf:
+    def test_query_price_ignores_own_resting_bid(self):
+        # During a min-holding window B's bid can rest above the owner's
+        # limit; B's own bid must not inflate the price B is quoted
+        topo = build_cluster({"H100": 1}, gpus_per_host=1,
+                             hosts_per_rack=1, racks_per_zone=1)
+        m = Market(topo, VolatilityControls(min_holding_s=600.0))
+        root = topo.roots["H100"]
+        m.set_floor(root, 2.0)
+        m.place_order("A", root, 2.5, limit=3.0)        # A owns the leaf
+        m.place_order("B", root, 4.0, limit=4.0)        # rests (deferred)
+        assert m.owner_of(topo.leaves_of(root)[0]) == "A"
+        # B's price to beat = max(floor, A's limit + tick); NOT B's own 4.0
+        assert m.query_price("B", root) == pytest.approx(3.0 + TICK)
+        # a third party still sees B's 4.0 as competing pressure
+        assert m.query_price("C", root) == pytest.approx(4.0 + TICK)
 
-        # INVARIANTS ---------------------------------------------------
-        # 1. exactly one owner per leaf; owned sets partition correctly
-        seen = {}
-        for tt, leaves in m.owned.items():
-            for l in leaves:
-                assert l not in seen
-                seen[l] = tt
-                assert m.res[l].owner == tt
-        for l, stt in m.res.items():
-            if stt.owner != OPERATOR:
-                assert l in m.owned.get(stt.owner, ())
-        # 2. rate >= floor for owned leaves
-        for l, stt in m.res.items():
-            if stt.owner != OPERATOR:
-                assert stt.rate >= m.floor(l) - 1e-6
-        # 3. bills never negative
-        assert all(b >= -1e-9 for b in m.bills.values())
-        # 4. consumed orders never own book pressure (spot check stats)
-        assert m.stats["transfers"] >= 0
-
-
-@settings(max_examples=20, deadline=None)
-@given(prices=st.lists(st.floats(2.1, 50.0), min_size=2, max_size=10))
-def test_second_price_property(prices):
-    """After all bids, the winner pays max(floor, best losing bid)."""
-    topo = build_cluster({"H100": 1}, gpus_per_host=1, hosts_per_rack=1,
-                         racks_per_zone=1)
-    m = Market(topo)
-    root = topo.roots["H100"]
-    m.set_floor(root, 2.0)
-    for i, p in enumerate(prices):
-        m.place_order(f"t{i}", root, p, limit=p)
-    leaf = topo.leaves_of(root)[0]
-    st_ = m.res[leaf]
-    assert st_.owner != "__operator__"
-    # owner's own (consumed) bid exerts no pressure; rate = best loser
-    resting = [o.price for o in m.orders.values() if o.active]
-    expect = max([2.0] + resting)
-    assert st_.rate == pytest.approx(expect)
+    def test_acquire_price_excludes_querier_only(self):
+        topo = build_cluster({"H100": 1}, gpus_per_host=1,
+                             hosts_per_rack=1, racks_per_zone=1)
+        m = Market(topo, VolatilityControls(min_holding_s=600.0))
+        root = topo.roots["H100"]
+        m.set_floor(root, 1.0)
+        leaf = topo.leaves_of(root)[0]
+        m.place_order("C", root, 1.5, limit=2.0)   # C owns the leaf
+        m.place_order("B", root, 3.0, limit=3.0)   # rests above C's limit
+        assert m.owner_of(leaf) == "C"             # min-holding protects
+        # B asking: own resting 3.0 must not count -> C's limit binds
+        assert m.acquire_price(leaf, "B") == pytest.approx(2.0 + TICK)
+        # D asking: B's resting 3.0 IS competition
+        assert m.acquire_price(leaf, "D") == pytest.approx(3.0 + TICK)

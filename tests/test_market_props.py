@@ -1,0 +1,117 @@
+"""Hypothesis property tests on the event-driven market's invariants.
+
+Kept separate from tests/test_market.py so the deterministic market tests
+still run on environments without hypothesis installed (requirements-dev
+pins it for CI).
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.market import Market, VolatilityControls, OPERATOR
+from repro.core.topology import build_cluster
+
+
+def seeded_market(controls=None):
+    topo = build_cluster({"H100": 8, "A100": 8}, gpus_per_host=4,
+                         hosts_per_rack=2, racks_per_zone=1)
+    m = Market(topo, controls)
+    m.set_floor(topo.roots["H100"], 2.0)
+    m.set_floor(topo.roots["A100"], 1.0)
+    return topo, m
+
+
+# ---------------------------------------------------------------------------
+# Property tests: random op sequences preserve the market invariants.
+# ---------------------------------------------------------------------------
+op_strategy = st.lists(
+    st.tuples(
+        st.sampled_from(["place", "cancel", "relinquish", "limit",
+                         "floor", "advance"]),
+        st.integers(0, 4),                 # tenant id
+        st.floats(0.1, 20.0),              # price-ish
+        st.integers(0, 30),                # node selector
+    ), min_size=1, max_size=60)
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=op_strategy)
+def test_market_invariants(ops):
+    topo, m = seeded_market(VolatilityControls(max_bid_multiple=0.0))
+    tenants = [f"t{i}" for i in range(5)]
+    placed = []
+    now = 0.0
+    for kind, tid, price, sel in ops:
+        t = tenants[tid]
+        if kind == "place":
+            scope = (list(topo.roots.values()) +
+                     [n.node_id for n in topo.nodes])[sel
+                                                      % (len(topo.nodes))]
+            placed.append(m.place_order(t, scope, price,
+                                        limit=price * 1.5))
+        elif kind == "cancel" and placed:
+            oid = placed[sel % len(placed)]
+            o = m.orders[oid]
+            if o.active:
+                m.cancel_order(o.tenant, oid)
+        elif kind == "relinquish":
+            owned = sorted(m.owned_leaves(t))
+            if owned:
+                m.relinquish(t, owned[sel % len(owned)])
+        elif kind == "limit":
+            owned = sorted(m.owned_leaves(t))
+            if owned:
+                m.set_retention_limit(t, owned[sel % len(owned)], price)
+        elif kind == "floor":
+            root = list(topo.roots.values())[sel % 2]
+            m.set_floor(root, price)
+        else:
+            now += price * 60
+            m.advance_to(now)
+
+        # INVARIANTS ---------------------------------------------------
+        # 1. exactly one owner per leaf; owned sets partition correctly
+        seen = {}
+        for tt, leaves in m.owned.items():
+            for l in leaves:
+                assert l not in seen
+                seen[l] = tt
+                assert m.res[l].owner == tt
+        for l, stt in m.res.items():
+            if stt.owner != OPERATOR:
+                assert l in m.owned.get(stt.owner, ())
+        # 2. rate >= floor for owned leaves
+        for l, stt in m.res.items():
+            if stt.owner != OPERATOR:
+                assert stt.rate >= m.floor(l) - 1e-6
+        # 3. bills never negative
+        assert all(b >= -1e-9 for b in m.bills.values())
+        # 4. consumed orders never own book pressure (spot check stats)
+        assert m.stats["transfers"] >= 0
+        # 5. cached rates are never stale (the fast-path undercharging
+        #    regression this suite exists to pin down)
+        for l, stt in m.res.items():
+            if stt.owner != OPERATOR:
+                assert abs(stt.rate - m._rate(l)) < 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(prices=st.lists(st.floats(2.1, 50.0), min_size=2, max_size=10))
+def test_second_price_property(prices):
+    """After all bids, the winner pays max(floor, best losing bid)."""
+    topo = build_cluster({"H100": 1}, gpus_per_host=1, hosts_per_rack=1,
+                         racks_per_zone=1)
+    m = Market(topo)
+    root = topo.roots["H100"]
+    m.set_floor(root, 2.0)
+    for i, p in enumerate(prices):
+        m.place_order(f"t{i}", root, p, limit=p)
+    leaf = topo.leaves_of(root)[0]
+    st_ = m.res[leaf]
+    assert st_.owner != "__operator__"
+    # owner's own (consumed) bid exerts no pressure; rate = best loser
+    resting = [o.price for o in m.orders.values() if o.active]
+    expect = max([2.0] + resting)
+    assert st_.rate == pytest.approx(expect)

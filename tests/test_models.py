@@ -110,8 +110,8 @@ def test_moe_ep_equals_dense():
                                             capacity_factor=8.0)
     params = M.init_params(cfg, KEY)
     batch = tiny_batch(cfg)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     moe_ep = functools.partial(L.moe_ep, mesh=mesh, dp_axes=("data",),
                                ep_axis="model", batch_sharded=True)
     l_dense, _ = M.forward(params, cfg, batch, moe_fn=L.moe_dense)

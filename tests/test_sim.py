@@ -60,6 +60,29 @@ class TestClouds:
         assert r.stats["orders"] > 10
         assert r.stats["transfers"] > 0
 
+    def test_laissez_batch_cloud_completes(self):
+        """The JAX batch engine arbitrates the same scenario end to end
+        (fourth cloud kind; short horizon — every op is a jitted step)."""
+        cfg = small_scenario(duration_s=900.0, tick_s=90.0, n_training=1,
+                             n_inference=1, n_batch=0, n_h100=4, n_a100=4)
+        r = run_once("laissez_batch", cfg)
+        assert len(r.perf) == 2
+        assert all(0.0 <= v <= 1.0 + 1e-9 for v in r.perf.values())
+        assert all(c >= 0 for c in r.cost.values())
+        assert r.stats["orders"] > 0
+
+    def test_laissez_batch_matches_event_cloud(self):
+        """Same scenario through the event market and the batch engine:
+        the allocation dynamics should produce comparable performance
+        (they are step-for-step equivalent engines; adapters quantize
+        decisions to ticks, so outcomes track closely)."""
+        cfg = small_scenario(duration_s=900.0, tick_s=90.0, n_training=1,
+                             n_inference=1, n_batch=0, n_h100=4, n_a100=4)
+        ev = run_once("laissez", cfg)
+        bt = run_once("laissez_batch", cfg)
+        for name in ev.perf:
+            assert bt.perf[name] == pytest.approx(ev.perf[name], abs=0.35)
+
     def test_undersubscribed_converges(self):
         """§5.2: all systems converge when contention disappears."""
         cfg = small_scenario(regime="right_sized", n_training=1,

@@ -100,7 +100,8 @@ def test_dryrun_machinery_in_process():
     arch: proves the dry-run wiring without 512 fake devices (the full
     production sweep lives in experiments/dryrun)."""
     from repro.configs.base import ShapeConfig
-    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.cells import build_cell, cost_analysis_dict, \
+        lower_cell
     from repro.launch.mesh import make_mesh
     cfg = get_config("olmoe-1b-7b").reduced(num_layers=2)
     shape = ShapeConfig("tiny_train", seq_len=32, global_batch=4,
@@ -108,4 +109,4 @@ def test_dryrun_machinery_in_process():
     mesh = make_mesh((1, 1), ("data", "model"))
     cell = build_cell(cfg, shape, mesh)
     compiled = lower_cell(cell).compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
