@@ -1,6 +1,8 @@
-"""Shared benchmark helpers: timing + `name,us_per_call,derived` CSV rows."""
+"""Shared benchmark helpers: timing + `name,us_per_call,derived` CSV rows
+and machine-readable JSON dumps (perf trajectory tracking across PRs)."""
 from __future__ import annotations
 
+import json
 import statistics
 import time
 from typing import Callable, Dict, List, Optional
@@ -12,6 +14,21 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.3f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+def dump_json(path: str, prefix: str = "") -> int:
+    """Write every emitted row whose name starts with ``prefix`` as a
+    JSON list of {name, us_per_call, derived}. Returns the row count."""
+    rows = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        if name.startswith(prefix):
+            rows.append({"name": name, "us_per_call": float(us),
+                         "derived": derived})
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# wrote {len(rows)} rows to {path}", flush=True)
+    return len(rows)
 
 
 def time_op(fn: Callable[[], None], *, repeat: int = 5,

@@ -7,7 +7,12 @@ Three heaviest operations vs pool size (the paper's panels):
 
 Reported for the paper-faithful Python engine AND the beyond-paper JAX
 batch engine (ref + Pallas-interpret clearing) — the batch engine is the
-TPU-native scale path (DESIGN.md §3).
+TPU-native scale path (DESIGN.md §3).  The batch rows compare K=1 with
+the top-K wave-parallel cascade (one wave resolves K contested OCO
+claims), including a cold-start flood of 2048 marketable bids onto idle
+supply that reports wave count and wall time.  All fig12 rows are also
+written to ``BENCH_fig12.json`` so the perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
@@ -15,11 +20,12 @@ import time
 
 import numpy as np
 
-from benchmarks.common import emit, time_op
+from benchmarks.common import dump_json, emit, time_op
 from repro.core.market import Market
 from repro.core.topology import build_cluster
 
 POOL_SIZES = (512, 2048, 10_000)
+BENCH_JSON = "BENCH_fig12.json"
 
 
 def _python_engine(n: int):
@@ -101,44 +107,86 @@ def run(quick: bool = False):
 
     # JAX batch engine: the FULL market epoch — place -> clear -> evict ->
     # transfer -> bill — i.e. one complete step() of the renegotiation
-    # runtime, with a live bid inflow every epoch
+    # runtime, with a live bid inflow every epoch; K=1 vs the top-K
+    # wave-parallel cascade
     for n in ((2048, 16_384) if quick else (2048, 16_384, 65_536)):
+        for k in (1, 8):
+            tree = build_tree(n)
+            eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024,
+                              k=k)
+            st = eng.init_state()
+            st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+            rng = np.random.default_rng(0)
+            # contested steady state: ~95% of the pool owned, random
+            # limits
+            st["owner"] = jnp.array(
+                np.where(rng.random(n) < 0.95,
+                         rng.integers(0, 1024, n), -1), jnp.int32)
+            st["limit"] = jnp.array(rng.uniform(3.0, 9.0, n),
+                                    jnp.float32)
+            nb = 2048
+            def fresh_bids():
+                levels = rng.integers(0, tree.n_levels,
+                                      nb).astype(np.int32)
+                return {
+                    "price": jnp.array(rng.uniform(1, 8, nb),
+                                       jnp.float32),
+                    "limit": jnp.array(rng.uniform(8, 12, nb),
+                                       jnp.float32),
+                    "level": jnp.array(levels),
+                    "node": jnp.array(np.array(
+                        [rng.integers(0, tree.nodes_at(d))
+                         for d in levels], np.int32)),
+                    "tenant": jnp.array(rng.integers(0, 1024, nb),
+                                        jnp.int32),
+                }
+            clock = [0.0]
+            holder = [st]
+            def full_step():
+                clock[0] += 30.0
+                s2, transfers, bills = eng.step(holder[0], clock[0],
+                                                fresh_bids())
+                holder[0] = jax.block_until_ready(s2)
+            us = time_op(full_step, repeat=5, warmup=2)
+            waves = int(holder[0]["waves"])
+            emit(f"fig12/jax_batch/full_step/n={n}/k={k}", us,
+                 f"{n / (us / 1e6):.2e} leaf-clears/s "
+                 f"({nb} new bids/epoch; billing+evictions on; "
+                 f"{waves} waves total)")
+
+    # cold-start flood: M marketable root-scope bids land on an idle
+    # pool in ONE epoch.  K=1 pays one cascade wave per matched order;
+    # the top-K cascade resolves K contested OCO claims per wave
+    m = 512 if quick else 2048
+    n = 4096
+    rng = np.random.default_rng(0)
+    prices = rng.uniform(3.0, 9.0, m).astype(np.float32)
+    tenants = rng.integers(0, 1023, m).astype(np.int32)
+    for k in (1, 8):
         tree = build_tree(n)
-        eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024)
-        st = eng.init_state()
-        st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
-        rng = np.random.default_rng(0)
-        # contested steady state: ~95% of the pool owned, random limits.
-        # (A cold-start flood of marketable bids onto idle supply pays one
-        # OCO wave per matched order — the same sequential cost the event
-        # engine pays per place_order, see fig12a.)
-        st["owner"] = jnp.array(
-            np.where(rng.random(n) < 0.95, rng.integers(0, 1024, n), -1),
-            jnp.int32)
-        st["limit"] = jnp.array(rng.uniform(3.0, 9.0, n), jnp.float32)
-        nb = 2048
-        def fresh_bids():
-            levels = rng.integers(0, tree.n_levels, nb).astype(np.int32)
-            return {
-                "price": jnp.array(rng.uniform(1, 8, nb), jnp.float32),
-                "limit": jnp.array(rng.uniform(8, 12, nb), jnp.float32),
-                "level": jnp.array(levels),
-                "node": jnp.array(np.array(
-                    [rng.integers(0, tree.nodes_at(d)) for d in levels],
-                    np.int32)),
-                "tenant": jnp.array(rng.integers(0, 1024, nb), jnp.int32),
-            }
-        clock = [0.0]
-        holder = [st]
-        def full_step():
-            clock[0] += 30.0
-            s2, transfers, bills = eng.step(holder[0], clock[0],
-                                            fresh_bids())
-            holder[0] = jax.block_until_ready(s2)
-        us = time_op(full_step, repeat=5, warmup=2)
-        emit(f"fig12/jax_batch/full_step/n={n}", us,
-             f"{n / (us / 1e6):.2e} leaf-clears/s "
-             f"({nb} new bids/epoch, billing+evictions on)")
+        eng = BatchEngine(tree, capacity=1 << 13, n_tenants=1024, k=k)
+        nb_dict = {
+            "price": jnp.array(prices),
+            "limit": jnp.array(prices * 1.5),
+            "level": jnp.full((m,), tree.n_levels - 1, jnp.int32),
+            "node": jnp.zeros((m,), jnp.int32),
+            "tenant": jnp.array(tenants),
+        }
+        def init():
+            st = eng.init_state()
+            st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+            return st
+        waves = [0]
+        def flood():
+            s2, _, _ = eng.step(init(), 30.0, nb_dict)
+            s2 = jax.block_until_ready(s2)
+            waves[0] = int(s2["waves"])
+        us = time_op(flood, repeat=3, warmup=1)
+        emit(f"fig12/jax_batch/flood{m}/n={n}/k={k}", us,
+             f"{waves[0]} waves for {m} marketable bids "
+             f"({m / (us / 1e6):.2e} matches/s)")
+
+    dump_json(BENCH_JSON, prefix="fig12")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ from benchmarks import (fig06_contention, fig07_price_reaction,
                         fig12_scalability, fig13_reconfig,
                         fig14_volatility, fig15_misestimation,
                         table2_loc, roofline)
-from benchmarks.common import emit
+from benchmarks.common import ROWS, dump_json, emit
 
 MODULES = [
     ("fig06", fig06_contention), ("fig07", fig07_price_reaction),
@@ -47,6 +47,11 @@ def main() -> None:
             emit(f"{name}/ERROR", 0.0, f"{type(e).__name__}: {e}")
             traceback.print_exc()
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+    # machine-readable perf trajectory for the scalability rows (also
+    # written by fig12_scalability.run itself; kept here so a partial
+    # --only run that includes fig12 still leaves a fresh dump)
+    if any(r.startswith("fig12") for r in ROWS):
+        dump_json(fig12_scalability.BENCH_JSON, prefix="fig12")
     sys.exit(1 if failures else 0)
 
 

@@ -9,10 +9,16 @@ does only static `jnp.repeat` expansions and vector max/select ops — no
 gathers, fully VPU-friendly.
 
 Per level the inputs are the exact owner-exclusion aggregates computed by
-``ref.segment_aggregates``: best bid (price p1, tenant o1, slot s1), best
-bid from any OTHER tenant (p2, s2), and the operator floor. Outputs per
-leaf: charged rate, winning level, winning (owner-excluded) bid slot with
-the floor gate applied, and the retention-limit eviction mask.
+``ref.segment_aggregates``: the ranked top-K bids (price pk, tenant tk,
+slot sk — price desc, slot asc), the best bid from any tenant other than
+tk[0] (p2, s2 — the exact exclusion fall-back), and the operator floor.
+Outputs per leaf: charged rate, winning level, the ranked (K, block)
+owner-excluded floor-gated candidate slate, the slate-truncation flag,
+and the retention-limit eviction mask — see ref.clear_ref.
+
+The top-K merge across levels is a K-pass selection over the stacked
+(n_levels*(K+1), block) candidate matrix: per pass one vector max, a
+slot-asc tie-break min, and a mask-out — no sorts, all VPU ops.
 
 Block size 512 divides all level strides (8/32/128/512-style topologies);
 lane dim padded to multiples of 128 where needed by the caller (ops.py).
@@ -28,64 +34,109 @@ from jax.experimental import pallas as pl
 
 NEG = -1e30
 EPSF = 1e-6
-_REFS_PER_LEVEL = 6   # p1, o1, s1, p2, s2, floor
+BIGS = 1 << 30        # slot sentinel above any real table index
+_REFS_PER_LEVEL = 6   # pk, tk, sk, p2, s2, floor
 
 
 def _clear_kernel(owner_ref, limit_ref, *refs,
-                  strides: Sequence[int], block: int):
-    """refs layout: for each level d: (p1, o1, s1, p2, s2, floor) then
-    outputs (rate, best_level, winner_slot, evict)."""
+                  strides: Sequence[int], block: int, k: int):
+    """refs layout: for each level d: (pk, tk, sk, p2, s2, floor) then
+    outputs (rate, best_level, cand_slots, truncated, evict)."""
     n_lvl = len(strides)
     lvl_refs = refs[:_REFS_PER_LEVEL * n_lvl]
-    rate_ref, lvl_out, slot_out, evict_out = refs[_REFS_PER_LEVEL * n_lvl:]
+    (rate_ref, lvl_out, slots_out, trunc_out,
+     evict_out) = refs[_REFS_PER_LEVEL * n_lvl:]
     owner = owner_ref[...]
     limit = limit_ref[...]
+    has_owner = owner >= 0
     floor = jnp.zeros((block,), jnp.float32)
-    best_bid = jnp.full((block,), NEG, jnp.float32)
-    best_lvl = jnp.full((block,), -1, jnp.int32)
-    best_slot = jnp.full((block,), -1, jnp.int32)
+    rows_p: List[jax.Array] = []
+    rows_s: List[jax.Array] = []
+    bps: List[jax.Array] = []
+    bss: List[jax.Array] = []
     for d, s in enumerate(strides):
-        p1, o1, s1, p2, s2, fl = (
+        pk, tk, sk, p2, s2, fl = (
             lvl_refs[_REFS_PER_LEVEL * d + i][...] for i in range(6))
         reps = s if s <= block else block
         # expand the node window to per-leaf lanes (static repeat)
-        p1 = jnp.repeat(p1, reps, total_repeat_length=block)
-        o1 = jnp.repeat(o1, reps, total_repeat_length=block)
-        s1 = jnp.repeat(s1, reps, total_repeat_length=block)
+        pk = jnp.repeat(pk, reps, axis=1, total_repeat_length=block)
+        tk = jnp.repeat(tk, reps, axis=1, total_repeat_length=block)
+        sk = jnp.repeat(sk, reps, axis=1, total_repeat_length=block)
         p2 = jnp.repeat(p2, reps, total_repeat_length=block)
         s2 = jnp.repeat(s2, reps, total_repeat_length=block)
         fl = jnp.repeat(fl, reps, total_repeat_length=block)
-        excl = (o1 == owner) & (owner >= 0)
-        eff = jnp.where(excl, p2, p1)
-        esl = jnp.where(excl, s2, s1)
         floor = jnp.maximum(floor, fl)
-        live = eff > NEG / 2
-        tie = live & (eff == best_bid) & (esl >= 0) \
-            & ((best_slot < 0) | (esl < best_slot))
-        take = (eff > best_bid) | tie
-        best_bid = jnp.where(take, eff, best_bid)
-        best_lvl = jnp.where(take & live, d, best_lvl)
-        best_slot = jnp.where(take & live, esl, best_slot)
-    rate = jnp.maximum(floor, jnp.maximum(best_bid, 0.0))
-    ok = (best_slot >= 0) & (best_bid >= floor - EPSF)
+        live_k = pk > NEG / 2
+        excl = has_owner[None] & (tk == owner[None])
+        rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
+        rows_s.extend(sk[i] for i in range(k))
+        all_owned = has_owner & live_k[0] \
+            & jnp.all(~live_k | excl, axis=0)
+        rows_p.append(jnp.where(all_owned, p2, NEG))
+        rows_s.append(s2)
+        # hidden-eligible-order bound pair per level — see ref.py
+        full = live_k[k - 1]
+        bps.append(jnp.where(full & all_owned, p2,
+                             jnp.where(full, pk[k - 1], NEG)))
+        bss.append(jnp.where(full & all_owned, s2,
+                             jnp.where(full, sk[k - 1], -1)))
+    P = jnp.stack(rows_p)                  # (n_lvl*(k+1), block)
+    S = jnp.stack(rows_s)
+    D = jnp.repeat(jnp.arange(n_lvl, dtype=jnp.int32), k + 1)[:, None]
+    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[None] - EPSF),
+                         axis=0)
+
+    sel_p, sel_s, sel_d = [], [], []
+    work = P
+    for _ in range(k):
+        pm = jnp.max(work, axis=0)
+        cand = (work > NEG / 2) & (work >= pm[None])
+        sm = jnp.min(jnp.where(cand, S, BIGS), axis=0)
+        selrow = cand & (S == sm[None])
+        any_live = pm > NEG / 2
+        sel_p.append(jnp.where(any_live, pm, NEG))
+        sel_s.append(jnp.where(any_live, sm, -1))
+        sel_d.append(jnp.max(jnp.where(selrow, D, -1), axis=0))
+        work = jnp.where(selrow, NEG, work)
+
+    rate = jnp.maximum(floor, jnp.maximum(sel_p[0], 0.0))
     rate_ref[...] = rate
-    lvl_out[...] = best_lvl
-    slot_out[...] = jnp.where(ok, best_slot, -1)
+    lvl_out[...] = jnp.where(sel_p[0] > NEG / 2, sel_d[0], -1)
+    # prefix-safety gate against the hidden-order bounds — see ref.py
+    slots = []
+    unsafe_seen = jnp.zeros((block,), jnp.bool_)
+    for j in range(k):
+        safe_j = jnp.ones((block,), jnp.bool_)
+        for d in range(n_lvl):
+            outranks = (sel_p[j] > bps[d]) | \
+                ((sel_p[j] == bps[d]) & (sel_s[j] < bss[d]))
+            safe_j = safe_j & ((bps[d] < NEG / 2) | (sel_d[j] == d)
+                               | outranks)
+        unsafe_seen = unsafe_seen | ~safe_j
+        slots.append(jnp.where(
+            (sel_s[j] >= 0) & ~unsafe_seen
+            & (sel_p[j] >= floor - EPSF), sel_s[j], -1))
+    slots_out[...] = jnp.stack(slots)
+    bound = functools.reduce(jnp.maximum, bps)
+    trunc_out[...] = ((elig_count > k) | (bound >= floor - EPSF)
+                      ).astype(jnp.int32)
     evict_out[...] = ((owner >= 0)
                       & (rate > limit + EPSF)).astype(jnp.int32)
 
 
-def clear_pallas(level_p1: Sequence[jax.Array],
-                 level_o1: Sequence[jax.Array],
-                 level_s1: Sequence[jax.Array],
+def clear_pallas(level_pk: Sequence[jax.Array],
+                 level_tk: Sequence[jax.Array],
+                 level_sk: Sequence[jax.Array],
                  level_p2: Sequence[jax.Array],
                  level_s2: Sequence[jax.Array],
                  level_floor: Sequence[jax.Array],
                  strides: Sequence[int], owner: jax.Array,
                  limit: jax.Array,
                  block: int = 512, interpret: bool = True
-                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                            jax.Array]:
     n_leaves = owner.shape[0]
+    k = level_pk[0].shape[0]
     block = min(block, n_leaves)    # tiny trees: one block over all leaves
     assert n_leaves % block == 0, (n_leaves, block)
     grid = (n_leaves // block,)
@@ -96,23 +147,33 @@ def clear_pallas(level_p1: Sequence[jax.Array],
         w = max(block // s, 1)          # nodes visible to one leaf block
         # leaf block i starts at node (i*block)//s, i.e. node-block
         # (i*block)//s//w — for s <= block this reduces to (i,)
-        spec = pl.BlockSpec(
+        spec1 = pl.BlockSpec(
             (w,), lambda i, s=s, w=w: (i * block // s // w,))
-        for arr in (level_p1[d], level_o1[d], level_s1[d],
+        spec2 = pl.BlockSpec(
+            (k, w), lambda i, s=s, w=w: (0, i * block // s // w))
+        for arr in (level_pk[d], level_tk[d], level_sk[d],
                     level_p2[d], level_s2[d], level_floor[d]):
-            pad = (-arr.shape[0]) % w
-            if pad:
-                fillv = NEG if arr.dtype == jnp.float32 else -1
-                arr = jnp.pad(arr, (0, pad), constant_values=fillv)
-            in_specs.append(spec)
+            pad = (-arr.shape[-1]) % w
+            fillv = NEG if arr.dtype == jnp.float32 else -1
+            if arr.ndim == 2:
+                if pad:
+                    arr = jnp.pad(arr, ((0, 0), (0, pad)),
+                                  constant_values=fillv)
+                in_specs.append(spec2)
+            else:
+                if pad:
+                    arr = jnp.pad(arr, (0, pad), constant_values=fillv)
+                in_specs.append(spec1)
             args.append(arr)
     out_shape = (jax.ShapeDtypeStruct((n_leaves,), jnp.float32),
                  jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
+                 jax.ShapeDtypeStruct((k, n_leaves), jnp.int32),
                  jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
                  jax.ShapeDtypeStruct((n_leaves,), jnp.int32))
-    out_specs = (leaf_spec, leaf_spec, leaf_spec, leaf_spec)
+    slate_spec = pl.BlockSpec((k, block), lambda i: (0, i))
+    out_specs = (leaf_spec, leaf_spec, slate_spec, leaf_spec, leaf_spec)
     kern = functools.partial(_clear_kernel, strides=tuple(strides),
-                             block=block)
+                             block=block, k=k)
     return pl.pallas_call(kern, grid=grid, in_specs=in_specs,
                           out_specs=out_specs, out_shape=out_shape,
                           interpret=interpret)(*args)

@@ -3,27 +3,42 @@
 Given the resting-bid table of one type-tree and the regular topology
 (per-level node aggregates), compute for every leaf:
 
-  rate        = max(path floor, best covering bid price, owner-excluded)
-  winner_slot = bid-table slot of the best owner-excluded covering bid
-                whose price meets the leaf's path floor (or -1)
-  evict       = 1 where the leaf is owned and rate exceeds the owner's
-                retention limit (the eviction mask; min-holding deferral
-                is applied by the engine, which also knows the clock)
+  rate       = max(path floor, best covering bid price, owner-excluded)
+  cand_slots = ranked bid-table slots of the top-K owner-excluded covering
+               bids meeting the leaf's path floor (price desc, slot asc;
+               -1 padded) — the leaf's ordered candidate slate.  Entry 0
+               is the classic ``winner_slot``; entries 1..K-1 are the
+               fall-through runners-up the engine's in-wave top-K claim
+               resolution consumes when a better-ranked leaf takes the
+               same order.
+  truncated  = 1 where the slate may be INCOMPLETE (the book holds more
+               eligible orders below the K-th entry).  The engine must
+               stop in-wave fall-through for a leaf that exhausts a
+               truncated slate and re-clear instead — that is what keeps
+               K>1 cascade fixpoints bit-identical to K=1.
+  evict      = 1 where the leaf is owned and rate exceeds the owner's
+               retention limit (the eviction mask; min-holding deferral
+               is applied by the engine, which also knows the clock)
 
 This is the dense re-expression of the paper's matching hot path
 (DESIGN.md §3): per-level segment aggregates of bids + a depth-bounded
-ancestor-path combine.
+ancestor-path combine, generalized from top-1 to a ranked top-K slate.
 
-Owner exclusion is EXACT here: per node we keep the best bid (p1, from
-tenant o1, earliest slot s1) and the best bid from any OTHER tenant
-(p2, earliest slot s2).  For a leaf owned by ``o1`` the effective book
-pressure is (p2, s2) — excluding o1 removes *all* of o1's bids, and the
-best of the rest is by construction the best bid from a different
-tenant.  For any other owner it is (p1, s1).  (A plain "top-2 prices"
-aggregate is wrong when one tenant holds both top bids.)
+Owner exclusion is EXACT here: per node we keep the top-K bids overall
+(price pk, tenant tk, earliest slot sk, ranked price desc / slot asc)
+AND the best bid from any tenant OTHER than the top bid's (p2, s2).  For
+a leaf owned by ``o`` the eligible entries are the ranked entries with
+tk != o; when the owner holds *every* live ranked entry (so tk[0] == o),
+the true owner-excluded best is exactly (p2, s2), which is appended as
+the fall-back candidate.  (A plain "top-2 prices" aggregate is wrong
+when one tenant holds both top bids; a plain top-K is wrong the same way
+when one tenant holds all K.)
 
 Tie-breaks mirror the event-driven engine: price desc, then arrival
-(slot asc) — the ring-buffer slot order is arrival order.
+(slot asc) — ring-buffer slot order is arrival order until the
+allocator laps the table and starts reusing freed holes (see
+``BatchEngine.place``; exact arrival ties past that point are a
+ROADMAP open item).
 """
 from __future__ import annotations
 
@@ -34,19 +49,22 @@ import jax.numpy as jnp
 
 NEG = -1e30
 EPSF = 1e-6
+BIGS = 1 << 30              # slot sentinel above any real table index
 
 
 def segment_aggregates(prices: jax.Array, seg: jax.Array,
-                       tenants: jax.Array, n_seg: int
+                       tenants: jax.Array, n_seg: int, k: int = 1
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                   jax.Array, jax.Array]:
-    """Per-segment best bid and best distinct-second-tenant bid.
+    """Per-segment ranked top-k bids + best distinct-second-tenant bid.
 
     prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 node ids;
     tenants: (nb,) int32 tenant of each bid (-1 inactive).
-    Returns (p1, o1, s1, p2, s2), each (n_seg,):
-      p1/s1 — best price and its earliest slot; o1 — that bid's tenant;
-      p2/s2 — best price/earliest slot among tenants != o1.
+    Returns (pk, tk, sk, p2, s2):
+      pk/tk/sk — (k, n_seg) ranked price/tenant/slot lists, price desc
+        then slot asc (NEG/-1/-1 padded past the live book);
+      p2/s2 — (n_seg,) best price/earliest slot among tenants != tk[0]
+        (the exact owner-exclusion fall-back when tk[0] owns the leaf).
     """
     nb = prices.shape[0]
     live = (prices > NEG / 2) & (tenants >= 0)
@@ -54,20 +72,28 @@ def segment_aggregates(prices: jax.Array, seg: jax.Array,
     slot = jnp.arange(nb, dtype=jnp.int32)
     big = jnp.int32(nb)
 
-    p1 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(p)
-    is1 = live & (p >= p1[seg] - 1e-12)
-    s1 = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
-        jnp.where(is1, slot, big))
-    s1 = jnp.where(s1 >= big, -1, s1)
-    o1 = jnp.where(s1 >= 0, tenants[jnp.clip(s1, 0, nb - 1)], -1)
+    def rank_one(rem, _):
+        pi = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(rem)
+        isi = (rem > NEG / 2) & (rem >= pi[seg])
+        si = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
+            jnp.where(isi, slot, big))
+        si = jnp.where(si >= big, -1, si)
+        ti = jnp.where(si >= 0, tenants[jnp.clip(si, 0, nb - 1)], -1)
+        # mask the selected slot out of its segment for the next rank
+        rem = jnp.where(si[seg] == slot, NEG, rem)
+        return rem, (jnp.where(si >= 0, pi, NEG), ti, si)
 
+    # lax.scan keeps the trace size K-independent (compile time)
+    _, (pk, tk, sk) = jax.lax.scan(rank_one, p, None, length=k)
+
+    o1 = tk[0]
     alt = jnp.where(live & (tenants != o1[seg]), p, NEG)
     p2 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(alt)
-    is2 = (alt > NEG / 2) & (alt >= p2[seg] - 1e-12)
+    is2 = (alt > NEG / 2) & (alt >= p2[seg])
     s2 = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
         jnp.where(is2, slot, big))
     s2 = jnp.where(s2 >= big, -1, s2)
-    return p1, o1, s1, p2, s2
+    return pk, tk, sk, p2, s2
 
 
 def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
@@ -75,57 +101,140 @@ def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
     """Compatibility wrapper: (top1, top1_owner, top2) per segment, where
     top2 is the best bid from a tenant OTHER than top1's (the correct
     owner-exclusion runner-up)."""
-    p1, o1, _, p2, _ = segment_aggregates(prices, seg, owners, n_seg)
-    return p1, o1, p2
+    pk, tk, _, p2, _ = segment_aggregates(prices, seg, owners, n_seg, k=1)
+    return pk[0], tk[0], p2
 
 
-def clear_ref(level_p1: Sequence[jax.Array],
-              level_o1: Sequence[jax.Array],
-              level_s1: Sequence[jax.Array],
+def _leaf_candidates(level_pk: Sequence[jax.Array],
+                     level_tk: Sequence[jax.Array],
+                     level_sk: Sequence[jax.Array],
+                     level_p2: Sequence[jax.Array],
+                     level_s2: Sequence[jax.Array],
+                     level_floor: Sequence[jax.Array],
+                     strides: Sequence[int], owner: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                jax.Array, jax.Array]:
+    """Gather the per-level ranked entries down each leaf's ancestor path.
+
+    Returns (P, S, D, floor, bp, bs): candidate matrices of shape
+    (n_levels*(K+1), n_leaves) — price (owner-excluded entries masked to
+    NEG), slot, level — plus the combined path floor and per-level
+    hidden-order bound pairs (n_levels, n_leaves): the K-th
+    pre-exclusion entry's (price, slot) where the level list is full
+    (NEG/-1 otherwise).  Orders NOT represented in the candidate matrix
+    rank strictly below their own level's bound pair (and below p2 in
+    the all-owned case, which that K-th entry also bounds), so an entry
+    that outranks every OTHER full level's bound — its own level's
+    hidden orders rank below it by construction — provably outranks
+    every hidden order.
+    """
+    n_leaves = owner.shape[0]
+    leaf = jnp.arange(n_leaves)
+    k = level_pk[0].shape[0]
+    has_owner = owner >= 0
+    floor = jnp.zeros((n_leaves,), jnp.float32)
+    rows_p: List[jax.Array] = []
+    rows_s: List[jax.Array] = []
+    bps: List[jax.Array] = []
+    bss: List[jax.Array] = []
+    for d, s in enumerate(strides):
+        idx = leaf // s
+        pk = level_pk[d][:, idx]          # (k, n_leaves)
+        tk = level_tk[d][:, idx]
+        sk = level_sk[d][:, idx]
+        floor = jnp.maximum(floor, level_floor[d][idx])
+        live_k = pk > NEG / 2
+        excl = has_owner[None] & (tk == owner[None])
+        rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
+        rows_s.extend(sk[i] for i in range(k))
+        # exact exclusion fall-back: the owner monopolizes every live
+        # ranked entry, so the true owner-excluded best is (p2, s2)
+        all_owned = has_owner & live_k[0] \
+            & jnp.all(~live_k | excl, axis=0)
+        p2 = level_p2[d][idx]
+        s2 = level_s2[d][idx]
+        rows_p.append(jnp.where(all_owned, p2, NEG))
+        rows_s.append(s2)
+        # a full ranked list may hide further ELIGIBLE orders: they rank
+        # below the K-th pre-exclusion entry — or below (p2, s2) when
+        # the owner monopolizes the list (hidden non-owner bids all rank
+        # below the best one)
+        full = live_k[k - 1]
+        bps.append(jnp.where(full & all_owned, p2,
+                             jnp.where(full, pk[k - 1], NEG)))
+        bss.append(jnp.where(full & all_owned, s2,
+                             jnp.where(full, sk[k - 1], -1)))
+    D = jnp.repeat(jnp.arange(len(strides), dtype=jnp.int32), k + 1)
+    return (jnp.stack(rows_p), jnp.stack(rows_s), D[:, None],
+            floor, jnp.stack(bps), jnp.stack(bss))
+
+
+def clear_ref(level_pk: Sequence[jax.Array],
+              level_tk: Sequence[jax.Array],
+              level_sk: Sequence[jax.Array],
               level_p2: Sequence[jax.Array],
               level_s2: Sequence[jax.Array],
               level_floor: Sequence[jax.Array],
               strides: Sequence[int],
               owner: jax.Array,
               limit: jax.Array
-              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """Combine per-level aggregates down the ancestor path of each leaf.
+              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                         jax.Array]:
+    """Combine per-level ranked aggregates down each leaf's ancestor path.
 
     Level d arrays have one entry per node at that level; leaf i's ancestor
     at level d is i // strides[d] (regular tree). ``owner``: (n_leaves,)
     int32 current owner of each leaf (-1 = operator/idle); ``limit``:
     (n_leaves,) f32 retention limit of the current owner.
 
-    Returns (rate, best_level, winner_slot, evict) — see module docstring.
+    Returns (rate, best_level, cand_slots, truncated, evict) — see the
+    module docstring.  ``cand_slots`` is (K, n_leaves) with K =
+    level_pk[0].shape[0]; entry 0 is the classic single winner_slot.
     """
-    n_leaves = owner.shape[0]
-    leaf = jnp.arange(n_leaves)
-    floor = jnp.zeros((n_leaves,), jnp.float32)
-    best_bid = jnp.full((n_leaves,), NEG, jnp.float32)
-    best_level = jnp.full((n_leaves,), -1, jnp.int32)
-    best_slot = jnp.full((n_leaves,), -1, jnp.int32)
-    for d, s in enumerate(strides):
-        idx = leaf // s
-        p1 = level_p1[d][idx]
-        o1 = level_o1[d][idx]
-        s1 = level_s1[d][idx]
-        p2 = level_p2[d][idx]
-        s2 = level_s2[d][idx]
-        fl = level_floor[d][idx]
-        excl = (o1 == owner) & (owner >= 0)
-        eff = jnp.where(excl, p2, p1)
-        esl = jnp.where(excl, s2, s1)
-        floor = jnp.maximum(floor, fl)
-        live = eff > NEG / 2
-        # price desc, then earliest arrival (lowest slot) across books
-        tie = live & (eff == best_bid) & (esl >= 0) \
-            & ((best_slot < 0) | (esl < best_slot))
-        take = (eff > best_bid) | tie
-        best_bid = jnp.where(take, eff, best_bid)
-        best_level = jnp.where(take & live, d, best_level)
-        best_slot = jnp.where(take & live, esl, best_slot)
-    rate = jnp.maximum(floor, jnp.maximum(best_bid, 0.0))
-    ok = (best_slot >= 0) & (best_bid >= floor - EPSF)
-    winner_slot = jnp.where(ok, best_slot, -1)
+    K = level_pk[0].shape[0]
+    P, S, D, floor, bp, bs = _leaf_candidates(
+        level_pk, level_tk, level_sk, level_p2, level_s2, level_floor,
+        strides, owner)
+    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[None] - EPSF),
+                         axis=0)
+
+    # top-K merge by (price desc, slot asc): two stable argsorts (a
+    # lexsort) — one fused sort pass instead of K max-reduction sweeps
+    # over the full candidate matrix (the clear's memory-traffic hot
+    # spot at 64k+ leaves).  Live rows have unique (price, slot), so
+    # the ordering is a strict total order; dead rows (NEG) sink.
+    o1 = jnp.argsort(S, axis=0)                     # slot asc
+    p1 = jnp.take_along_axis(P, o1, axis=0)
+    o2 = jnp.argsort(-p1, axis=0, stable=True)      # price desc
+    top = jnp.take_along_axis(o1, o2, axis=0)[:K]
+    sel_p = jnp.take_along_axis(P, top, axis=0)
+    live_sel = sel_p > NEG / 2
+    sel_s = jnp.where(live_sel, jnp.take_along_axis(S, top, axis=0), -1)
+    sel_d = jnp.where(live_sel, D[:, 0][top], -1)
+
+    rate = jnp.maximum(floor, jnp.maximum(sel_p[0], 0.0))
+    best_level = jnp.where(sel_p[0] > NEG / 2, sel_d[0], -1)
+    # the slate is only prefix-exact down to the hidden-order bounds: a
+    # selected entry is trusted iff it outranks (price desc, slot asc)
+    # every OTHER full level's K-th pre-exclusion entry — its own
+    # level's hidden orders rank below it by construction.  Entries at
+    # or below a foreign bound could be outranked by that level's
+    # hidden orders, so the slate is cut there (the engine falls back
+    # to a full re-clear via the truncation flag).
+    n_lvl = bp.shape[0]
+    safe = jnp.ones(sel_p.shape, jnp.bool_)
+    for d in range(n_lvl):
+        outranks = (sel_p > bp[d][None]) | \
+            ((sel_p == bp[d][None]) & (sel_s < bs[d][None]))
+        safe = safe & ((bp[d][None] < NEG / 2) | (sel_d == d) | outranks)
+    prefix_safe = jnp.cumsum((~safe).astype(jnp.int32), axis=0) == 0
+    cand_slots = jnp.where((sel_s >= 0) & prefix_safe
+                           & (sel_p >= floor[None] - EPSF), sel_s, -1)
+    # the slate may be incomplete when more than K floor-eligible
+    # candidates were merged, or when some full level list can still
+    # hide floor-eligible orders below its K-th entry
+    bound = jnp.max(bp, axis=0)
+    truncated = ((elig_count > K) | (bound >= floor - EPSF)
+                 ).astype(jnp.int32)
     evict = ((owner >= 0) & (rate > limit + EPSF)).astype(jnp.int32)
-    return rate, best_level, winner_slot, evict
+    return rate, best_level, cand_slots, truncated, evict

@@ -66,11 +66,12 @@ class BatchMarket:
     def __init__(self, topo: Topology,
                  controls: Optional[VolatilityControls] = None,
                  capacity: int = 1 << 12, n_tenants: int = 256,
-                 use_pallas: bool = False) -> None:
+                 use_pallas: bool = False, k: int = 8) -> None:
         self.topo = topo
         self.controls = controls or VolatilityControls()
         self.now = 0.0
         self.n_tenants = n_tenants
+        self.k = k
         self.engines: Dict[str, BatchEngine] = {}
         self.states: Dict[str, dict] = {}
         self._np: Dict[str, Optional[dict]] = {}
@@ -123,7 +124,7 @@ class BatchMarket:
                 self._node_map[nid] = (rtype, d, idx)
         eng = BatchEngine(tree, capacity=capacity, use_pallas=use_pallas,
                           n_tenants=self.n_tenants,
-                          controls=self.controls)
+                          controls=self.controls, k=self.k)
         self.engines[rtype] = eng
         self.states[rtype] = eng.init_state()
         self._np[rtype] = None
@@ -203,21 +204,33 @@ class BatchMarket:
         for rtype in self.engines:
             self._step(rtype)
 
+    def _next_slot(self, rtype: str) -> Optional[int]:
+        """The slot the engine's skip-over-live allocator will pick for
+        the next single bid: first free slot in ring order from head
+        (None when the table is full)."""
+        host = self._host(rtype)
+        cap = self.engines[rtype].capacity
+        head = int(self.states[rtype]["head"])
+        live = (host["price"] > NEG / 2) & (host["tenant"] >= 0)
+        if live.all():
+            return None
+        ring = (np.arange(cap) - head) % cap
+        return int(np.argmin(np.where(live, cap, ring)))
+
     def place_order(self, tenant: str, scope: int, price: float,
                     limit: Optional[float] = None) -> int:
         assert tenant != OPERATOR
         rtype, d, idx = self._node_map[scope]
         tid = self._tenant_id(tenant)
         limit = limit if limit is not None else price
-        slot = int(self.states[rtype]["head"])
-        host = self._host(rtype)
-        if host["price"][slot] > NEG / 2 and host["tenant"][slot] >= 0:
-            # the ring cursor wrapped onto a LIVE resting order; silently
-            # overwriting it would corrupt the book — fail loudly
+        slot = self._next_slot(rtype)
+        if slot is None:
+            # the table holds `capacity` live resting orders; the engine
+            # would drop the bid (state["dropped"]) — fail loudly here
             raise RuntimeError(
                 f"{rtype} bid table full (capacity "
-                f"{self.engines[rtype].capacity}): ring wrapped onto a "
-                f"live order; raise BatchMarket(capacity=...)")
+                f"{self.engines[rtype].capacity}): the synchronous facade "
+                f"cannot drop bids; raise BatchMarket(capacity=...)")
         self._slot_gen[rtype][slot] += 1
         self._step(rtype, new_bids=self._bid_arrays(
             price, limit, d, idx, tid))

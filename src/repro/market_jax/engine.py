@@ -23,17 +23,30 @@ jitted ``step`` runs one complete market epoch:
   4. **Bid admission** — incoming bids are clipped to ``max_bid_multiple``
      x the scope's reference price (max of path floors, top of the scope's
      book, charged rates under the scope) and inserted into the table.
+     Insertion skips over live resting orders (a full table drops the
+     overflow and counts it in ``state["dropped"]`` instead of silently
+     overwriting the book).
   5. **Clear / evict / transfer cascade** — repeat until fixpoint:
-     recompute per-level aggregates and the clearing pass (jnp oracle or
-     Pallas kernel: per-leaf charged rate, owner-excluded winning bid,
-     eviction mask); evict owners whose rate exceeds their retention limit
-     (outside the min-holding window); hand each evicted / explicitly
-     relinquished / idle leaf to its best covering bid meeting the path
-     floor (OCO: a winning order is consumed everywhere atomically, and a
-     single order wins at most one leaf per wave — contested leaves retry
-     against the runner-up next wave); leaves nobody covers fall back to
-     the operator.  The loop is a ``lax.while_loop`` so the whole step
-     stays jitted.
+     recompute the per-level ranked aggregates (only for levels whose bid
+     table changed since the previous wave — consumed slots are the only
+     mid-cascade mutation) and the clearing pass (jnp oracle or Pallas
+     kernel: per-leaf charged rate, ranked owner-excluded top-K candidate
+     slate, eviction mask); evict owners whose rate exceeds their
+     retention limit (outside the min-holding window); hand each evicted /
+     explicitly relinquished / idle leaf to its best covering bid meeting
+     the path floor.  One wave runs K in-wave claim rounds: a winning
+     order is consumed everywhere atomically (OCO) and wins at most one
+     leaf per round (lowest leaf index), and a contested leaf falls
+     through to its slate runner-up *within the wave* instead of waiting
+     for the next one — a cold-start flood of M marketable bids resolves
+     in O(ceil(M/K)) waves instead of O(M).  Fall-through stays
+     bit-identical to the K=1 cascade: an evicted leaf re-checks its
+     retention limit against each fall-through price (pressure that was
+     consumed no longer evicts), and a leaf that exhausts a possibly
+     truncated slate freezes in-wave resolution and waits for the next
+     full re-clear.  Leaves nobody covers fall back to the operator.  The
+     loop is a ``lax.while_loop`` (wave count observable via
+     ``state["waves"]``) so the whole step stays jitted.
 
 ``transfers`` reports per-leaf {moved, old, new} owner ids for the step;
 ``bills`` is the cumulative per-tenant bill vector. Tenants are dense int
@@ -44,7 +57,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -77,13 +90,14 @@ class BatchEngine:
     def __init__(self, tree: TreeSpec, capacity: int = 1 << 16,
                  use_pallas: bool = False, n_tenants: int = 1024,
                  controls: Optional[VolatilityControls] = None,
-                 interpret: bool = True) -> None:
+                 interpret: bool = True, k: int = 8) -> None:
         self.tree = tree
         self.capacity = capacity
         self.use_pallas = use_pallas
         self.n_tenants = n_tenants
         self.controls = controls or VolatilityControls()
         self.interpret = interpret
+        self.k = max(1, int(k))   # contested claims resolved per wave
 
     def init_state(self) -> Dict[str, jax.Array]:
         t = self.tree
@@ -95,6 +109,7 @@ class BatchEngine:
             "node": jnp.zeros((self.capacity,), jnp.int32),
             "tenant": jnp.full((self.capacity,), -1, jnp.int32),
             "head": jnp.zeros((), jnp.int32),       # ring-buffer cursor
+            "dropped": jnp.zeros((), jnp.int32),    # overflow drop count
             # per-leaf ownership
             "owner": jnp.full((t.n_leaves,), -1, jnp.int32),
             "limit": jnp.full((t.n_leaves,), jnp.inf, jnp.float32),
@@ -103,6 +118,10 @@ class BatchEngine:
             # billing
             "bills": jnp.zeros((self.n_tenants,), jnp.float32),
             "t": jnp.zeros((), jnp.float32),
+            # cascade instrumentation: cumulative clear/evict/transfer
+            # wave count (each while_loop iteration, incl. the final
+            # fixpoint-check wave)
+            "waves": jnp.zeros((), jnp.int32),
             # operator floors (+ per-node last-update time for the
             # floor_fall_rate bound); lists so callers can seed floors
             # by item assignment — step normalizes to tuples
@@ -115,24 +134,50 @@ class BatchEngine:
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
     def place(self, state, prices, levels, nodes, tenants, limits=None):
-        """Insert a batch of scoped bids (ring-buffer slots). NOTE: this
-        low-level insert skips volatility clipping and does not re-clear;
-        use ``step`` for full semantics."""
+        """Insert a batch of scoped bids into free table slots.
+
+        Slots are allocated in ring order starting at ``head``, skipping
+        over live resting orders (a wrapped cursor must not overwrite the
+        book). Bids that do not fit — the table holds ``capacity`` live
+        orders — are dropped and counted in ``state["dropped"]``.
+
+        Known limitation: once the cursor has lapped the table, reused
+        holes break the "slot asc == arrival asc" identity the clear
+        tie-break relies on, so EQUAL-price bids placed after a lap may
+        win in slot order rather than strict arrival order (the event
+        engine's seq order).  Exact arrival ties need a monotone
+        per-order seq stamp threaded through the ranked aggregates —
+        ROADMAP open item.
+
+        NOTE: this low-level insert skips volatility clipping and does
+        not re-clear; use ``step`` for full semantics."""
         if limits is None:
             limits = prices
-        n = prices.shape[0]
-        idx = (state["head"] + jnp.arange(n)) % self.capacity
-        live = tenants >= 0
+        cap = self.capacity
+        slot = jnp.arange(cap, dtype=jnp.int32)
+        live_tab = (state["price"] > NEG / 2) & (state["tenant"] >= 0)
+        ring = (slot - state["head"]) % cap
+        # free slots first, in ring order from the cursor
+        order = jnp.argsort(jnp.where(live_tab, cap + ring, ring))
+        n_free = cap - jnp.sum(live_tab.astype(jnp.int32))
+        live_in = tenants >= 0
+        j = jnp.cumsum(live_in.astype(jnp.int32)) - 1   # rank among live
+        ok = live_in & (j < n_free)
+        dest = order[jnp.clip(j, 0, cap - 1)]
+        idx = jnp.where(ok, dest, cap)
         state = dict(state)
-        state["price"] = state["price"].at[idx].set(
-            jnp.where(live, prices, NEG))
+        state["price"] = state["price"].at[idx].set(prices, mode="drop")
         state["blimit"] = state["blimit"].at[idx].set(
-            jnp.maximum(prices, limits))
-        state["level"] = state["level"].at[idx].set(levels)
-        state["node"] = state["node"].at[idx].set(nodes)
-        state["tenant"] = state["tenant"].at[idx].set(
-            jnp.where(live, tenants, -1))
-        state["head"] = (state["head"] + n) % self.capacity
+            jnp.maximum(prices, limits), mode="drop")
+        state["level"] = state["level"].at[idx].set(levels, mode="drop")
+        state["node"] = state["node"].at[idx].set(nodes, mode="drop")
+        state["tenant"] = state["tenant"].at[idx].set(tenants, mode="drop")
+        n_used = jnp.sum(ok.astype(jnp.int32))
+        state["dropped"] = state["dropped"] + \
+            jnp.sum(live_in.astype(jnp.int32)) - n_used
+        last = jnp.max(jnp.where(ok, ring[jnp.clip(dest, 0, cap - 1)], -1))
+        state["head"] = jnp.where(
+            n_used > 0, (state["head"] + last + 1) % cap, state["head"])
         return state
 
     @functools.partial(jax.jit, static_argnums=0)
@@ -145,39 +190,52 @@ class BatchEngine:
         return state
 
     # ------------------------------------------------------------------
+    def _level_aggs(self, state, d: int):
+        """Ranked owner-exclusion aggregates for one level's book."""
+        n_d = self.tree.nodes_at(d)
+        mask = (state["level"] == d) & (state["tenant"] >= 0)
+        prices = jnp.where(mask, state["price"], NEG)
+        seg = jnp.clip(state["node"], 0, n_d - 1)
+        return R.segment_aggregates(prices, seg, state["tenant"], n_d,
+                                    self.k)
+
     def _aggregates(self, state):
-        """Per-level owner-exclusion aggregates (p1, o1, s1, p2, s2)."""
-        t = self.tree
-        p1s, o1s, s1s, p2s, s2s = [], [], [], [], []
-        for d in range(t.n_levels):
-            n_d = t.nodes_at(d)
-            mask = (state["level"] == d) & (state["tenant"] >= 0)
-            prices = jnp.where(mask, state["price"], NEG)
-            seg = jnp.clip(state["node"], 0, n_d - 1)
-            p1, o1, s1, p2, s2 = R.segment_aggregates(
-                prices, seg, state["tenant"], n_d)
-            p1s.append(p1)
-            o1s.append(o1)
-            s1s.append(s1)
-            p2s.append(p2)
-            s2s.append(s2)
-        return p1s, o1s, s1s, p2s, s2s
+        """Per-level ranked aggregates (pk, tk, sk, p2, s2) — pk/tk/sk
+        are (k, nodes_at(d)) top-k (price, tenant, slot) lists."""
+        aggs = [self._level_aggs(state, d)
+                for d in range(self.tree.n_levels)]
+        return tuple([a[i] for a in aggs] for i in range(5))
+
+    def _clear_from_aggs(self, state, aggs, interpret=None):
+        return clear_ops.clear(
+            tuple(a[0] for a in aggs), tuple(a[1] for a in aggs),
+            tuple(a[2] for a in aggs), tuple(a[3] for a in aggs),
+            tuple(a[4] for a in aggs), tuple(state["floor"]),
+            self.tree.strides, state["owner"], state["limit"],
+            use_pallas=self.use_pallas,
+            interpret=self.interpret if interpret is None else interpret)
 
     def _clear_arrays(self, state, interpret: Optional[bool] = None):
-        p1s, o1s, s1s, p2s, s2s = self._aggregates(state)
-        return clear_ops.clear(
-            tuple(p1s), tuple(o1s), tuple(s1s), tuple(p2s), tuple(s2s),
-            tuple(state["floor"]), self.tree.strides, state["owner"],
-            state["limit"], use_pallas=self.use_pallas,
-            interpret=self.interpret if interpret is None else interpret)
+        aggs = [self._level_aggs(state, d)
+                for d in range(self.tree.n_levels)]
+        return self._clear_from_aggs(state, aggs, interpret)
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
     def clear(self, state, interpret: bool = True):
         """Full clearing pass: per-leaf charged rate, winning level, and
-        winning (owner-excluded, floor-gated) bid slot."""
-        rate, best_level, winner_slot, _ = self._clear_arrays(
+        winning (owner-excluded, floor-gated) bid slot (the head of the
+        ranked candidate slate — use ``clear_topk`` for all K)."""
+        rate, best_level, cands, _, _ = self._clear_arrays(
             state, interpret)
-        return rate, best_level, winner_slot
+        return rate, best_level, cands[0]
+
+    @functools.partial(jax.jit, static_argnums=(0, 2))
+    def clear_topk(self, state, interpret: bool = True):
+        """Full clearing pass with the ranked (K, n_leaves) candidate
+        slate and the slate-truncation flag."""
+        rate, best_level, cands, trunc, _ = self._clear_arrays(
+            state, interpret)
+        return rate, best_level, cands, trunc
 
     # ------------------------------------------------------------------
     def _clip_bids(self, state, prices, levels, nodes):
@@ -219,60 +277,154 @@ class BatchEngine:
 
     # ------------------------------------------------------------------
     def _cascade(self, state, t, release):
-        """Clear / evict / transfer to fixpoint (see module docstring)."""
-        n_leaves = self.tree.n_leaves
+        """Clear / evict / transfer to fixpoint (see module docstring).
+
+        Each wave resolves up to K contested OCO claims via in-wave
+        fall-through rounds; per-level aggregates are hoisted out of the
+        loop and only rebuilt for levels whose book changed (consumed
+        slots) since the previous wave."""
+        tree = self.tree
+        n_leaves = tree.n_leaves
+        n_lvl = tree.n_levels
+        K = self.k
+        cap = self.capacity
         leafid = jnp.arange(n_leaves, dtype=jnp.int32)
         min_hold = self.controls.min_holding_s
+        # path floors are cascade-invariant: hoist the per-leaf combine
+        floor_leaf = jnp.zeros((n_leaves,), jnp.float32)
+        for d, s in enumerate(tree.strides):
+            floor_leaf = jnp.maximum(floor_leaf,
+                                     state["floor"][d][leafid // s])
 
         def body(carry):
-            st, rel, _ = carry
-            rate, _lvl, slot, evict_p = self._clear_arrays(st)
+            st, rel, aggs, changed, _ = carry
+            # incremental refresh: only levels whose book changed since
+            # the previous wave are re-aggregated
+            aggs = tuple(
+                lax.cond(changed[d],
+                         functools.partial(self._level_aggs, d=d),
+                         lambda st_, a=aggs[d]: a,
+                         st)
+                for d in range(n_lvl))
+            rate, _lvl, cands, trunc, evict_p = self._clear_from_aggs(
+                st, aggs)
             st = dict(st)
             st["rate"] = rate
+            st["waves"] = st["waves"] + 1
             owner = st["owner"]
             evict = evict_p != 0
             if min_hold > 0:
                 evict = evict & ((t - st["acq_t"]) >= min_hold)
-            sell = (owner < 0) & (slot >= 0)        # idle supply matching
+            trunc_b = trunc != 0
+            slot0 = cands[0]
+            sell = (owner < 0) & (slot0 >= 0)    # idle supply matching
             # idle supply FIRST (matching Market._try_immediate_match):
             # while any marketable bid can still fill an idle leaf, its
             # pressure must not evict anyone — it will be consumed
             sell_pending = jnp.any(sell)
             evict = evict & ~sell_pending
             releasing = rel & (owner >= 0) & ~sell_pending
-            moving = evict | releasing
-            claim = (moving | sell) & (slot >= 0)
-            # OCO within a wave: one order wins at most one leaf — the
-            # lowest-index claiming leaf takes the slot; contested
-            # evictions re-decide against the runner-up next wave
-            claimer = jnp.full((self.capacity,), n_leaves, jnp.int32).at[
-                jnp.where(claim, slot, self.capacity)].min(
-                jnp.where(claim, leafid, n_leaves), mode="drop")
-            slot_safe = jnp.clip(slot, 0, self.capacity - 1)
-            win = claim & (claimer[slot_safe] == leafid)
-            reclaim = moving & (slot < 0)           # operator reclaims
-            new_own = st["tenant"][slot_safe]
-            new_lim = st["blimit"][slot_safe]
-            moved = win | reclaim
-            st["owner"] = jnp.where(win, new_own,
-                                    jnp.where(reclaim, -1, owner))
-            st["limit"] = jnp.where(win, new_lim,
-                                    jnp.where(reclaim, jnp.inf,
-                                              st["limit"]))
-            st["acq_t"] = jnp.where(moved, t, st["acq_t"])
-            # consume winning orders (the OCO set dissolves atomically)
-            cons = jnp.zeros((self.capacity,), jnp.bool_).at[
-                jnp.where(win, slot, self.capacity)].set(
-                True, mode="drop")
-            st["price"] = jnp.where(cons, NEG, st["price"])
-            st["tenant"] = jnp.where(cons, -1, st["tenant"])
-            return st, rel & ~moved, jnp.any(moved)
+            unresolved0 = evict | releasing | sell
+            # an exhausted slate is conclusive when it was complete
+            # (not truncated) OR empty at wave start (the clear's top-1
+            # is exact for the wave book, and consumption only removes
+            # orders); otherwise the leaf needs a full re-clear
+            conclusive = ~trunc_b | (slot0 < 0)
+            price_tab = st["price"]
+            tenant_tab = st["tenant"]
+            blimit_tab = st["blimit"]
+
+            def round_one(rc, _):
+                (owner_c, limit_c, acq_c, consumed, unresolved, moved,
+                 go) = rc
+
+                # proposal: each unresolved leaf's best not-yet-consumed
+                # slate entry (exact fall-through — ref.clear_ref)
+                def prop_one(pc, sj):
+                    prop_i, found = pc
+                    okj = (sj >= 0) & \
+                        ~consumed[jnp.clip(sj, 0, cap - 1)]
+                    return (jnp.where(~found & okj, sj, prop_i),
+                            found | okj), None
+
+                (prop, _), _ = lax.scan(
+                    prop_one,
+                    (jnp.full((n_leaves,), -1, jnp.int32),
+                     jnp.zeros((n_leaves,), jnp.bool_)), cands)
+                prop = jnp.where(unresolved, prop, -1)
+                ps = jnp.clip(prop, 0, cap - 1)
+                # an evicted leaf re-checks its limit against the
+                # fall-through price: pressure that another leaf
+                # consumed no longer evicts (exactly what a K=1
+                # re-clear would decide)
+                floor_evicts = floor_leaf > limit_c + EPSF
+                evict_still = floor_evicts | \
+                    ((prop >= 0) & (price_tab[ps] > limit_c + EPSF))
+                lapsed_raw = unresolved & evict & ~releasing & ~sell \
+                    & (prop >= 0) & ~evict_still
+                active = unresolved & ~lapsed_raw
+                exhausted = active & (prop < 0)
+                # a leaf that exhausts a truncated slate needs a full
+                # re-clear: freeze the whole round (and the rest of the
+                # wave) — K=1 waves resolve everything simultaneously,
+                # so letting ANY action slip past the freeze would
+                # reorder it against the frozen leaf's deferred claim
+                go = go & ~jnp.any(exhausted & ~conclusive)
+                lapsed = lapsed_raw & go
+                act = active & (prop >= 0) & go
+                # OCO within a round: one order wins at most one leaf —
+                # the lowest-index claiming leaf takes the slot;
+                # contested leaves fall to their runner-up next round
+                claimer = jnp.full((cap,), n_leaves, jnp.int32).at[
+                    jnp.where(act, prop, cap)].min(
+                    jnp.where(act, leafid, n_leaves), mode="drop")
+                win = act & (claimer[ps] == leafid)
+                # movers with a conclusively exhausted slate fall back
+                # to the operator (releases always; evictions only
+                # while the floor itself still exceeds the limit)
+                done = exhausted & conclusive & go
+                recl = done & (releasing | (evict & floor_evicts))
+                moved_r = win | recl
+                owner_c = jnp.where(
+                    win, tenant_tab[ps], jnp.where(recl, -1, owner_c))
+                limit_c = jnp.where(
+                    win, blimit_tab[ps],
+                    jnp.where(recl, jnp.inf, limit_c))
+                acq_c = jnp.where(moved_r, t, acq_c)
+                consumed = consumed.at[jnp.where(win, prop, cap)].set(
+                    True, mode="drop")
+                # a reclaim creates NEW idle supply mid-wave: under the
+                # idle-supply-first rule the freshly idle leaf's sells
+                # (including the old owner's now-unexcluded bids) must
+                # gate the next resolution — only a full re-clear sees
+                # them, so freeze the remaining rounds
+                go = go & ~jnp.any(recl)
+                return (owner_c, limit_c, acq_c, consumed,
+                        unresolved & ~moved_r & ~lapsed & ~done,
+                        moved | moved_r, go), None
+
+            rc0 = (st["owner"], st["limit"], st["acq_t"],
+                   jnp.zeros((cap,), jnp.bool_), unresolved0,
+                   jnp.zeros((n_leaves,), jnp.bool_), jnp.asarray(True))
+            (st["owner"], st["limit"], st["acq_t"], consumed, _, moved,
+             _), _ = lax.scan(round_one, rc0, None, length=K)
+            # consume winning orders (each OCO set dissolves atomically)
+            st["price"] = jnp.where(consumed, NEG, st["price"])
+            st["tenant"] = jnp.where(consumed, -1, st["tenant"])
+            changed = jnp.zeros((n_lvl,), jnp.bool_).at[
+                jnp.where(consumed,
+                          jnp.clip(st["level"], 0, n_lvl - 1),
+                          n_lvl)].set(True, mode="drop")
+            return st, rel & ~moved, aggs, changed, jnp.any(moved)
 
         def cond(carry):
-            return carry[2]
+            return carry[4]
 
-        state, release, _ = lax.while_loop(
-            cond, body, (state, release, jnp.asarray(True)))
+        aggs0 = tuple(self._level_aggs(state, d) for d in range(n_lvl))
+        changed0 = jnp.zeros((n_lvl,), jnp.bool_)
+        state, release, _, _, _ = lax.while_loop(
+            cond, body,
+            (state, release, aggs0, changed0, jnp.asarray(True)))
         return state
 
     # ------------------------------------------------------------------

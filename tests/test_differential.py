@@ -92,6 +92,49 @@ def test_differential_two_rtypes():
     replay(topo, None, seed=2)
 
 
+def test_differential_cold_start_flood():
+    """Thousands of marketable bids landing at once (a floor drop turns
+    the whole resting book marketable simultaneously): the event engine
+    and the batch engine must agree on final owners, rates and bills.
+
+    The event engine resolves the flood one transfer at a time; the
+    batch engine resolves K contested OCO claims per cascade wave — the
+    outcome must be identical (price desc / arrival asc priority,
+    best bid to the lowest leaf)."""
+    topo = build_cluster({"H100": 32}, gpus_per_host=4, hosts_per_rack=4,
+                         racks_per_zone=2)
+    ev = Market(topo)
+    bm = BatchMarket(topo, capacity=1 << 12, n_tenants=64, k=8)
+    root = topo.roots["H100"]
+    leaves = topo.leaves_of(root)
+    ev.set_floor(root, 50.0)
+    bm.set_floor(root, 50.0)
+    rng = np.random.default_rng(11)
+    n_bids = 2000
+    tenants = [f"t{i}" for i in range(24)]
+    for i in range(n_bids):
+        t = tenants[int(rng.integers(len(tenants)))]
+        price = float(rng.uniform(1.0, 40.0))        # rests below floor
+        limit = price * float(rng.uniform(1.0, 1.5))
+        ev.place_order(t, root, price, limit=limit)
+        bm.place_order(t, root, price, limit=limit)
+    assert all(ev.owner_of(l) == OPERATOR for l in leaves)
+    # the flood: one floor drop makes every resting bid marketable
+    ev.set_floor(root, 2.0)
+    bm.set_floor(root, 2.0)
+    for leaf in leaves:
+        assert ev.owner_of(leaf) == bm.owner_of(leaf), leaf
+        assert ev.market_rate(leaf) == pytest.approx(
+            bm.market_rate(leaf), abs=1e-4), leaf
+    ev.advance_to(3600.0)
+    bm.advance_to(3600.0)
+    eb, bb = ev.settle(), bm.settle()
+    for t in tenants:
+        assert eb.get(t, 0.0) == pytest.approx(
+            bb.get(t, 0.0), rel=1e-4, abs=1e-3), t
+    assert ev.stats["transfers"] == bm.stats["transfers"] == len(leaves)
+
+
 def test_differential_volatility_controls():
     """min-holding deferral, bounded floor falls and bid clipping active
     (tree kept <= 64 leaves so the event engine's first-64-leaf clip

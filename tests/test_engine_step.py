@@ -181,6 +181,83 @@ class TestBidClipping:
         assert float(st["rate"][0]) == pytest.approx(4.0)
 
 
+class TestPlacement:
+    def _place_n(self, eng, st, prices, tenant0=0):
+        n = len(prices)
+        return eng.place(
+            st, jnp.array(prices, jnp.float32),
+            jnp.full((n,), eng.tree.n_levels - 1, jnp.int32),
+            jnp.zeros((n,), jnp.int32),
+            jnp.array([tenant0 + i for i in range(n)], jnp.int32))
+
+    def test_full_table_drops_instead_of_overwriting(self):
+        """Filling the table past capacity must not silently overwrite
+        live resting bids — the overflow is dropped and counted."""
+        tree = TreeSpec(4, (1, 2, 4))
+        eng = BatchEngine(tree, capacity=8, n_tenants=64)
+        st = eng.init_state()
+        st = self._place_n(eng, st, [2.0 + 0.1 * i for i in range(8)])
+        before = np.asarray(st["price"]).copy()
+        st = self._place_n(eng, st, [9.0, 9.1, 9.2], tenant0=20)
+        assert int(st["dropped"]) == 3
+        np.testing.assert_array_equal(np.asarray(st["price"]), before)
+        assert int(jnp.sum(st["tenant"] >= 0)) == 8
+
+    def test_wraparound_skips_live_orders(self):
+        """A wrapped ring cursor allocates the free holes (cancelled
+        slots) instead of clobbering live resting orders."""
+        tree = TreeSpec(4, (1, 2, 4))
+        eng = BatchEngine(tree, capacity=8, n_tenants=64)
+        st = eng.init_state()
+        st = self._place_n(eng, st, [2.0 + 0.1 * i for i in range(6)])
+        st = eng.cancel(st, jnp.array([1, 3], jnp.int32))
+        live_before = {i: float(st["price"][i]) for i in (0, 2, 4, 5)}
+        st = self._place_n(eng, st, [9.0, 9.1, 9.2, 9.3], tenant0=20)
+        assert int(st["dropped"]) == 0
+        prices = np.asarray(st["price"])
+        # ring order from head=6: slots 6, 7, then the holes 1, 3
+        assert prices[6] == pytest.approx(9.0)
+        assert prices[7] == pytest.approx(9.1)
+        assert prices[1] == pytest.approx(9.2)
+        assert prices[3] == pytest.approx(9.3)
+        for i, p in live_before.items():
+            assert prices[i] == pytest.approx(p)   # survivors untouched
+        st = self._place_n(eng, st, [9.9], tenant0=40)  # now full
+        assert int(st["dropped"]) == 1
+
+
+class TestColdStartFlood:
+    def test_flood_wave_bound_and_k1_equivalence(self):
+        """2048 marketable root bids onto idle supply resolve in
+        <= ceil(2048/K) + 2 waves, with owners/rates/bills bit-identical
+        to the K=1 cascade."""
+        tree = build_tree(4096)
+        m = 2048
+        rng = np.random.default_rng(0)
+        prices = rng.uniform(3.0, 9.0, m).astype(np.float32)
+        nb = {"price": jnp.array(prices),
+              "limit": jnp.array(prices * 1.5),
+              "level": jnp.full((m,), tree.n_levels - 1, jnp.int32),
+              "node": jnp.zeros((m,), jnp.int32),
+              # repeated tenants exercise same-tenant shadowing in the
+              # ranked per-node lists
+              "tenant": jnp.array(rng.integers(0, 300, m), jnp.int32)}
+        res = {}
+        for k in (1, 8):
+            eng = BatchEngine(tree, capacity=1 << 12, n_tenants=1024,
+                              k=k)
+            st = eng.init_state()
+            st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+            st, _, bills = eng.step(st, 30.0, nb)
+            res[k] = (np.asarray(st["owner"]), np.asarray(st["rate"]),
+                      np.asarray(bills), int(st["waves"]))
+        assert res[8][3] <= -(-m // 8) + 2, res[8][3]
+        assert (res[8][0] >= 0).sum() == m      # every bid filled once
+        np.testing.assert_array_equal(res[1][0], res[8][0])
+        np.testing.assert_array_equal(res[1][1], res[8][1])
+        np.testing.assert_array_equal(res[1][2], res[8][2])
+
+
 class TestPallasKernelParity:
     def test_pallas_kernel_across_pool_sizes(self):
         from repro.kernels.market_clear.ops import clear
@@ -202,19 +279,20 @@ class TestPallasKernelParity:
                 rng.integers(-1, 30, n_leaves), jnp.int32)
             st["limit"] = jnp.array(
                 rng.uniform(3, 8, n_leaves), jnp.float32)
-            p1, o1, s1, p2, s2 = eng._aggregates(st)
-            args = (tuple(p1), tuple(o1), tuple(s1), tuple(p2),
-                    tuple(s2), tuple(st["floor"]), tree.strides,
-                    st["owner"], st["limit"])
-            r_ref, l_ref, w_ref, e_ref = clear(*args, use_pallas=False)
-            r_pal, l_pal, w_pal, e_pal = clear(*args, use_pallas=True,
-                                               interpret=True)
+            args = (*eng._aggregates(st), tuple(st["floor"]),
+                    tree.strides, st["owner"], st["limit"])
+            r_ref, l_ref, w_ref, t_ref, e_ref = clear(
+                *args, use_pallas=False)
+            r_pal, l_pal, w_pal, t_pal, e_pal = clear(
+                *args, use_pallas=True, interpret=True)
             np.testing.assert_allclose(np.asarray(r_ref),
                                        np.asarray(r_pal), rtol=1e-6)
             np.testing.assert_array_equal(np.asarray(l_ref),
                                           np.asarray(l_pal))
             np.testing.assert_array_equal(np.asarray(w_ref),
                                           np.asarray(w_pal))
+            np.testing.assert_array_equal(np.asarray(t_ref),
+                                          np.asarray(t_pal))
             np.testing.assert_array_equal(np.asarray(e_ref),
                                           np.asarray(e_pal))
 

@@ -133,7 +133,7 @@ def test_market_clear_vs_bruteforce(n_leaves, n_bids):
 
 def test_market_clear_pallas_equals_ref():
     tree = build_tree(1024)
-    eng = BatchEngine(tree, capacity=4096)
+    eng = BatchEngine(tree, capacity=4096, k=8)
     st = eng.init_state()
     floors = list(st["floor"])
     floors[-1] = floors[-1].at[0].set(1.5)
@@ -150,16 +150,16 @@ def test_market_clear_pallas_equals_ref():
         jnp.array(RNG.integers(0, 9, 512), jnp.int32))
     st["limit"] = st["limit"].at[:512].set(
         jnp.array(RNG.uniform(2, 8, 512), jnp.float32))
-    p1, o1, s1, p2, s2 = eng._aggregates(st)
-    args = (tuple(p1), tuple(o1), tuple(s1), tuple(p2), tuple(s2),
+    args = (*eng._aggregates(st),
             tuple(st["floor"]), tree.strides, st["owner"], st["limit"])
-    r_ref, l_ref, w_ref, e_ref = clear(*args, use_pallas=False)
-    r_pal, l_pal, w_pal, e_pal = clear(*args, use_pallas=True,
-                                       interpret=True)
+    r_ref, l_ref, w_ref, t_ref, e_ref = clear(*args, use_pallas=False)
+    r_pal, l_pal, w_pal, t_pal, e_pal = clear(*args, use_pallas=True,
+                                              interpret=True)
     np.testing.assert_allclose(np.asarray(r_ref), np.asarray(r_pal),
                                rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
     np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_pal))
+    np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_pal))
     np.testing.assert_array_equal(np.asarray(e_ref), np.asarray(e_pal))
 
 
@@ -179,7 +179,67 @@ def test_segment_aggregates_owner_exclusion_exact():
     prices = jnp.array([9.0, 8.0, 5.0, 1.0], jnp.float32)
     seg = jnp.zeros((4,), jnp.int32)
     tenants = jnp.array([7, 7, 3, 2], jnp.int32)
-    p1, o1, s1, p2, s2 = clear_ref.segment_aggregates(prices, seg,
-                                                      tenants, 1)
-    assert float(p1[0]) == 9.0 and int(o1[0]) == 7 and int(s1[0]) == 0
+    pk, tk, sk, p2, s2 = clear_ref.segment_aggregates(prices, seg,
+                                                      tenants, 1, k=1)
+    assert float(pk[0, 0]) == 9.0 and int(tk[0, 0]) == 7 \
+        and int(sk[0, 0]) == 0
     assert float(p2[0]) == 5.0 and int(s2[0]) == 2
+
+
+def test_segment_aggregates_ranked_topk():
+    """The ranked list is the exact top-k by (price desc, slot asc),
+    tenants included, padded with NEG/-1 past the live book."""
+    prices = jnp.array([5.0, 9.0, 7.0, 9.0, NEG, 3.0], jnp.float32)
+    seg = jnp.array([0, 0, 0, 0, 0, 1], jnp.int32)
+    tenants = jnp.array([1, 2, 1, 3, 4, 2], jnp.int32)
+    pk, tk, sk, p2, s2 = clear_ref.segment_aggregates(prices, seg,
+                                                      tenants, 2, k=4)
+    np.testing.assert_allclose(np.asarray(pk[:, 0]), [9.0, 9.0, 7.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(sk[:, 0]), [1, 3, 2, 0])
+    np.testing.assert_array_equal(np.asarray(tk[:, 0]), [2, 3, 1, 1])
+    # seg 1 has one bid; ranks 1..3 padded
+    assert float(pk[0, 1]) == 3.0 and int(sk[0, 1]) == 5
+    assert np.all(np.asarray(sk[1:, 1]) == -1)
+    # p2 = best from a tenant other than tk[0]
+    assert float(p2[0]) == 9.0 and int(s2[0]) == 3
+    assert float(p2[1]) < NEG / 2 and int(s2[1]) == -1
+
+
+def test_clear_ref_slate_matches_bruteforce():
+    """The per-leaf ranked candidate slate equals the brute-force top-K
+    owner-excluded floor-gated order ranking (price desc, slot asc)."""
+    rng = np.random.default_rng(7)
+    tree = build_tree(256)
+    eng = BatchEngine(tree, capacity=1024, k=6)
+    st = eng.init_state()
+    floors = list(st["floor"])
+    floors[-1] = floors[-1].at[0].set(2.0)
+    st["floor"] = tuple(floors)
+    n = 300
+    levels = rng.integers(0, tree.n_levels, n).astype(np.int32)
+    nodes = np.array([rng.integers(0, tree.nodes_at(d)) for d in levels],
+                     np.int32)
+    prices = rng.uniform(0.5, 9.0, n).astype(np.float32)
+    tenants = rng.integers(0, 5, n).astype(np.int32)
+    st = eng.place(st, jnp.array(prices), jnp.array(levels),
+                   jnp.array(nodes), jnp.array(tenants))
+    owners = rng.integers(-1, 5, 256).astype(np.int32)
+    st["owner"] = jnp.array(owners)
+    rate, lvl, cands, trunc = eng.clear_topk(st)
+    cands = np.asarray(cands)
+    trunc = np.asarray(trunc)
+    for leaf in rng.integers(0, 256, 16):
+        elig = [(prices[i], i) for i in range(n)
+                if nodes[i] == leaf // tree.strides[levels[i]]
+                and tenants[i] != owners[leaf]
+                and prices[i] >= 2.0 - 1e-6]
+        elig.sort(key=lambda e: (-e[0], e[1]))
+        got = [s for s in cands[:, leaf] if s >= 0]
+        want = [s for _, s in elig[:len(got)]]
+        assert got == want, (leaf, got, elig)
+        if trunc[leaf] == 0:
+            # a non-truncated slate must hold EVERY eligible order
+            # (exhaustion then means genuinely nothing left)
+            assert len(elig) == len(got), (leaf, got, elig)
+        if len(elig) > cands.shape[0]:
+            assert trunc[leaf] == 1, (leaf, len(elig))
