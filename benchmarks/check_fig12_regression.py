@@ -1,0 +1,120 @@
+"""Perf regression gate for the fig12 benchmark trajectory.
+
+Compares a freshly produced ``BENCH_fig12.json`` against the committed
+baseline (``benchmarks/BENCH_fig12.baseline.json``) and fails (exit 1)
+when any matching ``full_step``/``flood`` row regressed by more than
+``--threshold`` (default 1.5x) — rows present in only one file are
+reported and skipped, so quick-mode and full-mode files can be diffed
+against the same baseline.
+
+The baseline was recorded on a different machine than the CI runner, so
+raw wall-clock ratios carry a constant machine-speed factor.  The gate
+calibrates that factor from the INDEPENDENT python-engine rows
+(``fig12a/b/c/python/*`` — pure-Python event-market microbenchmarks
+that share no code with the gated batch-engine rows), bounded to
+[1/3, 3] so a genuine python-engine regression cannot silently scale
+the gate away.  Calibrating from a disjoint subsystem keeps the gate
+sensitive to UNIFORM batch-engine slowdowns (an extra lexsort per wave
+inflates every gated row but not the calibration rows), which a
+self-median calibration would cancel out.  The gate additionally
+enforces a machine-independent SHAPE invariant within the fresh file
+alone: ``full_step`` at k=8 must not be slower than at k=1 for the same
+pool size (the K-scaling inversion PR 3 removed — per-wave cost must
+not outgrow the wave-count savings).
+
+Usage:
+    python benchmarks/check_fig12_regression.py BASELINE FRESH \
+        [--threshold 1.5] [--prefixes fig12/jax_batch/full_step,...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+
+
+def load(path: str):
+    with open(path) as f:
+        return {row["name"]: float(row["us_per_call"])
+                for row in json.load(f)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("baseline")
+    ap.add_argument("fresh")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed fresh/baseline slowdown ratio")
+    ap.add_argument("--prefixes", default=(
+        "fig12/jax_batch/full_step,fig12/jax_batch/flood"))
+    args = ap.parse_args()
+    base = load(args.baseline)
+    fresh = load(args.fresh)
+    prefixes = tuple(p for p in args.prefixes.split(",") if p)
+
+    failures = []
+    ratios = {}
+    for name, us in sorted(fresh.items()):
+        if not name.startswith(prefixes):
+            continue
+        if name not in base:
+            print(f"SKIP (no baseline row): {name}")
+            continue
+        ratios[name] = us / base[name]
+    compared = len(ratios)
+    # machine-speed calibration from rows DISJOINT from the gated set:
+    # the python event-engine microbenchmarks reflect raw machine speed
+    # and share no code with the batch engine the gate protects
+    cal_ratios = sorted(
+        us / base[name] for name, us in fresh.items()
+        if name.startswith(("fig12a/python/", "fig12b/python/",
+                            "fig12c/python/")) and name in base)
+    if cal_ratios:
+        cal = min(max(cal_ratios[len(cal_ratios) // 2], 1 / 3.0), 3.0)
+        print(f"machine-speed calibration factor (median python-row "
+              f"ratio, bounded): {cal:.2f}x")
+    else:
+        cal = 1.0
+        print("no calibration rows shared with the baseline; "
+              "comparing raw wall-clock ratios")
+    for name, ratio in sorted(ratios.items()):
+        rel = ratio / cal
+        tag = "FAIL" if rel > args.threshold else "ok"
+        print(f"{tag}  {name}: {base[name]/1e6:.3f}s -> "
+              f"{fresh[name]/1e6:.3f}s ({ratio:.2f}x raw, "
+              f"{rel:.2f}x calibrated)")
+        if rel > args.threshold:
+            failures.append(f"{name} regressed {rel:.2f}x calibrated "
+                            f"(> {args.threshold}x)")
+
+    # shape invariant: k=8 full_step must not lose to k=1 at the same n
+    # (the pre-PR-3 inversions were 1.4x+; 15% headroom absorbs runner
+    # noise without letting a real inversion through)
+    by_nk = {}
+    for name, us in fresh.items():
+        m = re.fullmatch(r"fig12/jax_batch/full_step/n=(\d+)/k=(\d+)",
+                         name)
+        if m:
+            by_nk[(int(m.group(1)), int(m.group(2)))] = us
+    for (n, k), us in sorted(by_nk.items()):
+        if k == 8 and (n, 1) in by_nk and us > by_nk[(n, 1)] * 1.15:
+            failures.append(
+                f"K-scaling inversion: full_step n={n} k=8 "
+                f"({us/1e6:.3f}s) slower than k=1 "
+                f"({by_nk[(n, 1)]/1e6:.3f}s)")
+
+    if compared == 0:
+        failures.append("no benchmark rows matched the baseline — "
+                        "regenerate benchmarks/BENCH_fig12.baseline.json")
+    if failures:
+        print("\n".join(["PERF GATE FAILED:"] + failures),
+              file=sys.stderr)
+        return 1
+    print(f"perf gate passed ({compared} rows within {args.threshold}x "
+          f"of baseline after machine-speed calibration)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -108,9 +108,10 @@ def run(quick: bool = False):
     # JAX batch engine: the FULL market epoch — place -> clear -> evict ->
     # transfer -> bill — i.e. one complete step() of the renegotiation
     # runtime, with a live bid inflow every epoch; K=1 vs the top-K
-    # wave-parallel cascade
+    # wave-parallel cascade (quick mode sweeps K to expose any
+    # K-scaling inversion — the pre-PR-3 regression class)
     for n in ((2048, 16_384) if quick else (2048, 16_384, 65_536)):
-        for k in (1, 8):
+        for k in ((1, 4, 8, 16) if quick else (1, 8)):
             tree = build_tree(n)
             eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024,
                               k=k)

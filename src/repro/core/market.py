@@ -103,6 +103,15 @@ class Market:
             for node in topo.ancestors(leaf):
                 self._idle_count[node] = self._idle_count.get(node, 0) + 1
         self._live_count: Dict[int, int] = {}
+        # idle-descent cache: per internal node, the child index where
+        # the last _find_idle_leaf scan left off.  Children before the
+        # hint are known idle-exhausted; the hint rewinds (in _set_owner)
+        # when a leaf under an earlier child is freed, so repeated
+        # "anywhere" matches cost amortized O(depth) instead of
+        # rescanning every exhausted zone/rack left of the supply.
+        self._idle_hint: Dict[int, int] = {}
+        self._child_pos: Dict[int, int] = {
+            c: i for n in topo.nodes for i, c in enumerate(n.children)}
         self.stats = {"orders": 0, "transfers": 0, "implicit_relinquish": 0,
                       "explicit_relinquish": 0, "cancels": 0}
 
@@ -281,7 +290,7 @@ class Market:
         # an incoming marketable order executes against idle supply FIRST;
         # only if it keeps resting does its pressure propagate (and possibly
         # evict owners whose retention limit it crosses)
-        self._try_immediate_match(o)
+        self._try_immediate_match(o, fresh=True)
         if o.active and price > covered + EPS:
             # fast path: a bid below the best second-distinct-tenant price
             # moves no rate (owner-exclusion-safe skip condition)
@@ -290,23 +299,39 @@ class Market:
 
     def _find_idle_leaf(self, scope: int, max_floor: float) -> Optional[int]:
         """Descend idle-count-positive children to an operator-owned leaf
-        whose floor the bid meets — O(depth x branching)."""
+        whose floor the bid meets — amortized O(depth) via the per-node
+        ``_idle_hint`` scan cache (children left of the hint hold no idle
+        supply; the hint rewinds when supply under them reappears)."""
         if self._idle_count.get(scope, 0) == 0:
             return None
         node = self.topo.node(scope)
         if node.is_leaf:
             return scope if (self.res[scope].owner == OPERATOR and
                              self.floor(scope) <= max_floor + EPS) else None
-        for c in node.children:
+        kids = node.children
+        start = self._idle_hint.get(scope, 0)
+        hint = start
+        for i in range(start, len(kids)):
+            c = kids[i]
             found = self._find_idle_leaf(c, max_floor)
             if found is not None:
+                self._idle_hint[scope] = hint
                 return found
+            # the hint may only advance past a contiguous prefix of
+            # exhausted children — a child whose idle supply is merely
+            # floor-gated pins it (a later floor/bid may admit it)
+            if hint == i and self._idle_count.get(c, 0) == 0:
+                hint = i + 1
+        self._idle_hint[scope] = hint
         return None
 
-    def _try_immediate_match(self, o: Order) -> None:
+    def _try_immediate_match(self, o: Order, fresh: bool = False) -> None:
+        """``fresh`` marks an order straight out of ``place_order`` whose
+        pressure was never propagated (it is consumed before any refresh
+        ran), so consuming it cannot change any cached rate."""
         leaf = self._find_idle_leaf(o.scope, o.price)
         if leaf is not None and o.active:
-            self._transfer(leaf, o)
+            self._transfer(leaf, o, fresh=fresh)
 
     def cancel_order(self, tenant: str, order_id: int) -> None:
         o = self.orders.get(order_id)
@@ -371,7 +396,7 @@ class Market:
                    reason)
 
     def _transfer(self, leaf: int, order: Order,
-                  reason: str = "match") -> None:
+                  reason: str = "match", fresh: bool = False) -> None:
         st = self.res[leaf]
         old = st.owner
         self._accrue(leaf)
@@ -384,8 +409,19 @@ class Market:
         self.events.append(("transfer", self.now, leaf, old, order.tenant,
                             reason))
         self._refresh_leaf(leaf)
-        # the winner's pressure disappears everywhere it was resting
-        self._refresh_subtree(scope)
+        # the winner's pressure disappears everywhere it was resting — a
+        # consume is a removal from the scope's book, exactly like a
+        # cancel, so the same owner-exclusion-safe skip applies: with a
+        # second distinct tenant still resting at or above the consumed
+        # price, no owner-excluded rate under the scope depended on it.
+        # A ``fresh`` order (immediate match during place_order) never
+        # had its pressure propagated at all, so its removal can change
+        # nothing.  Together these turn marketable "anywhere" bids that
+        # match instantly (the fig12a hot path) from O(n_leaves) into
+        # O(depth).
+        if not fresh and \
+                order.price > self._second_tenant_price(scope) + EPS:
+            self._refresh_subtree(scope)
         for cb in self.on_transfer:
             cb(self.now, leaf, old, order.tenant, st.rate, reason)
 
@@ -406,6 +442,15 @@ class Market:
             for node in self.topo.ancestors(leaf):
                 self._idle_count[node] = self._idle_count.get(node, 0) \
                     + delta
+                if delta > 0:
+                    # idle supply reappeared under this node: rewind the
+                    # parent's idle-descent hint so the freed child is
+                    # scanned again
+                    par = self.topo.node(node).parent
+                    if par is not None:
+                        pos = self._child_pos[node]
+                        if self._idle_hint.get(par, 0) > pos:
+                            self._idle_hint[par] = pos
 
     # ------------------------------------------------------------ operator
     def set_floor(self, node: int, price: float) -> None:

@@ -8,17 +8,20 @@ aggregates arrive as a *contiguous window* via its BlockSpec index map
 does only static `jnp.repeat` expansions and vector max/select ops — no
 gathers, fully VPU-friendly.
 
-Per level the inputs are the exact owner-exclusion aggregates computed by
-``ref.segment_aggregates``: the ranked top-K bids (price pk, tenant tk,
-slot sk — price desc, slot asc), the best bid from any tenant other than
-tk[0] (p2, s2 — the exact exclusion fall-back), and the operator floor.
+Per level the inputs are contiguous SORTED-SLAB aggregates computed by
+``ref.sorted_segment_aggregates`` from the sort-once segmented book: the
+ranked top-K bids (price pk, tenant tk, slot sk, arrival seq qk — price
+desc, seq asc), the best bid from any tenant other than tk[0]
+(p2, s2, q2 — the exact exclusion fall-back), and the operator floor.
 Outputs per leaf: charged rate, winning level, the ranked (K, block)
 owner-excluded floor-gated candidate slate, the slate-truncation flag,
 and the retention-limit eviction mask — see ref.clear_ref.
 
 The top-K merge across levels is a K-pass selection over the stacked
 (n_levels*(K+1), block) candidate matrix: per pass one vector max, a
-slot-asc tie-break min, and a mask-out — no sorts, all VPU ops.
+seq-asc tie-break min (TRUE arrival order, matching the event engine
+even after the ring allocator laps the bid table), and a mask-out — no
+sorts, all VPU ops.
 
 Block size 512 divides all level strides (8/32/128/512-style topologies);
 lane dim padded to multiples of 128 where needed by the caller (ops.py).
@@ -34,14 +37,15 @@ from jax.experimental import pallas as pl
 
 NEG = -1e30
 EPSF = 1e-6
-BIGS = 1 << 30        # slot sentinel above any real table index
-_REFS_PER_LEVEL = 6   # pk, tk, sk, p2, s2, floor
+BIGS = 1 << 30        # slot/seq sentinel above any real value
+_REFS_PER_LEVEL = 8   # pk, tk, sk, qk, p2, s2, q2, floor
 
 
 def _clear_kernel(owner_ref, limit_ref, *refs,
                   strides: Sequence[int], block: int, k: int):
-    """refs layout: for each level d: (pk, tk, sk, p2, s2, floor) then
-    outputs (rate, best_level, cand_slots, truncated, evict)."""
+    """refs layout: for each level d: (pk, tk, sk, qk, p2, s2, q2,
+    floor) then outputs (rate, best_level, cand_slots, truncated,
+    evict)."""
     n_lvl = len(strides)
     lvl_refs = refs[:_REFS_PER_LEVEL * n_lvl]
     (rate_ref, lvl_out, slots_out, trunc_out,
@@ -52,50 +56,59 @@ def _clear_kernel(owner_ref, limit_ref, *refs,
     floor = jnp.zeros((block,), jnp.float32)
     rows_p: List[jax.Array] = []
     rows_s: List[jax.Array] = []
+    rows_q: List[jax.Array] = []
     bps: List[jax.Array] = []
-    bss: List[jax.Array] = []
+    bqs: List[jax.Array] = []
     for d, s in enumerate(strides):
-        pk, tk, sk, p2, s2, fl = (
-            lvl_refs[_REFS_PER_LEVEL * d + i][...] for i in range(6))
+        pk, tk, sk, qk, p2, s2, q2, fl = (
+            lvl_refs[_REFS_PER_LEVEL * d + i][...] for i in range(8))
         reps = s if s <= block else block
         # expand the node window to per-leaf lanes (static repeat)
         pk = jnp.repeat(pk, reps, axis=1, total_repeat_length=block)
         tk = jnp.repeat(tk, reps, axis=1, total_repeat_length=block)
         sk = jnp.repeat(sk, reps, axis=1, total_repeat_length=block)
+        qk = jnp.repeat(qk, reps, axis=1, total_repeat_length=block)
         p2 = jnp.repeat(p2, reps, total_repeat_length=block)
         s2 = jnp.repeat(s2, reps, total_repeat_length=block)
+        q2 = jnp.repeat(q2, reps, total_repeat_length=block)
         fl = jnp.repeat(fl, reps, total_repeat_length=block)
         floor = jnp.maximum(floor, fl)
         live_k = pk > NEG / 2
         excl = has_owner[None] & (tk == owner[None])
         rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
         rows_s.extend(sk[i] for i in range(k))
+        rows_q.extend(qk[i] for i in range(k))
         all_owned = has_owner & live_k[0] \
             & jnp.all(~live_k | excl, axis=0)
         rows_p.append(jnp.where(all_owned, p2, NEG))
         rows_s.append(s2)
+        rows_q.append(q2)
         # hidden-eligible-order bound pair per level — see ref.py
         full = live_k[k - 1]
         bps.append(jnp.where(full & all_owned, p2,
                              jnp.where(full, pk[k - 1], NEG)))
-        bss.append(jnp.where(full & all_owned, s2,
-                             jnp.where(full, sk[k - 1], -1)))
+        bqs.append(jnp.where(full & all_owned, q2,
+                             jnp.where(full, qk[k - 1], -1)))
     P = jnp.stack(rows_p)                  # (n_lvl*(k+1), block)
     S = jnp.stack(rows_s)
+    Q = jnp.stack(rows_q)
     D = jnp.repeat(jnp.arange(n_lvl, dtype=jnp.int32), k + 1)[:, None]
     elig_count = jnp.sum((P > NEG / 2) & (P >= floor[None] - EPSF),
                          axis=0)
 
-    sel_p, sel_s, sel_d = [], [], []
+    sel_p, sel_s, sel_q, sel_d = [], [], [], []
     work = P
     for _ in range(k):
         pm = jnp.max(work, axis=0)
         cand = (work > NEG / 2) & (work >= pm[None])
-        sm = jnp.min(jnp.where(cand, S, BIGS), axis=0)
-        selrow = cand & (S == sm[None])
+        qm = jnp.min(jnp.where(cand, Q, BIGS), axis=0)   # seq asc tie
+        selrow = cand & (Q == qm[None])
         any_live = pm > NEG / 2
         sel_p.append(jnp.where(any_live, pm, NEG))
-        sel_s.append(jnp.where(any_live, sm, -1))
+        sel_q.append(jnp.where(any_live, qm, -1))
+        sel_s.append(jnp.where(any_live,
+                               jnp.max(jnp.where(selrow, S, -1), axis=0),
+                               -1))
         sel_d.append(jnp.max(jnp.where(selrow, D, -1), axis=0))
         work = jnp.where(selrow, NEG, work)
 
@@ -109,7 +122,7 @@ def _clear_kernel(owner_ref, limit_ref, *refs,
         safe_j = jnp.ones((block,), jnp.bool_)
         for d in range(n_lvl):
             outranks = (sel_p[j] > bps[d]) | \
-                ((sel_p[j] == bps[d]) & (sel_s[j] < bss[d]))
+                ((sel_p[j] == bps[d]) & (sel_q[j] < bqs[d]))
             safe_j = safe_j & ((bps[d] < NEG / 2) | (sel_d[j] == d)
                                | outranks)
         unsafe_seen = unsafe_seen | ~safe_j
@@ -127,8 +140,10 @@ def _clear_kernel(owner_ref, limit_ref, *refs,
 def clear_pallas(level_pk: Sequence[jax.Array],
                  level_tk: Sequence[jax.Array],
                  level_sk: Sequence[jax.Array],
+                 level_qk: Sequence[jax.Array],
                  level_p2: Sequence[jax.Array],
                  level_s2: Sequence[jax.Array],
+                 level_q2: Sequence[jax.Array],
                  level_floor: Sequence[jax.Array],
                  strides: Sequence[int], owner: jax.Array,
                  limit: jax.Array,
@@ -151,8 +166,9 @@ def clear_pallas(level_pk: Sequence[jax.Array],
             (w,), lambda i, s=s, w=w: (i * block // s // w,))
         spec2 = pl.BlockSpec(
             (k, w), lambda i, s=s, w=w: (0, i * block // s // w))
-        for arr in (level_pk[d], level_tk[d], level_sk[d],
-                    level_p2[d], level_s2[d], level_floor[d]):
+        for arr in (level_pk[d], level_tk[d], level_sk[d], level_qk[d],
+                    level_p2[d], level_s2[d], level_q2[d],
+                    level_floor[d]):
             pad = (-arr.shape[-1]) % w
             fillv = NEG if arr.dtype == jnp.float32 else -1
             if arr.ndim == 2:

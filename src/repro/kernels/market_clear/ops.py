@@ -1,12 +1,13 @@
 """Jitted wrapper: hierarchical clearing via the Pallas kernel (TPU) or
 the pure-jnp oracle (CPU / differentiability).
 
-Both paths take the per-level ranked owner-exclusion aggregates from
-``ref.segment_aggregates`` (top-K (price, tenant, slot) lists plus the
-distinct-second-tenant fall-back) and the per-leaf owner/limit arrays,
-and return ``(rate, best_level, cand_slots, truncated, evict)`` where
-``cand_slots`` is the (K, n_leaves) ranked candidate slate — see
-ref.clear_ref.
+Both paths take the per-level ranked owner-exclusion aggregates from the
+sort-once segmented book (``ref.sorted_segment_aggregates``): top-K
+(price, tenant, slot, seq) lists plus the distinct-second-tenant
+fall-back (p2, s2, q2) — and the per-leaf owner/limit arrays, and return
+``(rate, best_level, cand_slots, truncated, evict)`` where
+``cand_slots`` is the (K, n_leaves) ranked candidate slate ordered by
+(price desc, seq asc) — see ref.clear_ref.
 """
 from __future__ import annotations
 
@@ -22,15 +23,18 @@ from repro.kernels.market_clear.kernel import clear_pallas
 
 @functools.partial(jax.jit, static_argnames=("strides", "use_pallas",
                                              "interpret", "block"))
-def clear(level_pk, level_tk, level_sk, level_p2, level_s2, level_floor,
-          strides: Tuple[int, ...], owner, limit, *,
-          use_pallas: bool = False, interpret: bool = True,
+def clear(level_pk, level_tk, level_sk, level_qk, level_p2, level_s2,
+          level_q2, level_floor, strides: Tuple[int, ...], owner, limit,
+          *, use_pallas: bool = False, interpret: bool = True,
           block: int = 512):
     if use_pallas:
-        return clear_pallas(list(level_pk), list(level_tk), list(level_sk),
+        return clear_pallas(list(level_pk), list(level_tk),
+                            list(level_sk), list(level_qk),
                             list(level_p2), list(level_s2),
-                            list(level_floor), strides, owner, limit,
-                            block=block, interpret=interpret)
+                            list(level_q2), list(level_floor), strides,
+                            owner, limit, block=block,
+                            interpret=interpret)
     return R.clear_ref(list(level_pk), list(level_tk), list(level_sk),
-                       list(level_p2), list(level_s2), list(level_floor),
-                       strides, owner, limit)
+                       list(level_qk), list(level_p2), list(level_s2),
+                       list(level_q2), list(level_floor), strides,
+                       owner, limit)

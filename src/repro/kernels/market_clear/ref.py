@@ -1,11 +1,24 @@
-"""Pure-jnp oracle for the hierarchical market-clearing pass.
+"""Pure-jnp oracle for the hierarchical market-clearing pass, built on a
+SORT-ONCE segmented order book.
 
-Given the resting-bid table of one type-tree and the regular topology
-(per-level node aggregates), compute for every leaf:
+The live bid table is viewed through a segment-sorted permutation under
+the key ``(segment asc, price desc, seq asc)`` where a *segment* is one
+(level, node) book and ``seq`` is the order's monotone arrival stamp.
+The sort runs ONCE per market epoch (``sort_book``); cascade waves only
+*kill* entries (OCO consumption / cancels), which never moves a live
+entry, so per-wave maintenance is a liveness cumsum — no re-sort, no
+per-segment reduction sweeps.  Ranked per-segment aggregates then fall
+out of contiguous-prefix gathers from the segment start offsets
+(``sorted_segment_aggregates``) instead of K sequential scatter-max
+sweeps over the full capacity-sized table per level (the pre-PR-3 hot
+spot that made K=8 waves *slower* than K=1 waves).
+
+Given those per-level aggregates and the regular topology, ``clear_ref``
+computes for every leaf:
 
   rate       = max(path floor, best covering bid price, owner-excluded)
   cand_slots = ranked bid-table slots of the top-K owner-excluded covering
-               bids meeting the leaf's path floor (price desc, slot asc;
+               bids meeting the leaf's path floor (price desc, seq asc;
                -1 padded) — the leaf's ordered candidate slate.  Entry 0
                is the classic ``winner_slot``; entries 1..K-1 are the
                fall-through runners-up the engine's in-wave top-K claim
@@ -20,25 +33,21 @@ Given the resting-bid table of one type-tree and the regular topology
                retention limit (the eviction mask; min-holding deferral
                is applied by the engine, which also knows the clock)
 
-This is the dense re-expression of the paper's matching hot path
-(DESIGN.md §3): per-level segment aggregates of bids + a depth-bounded
-ancestor-path combine, generalized from top-1 to a ranked top-K slate.
+Owner exclusion is EXACT here: per segment we keep the top-K bids overall
+(price pk, tenant tk, slot sk, seq qk — ranked price desc / seq asc)
+AND the best bid from any tenant OTHER than the top bid's (p2, s2, q2).
+For a leaf owned by ``o`` the eligible entries are the ranked entries
+with tk != o; when the owner holds *every* live ranked entry (so
+tk[0] == o), the true owner-excluded best is exactly (p2, s2, q2), which
+is appended as the fall-back candidate.  (A plain "top-2 prices"
+aggregate is wrong when one tenant holds both top bids; a plain top-K is
+wrong the same way when one tenant holds all K.)
 
-Owner exclusion is EXACT here: per node we keep the top-K bids overall
-(price pk, tenant tk, earliest slot sk, ranked price desc / slot asc)
-AND the best bid from any tenant OTHER than the top bid's (p2, s2).  For
-a leaf owned by ``o`` the eligible entries are the ranked entries with
-tk != o; when the owner holds *every* live ranked entry (so tk[0] == o),
-the true owner-excluded best is exactly (p2, s2), which is appended as
-the fall-back candidate.  (A plain "top-2 prices" aggregate is wrong
-when one tenant holds both top bids; a plain top-K is wrong the same way
-when one tenant holds all K.)
-
-Tie-breaks mirror the event-driven engine: price desc, then arrival
-(slot asc) — ring-buffer slot order is arrival order until the
-allocator laps the table and starts reusing freed holes (see
-``BatchEngine.place``; exact arrival ties past that point are a
-ROADMAP open item).
+Tie-breaks mirror the event-driven engine exactly: price desc, then
+``seq`` asc — TRUE arrival order, stamped per order by
+``BatchEngine.place``.  (Pre-PR-3 the tie-break was bid-table slot
+order, which diverges from arrival order once the ring allocator laps
+the table and reuses freed holes.)
 """
 from __future__ import annotations
 
@@ -49,51 +58,326 @@ import jax.numpy as jnp
 
 NEG = -1e30
 EPSF = 1e-6
-BIGS = 1 << 30              # slot sentinel above any real table index
+BIGS = 1 << 30              # slot/seq sentinel above any real value
+
+
+def sort_book(gseg: jax.Array, prices: jax.Array, seqs: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """One lexsort of the bid table by ``(segment, price desc, seq asc)``.
+
+    gseg: (cap,) int32 global segment id of each slot; DEAD slots must
+      carry a sentinel id larger than every live segment so they sink to
+      the tail.  prices: (cap,) f32; seqs: (cap,) int32 arrival stamps.
+    Returns (order, sorted_gseg): ``order`` is the slot permutation and
+    ``sorted_gseg`` the (non-decreasing) segment key at each sorted
+    position.  Segment start offsets are ``jnp.searchsorted(sorted_gseg,
+    arange(n_seg + 1))`` (see ``BatchEngine._resort``).
+    """
+    cap = gseg.shape[0]
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    sorted_gseg, _, _, order = jax.lax.sort(
+        (gseg, jnp.negative(prices), seqs, slot), num_keys=3)
+    return order, sorted_gseg
+
+
+def sorted_segment_aggregates(order: jax.Array, sorted_gseg: jax.Array,
+                              seg_start: jax.Array, prices: jax.Array,
+                              tenants: jax.Array, seqs: jax.Array,
+                              n_seg: int, k: int
+                              ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                         jax.Array, jax.Array, jax.Array,
+                                         jax.Array]:
+    """Ranked per-segment aggregates as contiguous-prefix gathers.
+
+    ``(order, sorted_gseg, seg_start)`` is a sorted book view from
+    ``sort_book``.  The view may be STALE with respect to *liveness*:
+    entries consumed or cancelled since the sort are skipped via their
+    live-rank (one cumsum over the table) — but every currently-live
+    entry must still sit at its sort-time position with its sort-time
+    key (the sorted-book invariant ``BatchEngine`` maintains: mutations
+    between sorts only KILL entries, never move or re-price them).
+
+    prices/tenants/seqs: (cap,) CURRENT bid-table columns (NEG/-1 dead).
+    Returns (pk, tk, sk, qk, p2, s2, q2):
+      pk/tk/sk/qk — (k, n_seg) ranked price/tenant/slot/seq lists,
+        price desc then seq asc (NEG/-1 padded past the live book);
+      p2/s2/q2 — (n_seg,) best price/slot/seq among live entries whose
+        tenant differs from tk[0] (the exact owner-exclusion fall-back).
+
+    Cost: O(cap) gathers + one cumsum + exactly two scatters (the
+    prefix-position scatter and the fall-back position min-scatter) —
+    independent of k and of the number of levels, vs the pre-PR-3
+    k-sweep costing ~2k scatters per level per wave.
+    """
+    pk, tk, sk, qk, p2, _, s2, q2 = _prefix_aggregates(
+        order, sorted_gseg, seg_start, prices, tenants, seqs, n_seg, k)
+    return pk.T, tk.T, sk.T, qk.T, p2, s2, q2
+
+
+def _prefix_aggregates(order, sorted_gseg, seg_start, prices, tenants,
+                       seqs, n_seg: int, k: int):
+    """Shared core of the sorted-view aggregate computation (see
+    ``sorted_segment_aggregates`` for the contract): returns
+    SEGMENT-MAJOR (n_seg, k) ranked slabs (pk, tk, sk, qk) plus the
+    fall-back (p2, t2, s2, q2) — including the fall-back's TENANT,
+    which the hierarchical path merge needs."""
+    cap = order.shape[0]
+    pos = jnp.arange(cap, dtype=jnp.int32)
+    p_s = prices[order]
+    t_s = tenants[order]
+    live = (p_s > NEG / 2) & (t_s >= 0) & (sorted_gseg < n_seg)
+    g = jnp.clip(sorted_gseg, 0, n_seg - 1)
+    # live-rank within segment: cumsum minus live-count before seg start
+    cum = jnp.cumsum(live.astype(jnp.int32))
+    ss = seg_start[:n_seg]
+    before = jnp.where(ss > 0, cum[jnp.maximum(ss - 1, 0)], 0)
+    rank = cum - 1 - before[g]
+    # scatter each segment's first k live POSITIONS into a (n_seg, k)
+    # slab; everything else is gathers from those positions
+    ok = live & (rank < k)
+    prefix_pos = jnp.full((n_seg, k), cap, jnp.int32).at[
+        jnp.where(ok, g, n_seg), jnp.where(ok, rank, k)].set(
+        pos, mode="drop")
+    hit = prefix_pos < cap
+    sl = order[jnp.clip(prefix_pos, 0, cap - 1)]
+    pk = jnp.where(hit, prices[sl], NEG)
+    tk = jnp.where(hit, tenants[sl], -1)
+    sk = jnp.where(hit, sl, -1)
+    qk = jnp.where(hit, seqs[sl], -1)
+    # exact owner-exclusion fall-back: FIRST live entry from a tenant
+    # other than the segment's top tenant — sorted order makes minimal
+    # position == (price desc, seq asc) best
+    alt = live & (t_s != tk[g, 0])
+    pos2 = jnp.full((n_seg,), cap, jnp.int32).at[
+        jnp.where(alt, g, n_seg)].min(jnp.where(alt, pos, cap),
+                                      mode="drop")
+    hit2 = pos2 < cap
+    sl2 = order[jnp.clip(pos2, 0, cap - 1)]
+    p2 = jnp.where(hit2, prices[sl2], NEG)
+    t2 = jnp.where(hit2, tenants[sl2], -1)
+    s2 = jnp.where(hit2, sl2, -1)
+    q2 = jnp.where(hit2, seqs[sl2], -1)
+    return pk, tk, sk, qk, p2, t2, s2, q2
+
+
+def _topk_select(W, Q, payloads, k: int):
+    """K-pass top-k selection by (price desc, seq asc) over the LAST
+    axis — the shared merge primitive of ``clear_ref`` and the
+    hierarchical path merge (the Pallas kernel keeps its own axis-0
+    copy; see the ROADMAP TPU item).
+
+    Deliberately an UNROLLED python loop: XLA fuses the passes into one
+    pipeline, where the same body under lax.scan pays per-iteration
+    carry copies of W (measured ~2x slower); sort-based merges lose far
+    worse on XLA:CPU (axis-0 argsorts ~10x, variadic two-key lax.sort
+    slower still).  Live entries have unique (price, seq) — every order
+    rests in exactly one column — so exactly one entry is selected per
+    pass; dead entries (NEG) are never candidates.
+
+    W: (rows, n) prices (consumed destructively); Q: (rows, n) seqs;
+    payloads: int arrays broadcastable to W, gathered at the selected
+    entry (-1 where the pass selects nothing).  Returns a list of k
+    (sel_p, sel_q, (sel_payload, ...)) tuples of (rows,) arrays, rank
+    ascending.
+    """
+    outs = []
+    for _ in range(k):
+        pm = jnp.max(W, axis=-1)
+        cand = (W > NEG / 2) & (W >= pm[:, None])
+        qm = jnp.min(jnp.where(cand, Q, BIGS), axis=-1)
+        selrow = cand & (Q == qm[:, None])
+        any_live = pm > NEG / 2
+        outs.append((jnp.where(any_live, pm, NEG),
+                     jnp.where(any_live, qm, -1),
+                     tuple(jnp.max(jnp.where(selrow, pl, -1), axis=-1)
+                           for pl in payloads)))
+        W = jnp.where(selrow, NEG, W)
+    return outs
+
+
+def _merge2(A, a2, B, b2, k: int):
+    """Merge two ranked path aggregates (the 2-way step of the
+    hierarchical path merge).
+
+    A/B: (P, T, S, Q) tuples of (nodes, k) ranked lists, price desc /
+    seq asc; a2/b2: (p2, t2, s2, q2) distinct-second-tenant fall-backs
+    covering each side's FULL books.  Returns the merged ranked top-k
+    plus the merged fall-back, with the invariants preserved:
+
+      * merged list = exact top-k of the union of both sides' books
+        (entries hidden below either side's k-th rank strictly below
+        the merged k-th);
+      * merged fall-back = best entry over BOTH sides' full books from
+        a tenant other than the merged top tenant.  Case analysis: a
+        side's best non-(merged-top) entry is its own fall-back when
+        its top tenant IS the merged top tenant, else its head (its
+        global best, which then has a different tenant).
+    """
+    Pa, Ta, Sa, Qa = A
+    Pb, Tb, Sb, Qb = B
+    W = jnp.concatenate([Pa, Pb], axis=-1)        # (nodes, 2k)
+    T = jnp.concatenate([Ta, Tb], axis=-1)
+    S = jnp.concatenate([Sa, Sb], axis=-1)
+    Q = jnp.concatenate([Qa, Qb], axis=-1)
+    sel = _topk_select(W, Q, (T, S), k)
+    mP = jnp.stack([o[0] for o in sel], axis=-1)
+    mQ = jnp.stack([o[1] for o in sel], axis=-1)
+    mT = jnp.stack([o[2][0] for o in sel], axis=-1)
+    mS = jnp.stack([o[2][1] for o in sel], axis=-1)
+    t0 = mT[:, 0]
+    pa2, ta2, sa2, qa2 = a2
+    pb2, tb2, sb2, qb2 = b2
+    a_top_is = Ta[:, 0] == t0
+    cA = (jnp.where(a_top_is, pa2, Pa[:, 0]),
+          jnp.where(a_top_is, ta2, Ta[:, 0]),
+          jnp.where(a_top_is, sa2, Sa[:, 0]),
+          jnp.where(a_top_is, qa2, Qa[:, 0]))
+    b_top_is = Tb[:, 0] == t0
+    cB = (jnp.where(b_top_is, pb2, Pb[:, 0]),
+          jnp.where(b_top_is, tb2, Tb[:, 0]),
+          jnp.where(b_top_is, sb2, Sb[:, 0]),
+          jnp.where(b_top_is, qb2, Qb[:, 0]))
+    a_wins = (cA[0] > cB[0]) | ((cA[0] == cB[0]) & (cA[3] < cB[3]))
+    m2 = tuple(jnp.where(a_wins, xa, xb) for xa, xb in zip(cA, cB))
+    return (mP, mT, mS, mQ), m2
+
+
+def clear_sorted(order: jax.Array, sorted_gseg: jax.Array,
+                 seg_start: jax.Array, prices: jax.Array,
+                 tenants: jax.Array, seqs: jax.Array,
+                 levels_tab: jax.Array,
+                 level_floor: Sequence[jax.Array],
+                 level_off: Sequence[int], strides: Sequence[int],
+                 owner: jax.Array, limit: jax.Array, k: int
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                            jax.Array]:
+    """Fused sorted-view clearing pass (the engine's jnp hot path):
+    per-segment prefix-gather aggregates + a HIERARCHICAL PATH MERGE.
+
+    Instead of stacking every ancestor level's ranked list into one
+    n_levels*(K+1)-wide per-leaf candidate matrix (O(levels*K^2) work
+    per leaf per wave — the flat formulation ``clear_ref`` uses and the
+    Pallas kernel keeps), the ranked aggregates are merged pairwise DOWN
+    the tree: path(root) = agg(root); path(d) = merge2(path(d+1) at the
+    parent, agg(d)).  Each merge runs at that level's node granularity,
+    so the per-leaf merge is a single 2k-wide pass and the upper-level
+    merges amortize across the leaves under each node (sum of nodes ~
+    1.2 * n_leaves).
+
+    The merged path list also collapses the prefix-safety machinery: a
+    slate drawn from the single globally-ranked path list is prefix-
+    exact BY CONSTRUCTION (every entry outranks the merged k-th, which
+    bounds every hidden order — any order dropped at a merge or slab
+    truncation ranks strictly below it), so no per-level bound pairs or
+    mid-slate safety cuts are needed; ``truncated`` reduces to "list
+    full and its k-th entry meets the floor".
+
+    The returned slate is the owner-exclusion-masked merged list (plus
+    the exact fall-back when the owner monopolizes it): LEAF-MAJOR
+    (n_leaves, k+1) ranked slots where excluded/sub-floor entries are
+    -1 HOLES — rank order is preserved along the last axis, consumers
+    skip holes (``BatchEngine._cascade`` does; an empty slate is
+    ``~any(cand_slots >= 0, axis=-1)``, NOT ``cand_slots[:, 0] < 0``).
+    (The flat ``clear_ref``/Pallas path returns the transposed
+    (K, n_leaves) compacted form; ``BatchEngine`` normalizes.)
+
+    ``levels_tab`` is the bid table's level column (for best_level);
+    ``level_off[d]`` the global segment id of node 0 at level d.
+    Returns (rate, best_level, cand_slots, truncated, evict).
+    """
+    cap = order.shape[0]
+    n_seg = int(seg_start.shape[0]) - 1
+    n_lvl = len(strides)
+    n_leaves = owner.shape[0]
+    # segment-major (n_seg, k) slabs so the per-node gathers below pull
+    # contiguous rows
+    pk, tk, sk, qk, p2, t2, s2, q2 = _prefix_aggregates(
+        order, sorted_gseg, seg_start, prices, tenants, seqs, n_seg, k)
+
+    # ---- hierarchical path merge, root -> leaf ----
+    def nodes_at(d):
+        return -(-n_leaves // strides[d])
+
+    def lvl_slice(arr, d):
+        return arr[level_off[d]:level_off[d] + nodes_at(d)]
+
+    top = n_lvl - 1
+    path = tuple(lvl_slice(a, top) for a in (pk, tk, sk, qk))
+    path2 = tuple(lvl_slice(a, top) for a in (p2, t2, s2, q2))
+    for d in range(n_lvl - 2, -1, -1):
+        nd = nodes_at(d)
+        parent = (jnp.arange(nd, dtype=jnp.int32) * strides[d]) \
+            // strides[d + 1]
+        A = tuple(x[parent] for x in path)
+        a2 = tuple(x[parent] for x in path2)
+        B = tuple(lvl_slice(a, d) for a in (pk, tk, sk, qk))
+        b2 = tuple(lvl_slice(a, d) for a in (p2, t2, s2, q2))
+        path, path2 = _merge2(A, a2, B, b2, k)
+
+    # ---- leaf stage: floor combine, owner exclusion, slate ----
+    leaf = jnp.arange(n_leaves)
+    il = leaf // strides[0]
+    P, T, S, Q = (x[il] for x in path)             # (n_leaves, k)
+    fp, ft, fs, fq = (x[il] for x in path2)
+    floor = jnp.zeros((n_leaves,), jnp.float32)
+    for d, s in enumerate(strides):
+        floor = jnp.maximum(floor, level_floor[d][leaf // s])
+    has_owner = owner >= 0
+    live_m = P > NEG / 2
+    excl = has_owner[:, None] & (T == owner[:, None])
+    Pex = jnp.where(excl, NEG, P)
+    # exact exclusion fall-back: the owner monopolizes every live
+    # merged entry, so the true owner-excluded best is the path
+    # fall-back (best from a tenant other than the owner's)
+    all_owned = has_owner & live_m[:, 0] \
+        & jnp.all(~live_m | excl, axis=-1)
+    E = jnp.concatenate(
+        [Pex, jnp.where(all_owned, fp, NEG)[:, None]], axis=-1)
+    ES = jnp.concatenate([S, fs[:, None]], axis=-1)
+    top_p = jnp.max(E, axis=-1)
+    rate = jnp.maximum(floor, jnp.maximum(top_p, 0.0))
+    col0 = jnp.argmax((E >= top_p[:, None]) & (E > NEG / 2), axis=-1)
+    sel0 = jnp.take_along_axis(ES, col0[:, None], axis=-1)[:, 0]
+    best_level = jnp.where(
+        top_p > NEG / 2,
+        levels_tab[jnp.clip(sel0, 0, cap - 1)], -1)
+    cand_slots = jnp.where(
+        (E > NEG / 2) & (E >= floor[:, None] - EPSF), ES, -1)
+    full = live_m[:, k - 1]
+    truncated = (full & (P[:, k - 1] >= floor - EPSF)).astype(jnp.int32)
+    evict = ((owner >= 0) & (rate > limit + EPSF)).astype(jnp.int32)
+    return rate, best_level, cand_slots, truncated, evict
 
 
 def segment_aggregates(prices: jax.Array, seg: jax.Array,
-                       tenants: jax.Array, n_seg: int, k: int = 1
+                       tenants: jax.Array, n_seg: int, k: int = 1,
+                       seqs: jax.Array = None
                        ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                  jax.Array, jax.Array]:
-    """Per-segment ranked top-k bids + best distinct-second-tenant bid.
+                                  jax.Array, jax.Array, jax.Array,
+                                  jax.Array]:
+    """One-shot ranked aggregates for a single flat segmentation.
 
-    prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 node ids;
-    tenants: (nb,) int32 tenant of each bid (-1 inactive).
-    Returns (pk, tk, sk, p2, s2):
-      pk/tk/sk — (k, n_seg) ranked price/tenant/slot lists, price desc
-        then slot asc (NEG/-1/-1 padded past the live book);
-      p2/s2 — (n_seg,) best price/earliest slot among tenants != tk[0]
-        (the exact owner-exclusion fall-back when tk[0] owns the leaf).
+    Sorts the table (``sort_book``) and prefix-gathers — the standalone
+    form of the sorted-book path for callers without a maintained view.
+    prices: (nb,) f32 (NEG for inactive); seg: (nb,) int32 segment ids;
+    tenants: (nb,) int32 (-1 inactive); seqs: (nb,) int32 arrival stamps
+    (defaults to slot order).  Returns (pk, tk, sk, qk, p2, s2, q2) —
+    see ``sorted_segment_aggregates``.
     """
     nb = prices.shape[0]
-    live = (prices > NEG / 2) & (tenants >= 0)
-    p = jnp.where(live, prices, NEG)
     slot = jnp.arange(nb, dtype=jnp.int32)
-    big = jnp.int32(nb)
-
-    def rank_one(rem, _):
-        pi = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(rem)
-        isi = (rem > NEG / 2) & (rem >= pi[seg])
-        si = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
-            jnp.where(isi, slot, big))
-        si = jnp.where(si >= big, -1, si)
-        ti = jnp.where(si >= 0, tenants[jnp.clip(si, 0, nb - 1)], -1)
-        # mask the selected slot out of its segment for the next rank
-        rem = jnp.where(si[seg] == slot, NEG, rem)
-        return rem, (jnp.where(si >= 0, pi, NEG), ti, si)
-
-    # lax.scan keeps the trace size K-independent (compile time)
-    _, (pk, tk, sk) = jax.lax.scan(rank_one, p, None, length=k)
-
-    o1 = tk[0]
-    alt = jnp.where(live & (tenants != o1[seg]), p, NEG)
-    p2 = jnp.full((n_seg,), NEG, jnp.float32).at[seg].max(alt)
-    is2 = (alt > NEG / 2) & (alt >= p2[seg])
-    s2 = jnp.full((n_seg,), big, jnp.int32).at[seg].min(
-        jnp.where(is2, slot, big))
-    s2 = jnp.where(s2 >= big, -1, s2)
-    return pk, tk, sk, p2, s2
+    if seqs is None:
+        seqs = slot
+    live = (prices > NEG / 2) & (tenants >= 0)
+    gseg = jnp.where(live, jnp.clip(seg, 0, n_seg - 1),
+                     jnp.int32(n_seg))
+    order, sorted_gseg = sort_book(gseg, jnp.where(live, prices, NEG),
+                                   seqs)
+    seg_start = jnp.searchsorted(
+        sorted_gseg, jnp.arange(n_seg + 1, dtype=jnp.int32),
+        side="left").astype(jnp.int32)
+    return sorted_segment_aggregates(order, sorted_gseg, seg_start,
+                                     prices, tenants, seqs, n_seg, k)
 
 
 def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
@@ -101,26 +385,33 @@ def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
     """Compatibility wrapper: (top1, top1_owner, top2) per segment, where
     top2 is the best bid from a tenant OTHER than top1's (the correct
     owner-exclusion runner-up)."""
-    pk, tk, _, p2, _ = segment_aggregates(prices, seg, owners, n_seg, k=1)
+    pk, tk, _, _, p2, _, _ = segment_aggregates(prices, seg, owners,
+                                                n_seg, k=1)
     return pk[0], tk[0], p2
 
 
 def _leaf_candidates(level_pk: Sequence[jax.Array],
                      level_tk: Sequence[jax.Array],
                      level_sk: Sequence[jax.Array],
+                     level_qk: Sequence[jax.Array],
                      level_p2: Sequence[jax.Array],
                      level_s2: Sequence[jax.Array],
+                     level_q2: Sequence[jax.Array],
                      level_floor: Sequence[jax.Array],
                      strides: Sequence[int], owner: jax.Array
                      ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                jax.Array, jax.Array]:
+                                jax.Array, jax.Array, jax.Array,
+                                jax.Array]:
     """Gather the per-level ranked entries down each leaf's ancestor path.
 
-    Returns (P, S, D, floor, bp, bs): candidate matrices of shape
-    (n_levels*(K+1), n_leaves) — price (owner-excluded entries masked to
-    NEG), slot, level — plus the combined path floor and per-level
+    Returns (P, S, Q, D, floor, bp, bq): candidate matrices of shape
+    (n_leaves, n_levels*(K+1)) — leaf-major so the merge's reductions
+    run over the small CONTIGUOUS last axis (XLA:CPU reduces strided
+    axis-0 columns ~2.5x slower) — price (owner-excluded entries masked
+    to NEG), slot, seq, and the (n_levels*(K+1),) level row-vector D —
+    plus the combined path floor and per-level
     hidden-order bound pairs (n_levels, n_leaves): the K-th
-    pre-exclusion entry's (price, slot) where the level list is full
+    pre-exclusion entry's (price, seq) where the level list is full
     (NEG/-1 otherwise).  Orders NOT represented in the candidate matrix
     rank strictly below their own level's bound pair (and below p2 in
     the all-owned case, which that K-th entry also bounds), so an entry
@@ -135,45 +426,53 @@ def _leaf_candidates(level_pk: Sequence[jax.Array],
     floor = jnp.zeros((n_leaves,), jnp.float32)
     rows_p: List[jax.Array] = []
     rows_s: List[jax.Array] = []
+    rows_q: List[jax.Array] = []
     bps: List[jax.Array] = []
-    bss: List[jax.Array] = []
+    bqs: List[jax.Array] = []
     for d, s in enumerate(strides):
         idx = leaf // s
         pk = level_pk[d][:, idx]          # (k, n_leaves)
         tk = level_tk[d][:, idx]
         sk = level_sk[d][:, idx]
+        qk = level_qk[d][:, idx]
         floor = jnp.maximum(floor, level_floor[d][idx])
         live_k = pk > NEG / 2
         excl = has_owner[None] & (tk == owner[None])
         rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
         rows_s.extend(sk[i] for i in range(k))
+        rows_q.extend(qk[i] for i in range(k))
         # exact exclusion fall-back: the owner monopolizes every live
-        # ranked entry, so the true owner-excluded best is (p2, s2)
+        # ranked entry, so the true owner-excluded best is (p2, s2, q2)
         all_owned = has_owner & live_k[0] \
             & jnp.all(~live_k | excl, axis=0)
         p2 = level_p2[d][idx]
         s2 = level_s2[d][idx]
+        q2 = level_q2[d][idx]
         rows_p.append(jnp.where(all_owned, p2, NEG))
         rows_s.append(s2)
+        rows_q.append(q2)
         # a full ranked list may hide further ELIGIBLE orders: they rank
-        # below the K-th pre-exclusion entry — or below (p2, s2) when
+        # below the K-th pre-exclusion entry — or below (p2, q2) when
         # the owner monopolizes the list (hidden non-owner bids all rank
         # below the best one)
         full = live_k[k - 1]
         bps.append(jnp.where(full & all_owned, p2,
                              jnp.where(full, pk[k - 1], NEG)))
-        bss.append(jnp.where(full & all_owned, s2,
-                             jnp.where(full, sk[k - 1], -1)))
+        bqs.append(jnp.where(full & all_owned, q2,
+                             jnp.where(full, qk[k - 1], -1)))
     D = jnp.repeat(jnp.arange(len(strides), dtype=jnp.int32), k + 1)
-    return (jnp.stack(rows_p), jnp.stack(rows_s), D[:, None],
-            floor, jnp.stack(bps), jnp.stack(bss))
+    return (jnp.stack(rows_p, axis=-1), jnp.stack(rows_s, axis=-1),
+            jnp.stack(rows_q, axis=-1), D, floor, jnp.stack(bps),
+            jnp.stack(bqs))
 
 
 def clear_ref(level_pk: Sequence[jax.Array],
               level_tk: Sequence[jax.Array],
               level_sk: Sequence[jax.Array],
+              level_qk: Sequence[jax.Array],
               level_p2: Sequence[jax.Array],
               level_s2: Sequence[jax.Array],
+              level_q2: Sequence[jax.Array],
               level_floor: Sequence[jax.Array],
               strides: Sequence[int],
               owner: jax.Array,
@@ -192,30 +491,26 @@ def clear_ref(level_pk: Sequence[jax.Array],
     level_pk[0].shape[0]; entry 0 is the classic single winner_slot.
     """
     K = level_pk[0].shape[0]
-    P, S, D, floor, bp, bs = _leaf_candidates(
-        level_pk, level_tk, level_sk, level_p2, level_s2, level_floor,
-        strides, owner)
-    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[None] - EPSF),
-                         axis=0)
+    P, S, Q, D, floor, bp, bq = _leaf_candidates(
+        level_pk, level_tk, level_sk, level_qk, level_p2, level_s2,
+        level_q2, level_floor, strides, owner)
+    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[:, None] - EPSF),
+                         axis=-1)
 
-    # top-K merge by (price desc, slot asc): two stable argsorts (a
-    # lexsort) — one fused sort pass instead of K max-reduction sweeps
-    # over the full candidate matrix (the clear's memory-traffic hot
-    # spot at 64k+ leaves).  Live rows have unique (price, slot), so
-    # the ordering is a strict total order; dead rows (NEG) sink.
-    o1 = jnp.argsort(S, axis=0)                     # slot asc
-    p1 = jnp.take_along_axis(P, o1, axis=0)
-    o2 = jnp.argsort(-p1, axis=0, stable=True)      # price desc
-    top = jnp.take_along_axis(o1, o2, axis=0)[:K]
-    sel_p = jnp.take_along_axis(P, top, axis=0)
-    live_sel = sel_p > NEG / 2
-    sel_s = jnp.where(live_sel, jnp.take_along_axis(S, top, axis=0), -1)
-    sel_d = jnp.where(live_sel, D[:, 0][top], -1)
+    # top-K merge by (price desc, seq asc) over the leaf-major
+    # candidate matrix, so every reduction runs down the small
+    # CONTIGUOUS last axis — see _topk_select for the selection
+    # mechanics and the unroll/sort tradeoff
+    sel = _topk_select(P, Q, (S, D[None, :]), K)
+    sel_p = jnp.stack([o[0] for o in sel])
+    sel_q = jnp.stack([o[1] for o in sel])
+    sel_s = jnp.stack([o[2][0] for o in sel])
+    sel_d = jnp.stack([o[2][1] for o in sel])
 
     rate = jnp.maximum(floor, jnp.maximum(sel_p[0], 0.0))
     best_level = jnp.where(sel_p[0] > NEG / 2, sel_d[0], -1)
     # the slate is only prefix-exact down to the hidden-order bounds: a
-    # selected entry is trusted iff it outranks (price desc, slot asc)
+    # selected entry is trusted iff it outranks (price desc, seq asc)
     # every OTHER full level's K-th pre-exclusion entry — its own
     # level's hidden orders rank below it by construction.  Entries at
     # or below a foreign bound could be outranked by that level's
@@ -225,7 +520,7 @@ def clear_ref(level_pk: Sequence[jax.Array],
     safe = jnp.ones(sel_p.shape, jnp.bool_)
     for d in range(n_lvl):
         outranks = (sel_p > bp[d][None]) | \
-            ((sel_p == bp[d][None]) & (sel_s < bs[d][None]))
+            ((sel_p == bp[d][None]) & (sel_q < bq[d][None]))
         safe = safe & ((bp[d][None] < NEG / 2) | (sel_d == d) | outranks)
     prefix_safe = jnp.cumsum((~safe).astype(jnp.int32), axis=0) == 0
     cand_slots = jnp.where((sel_s >= 0) & prefix_safe

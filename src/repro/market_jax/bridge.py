@@ -39,7 +39,8 @@ class _Order:
     """Lightweight handle mirroring ``market.Order`` for adapter code.
     ``gen`` guards against ring-buffer slot reuse: a stale handle whose
     slot was recycled reports inactive instead of aliasing the newer
-    order."""
+    order.  ``seq`` is the engine's monotone arrival stamp — the
+    equal-price tie-break priority, mirroring ``market.Order.seq``."""
     order_id: int
     tenant: str
     scope: int
@@ -48,6 +49,7 @@ class _Order:
     rtype: str
     slot: int
     gen: int
+    seq: int
     market: "BatchMarket"
 
     @property
@@ -148,8 +150,8 @@ class BatchMarket:
         if h is None:
             st = self.states[rtype]
             h = {k: np.asarray(st[k]) for k in
-                 ("price", "blimit", "level", "node", "tenant", "owner",
-                  "limit", "rate", "bills")}
+                 ("price", "blimit", "level", "node", "tenant", "seq",
+                  "owner", "limit", "rate", "bills")}
             h["floor"] = [np.asarray(f) for f in st["floor"]]
             self._np[rtype] = h
         return h
@@ -236,9 +238,11 @@ class BatchMarket:
             price, limit, d, idx, tid))
         oid = self._next_oid
         self._next_oid += 1
+        seq = int(self._host(rtype)["seq"][slot])
         self.orders[oid] = _Order(oid, tenant, scope, price, limit,
                                   rtype, slot,
-                                  int(self._slot_gen[rtype][slot]), self)
+                                  int(self._slot_gen[rtype][slot]), seq,
+                                  self)
         self.stats["orders"] += 1
         return oid
 

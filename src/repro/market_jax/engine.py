@@ -27,26 +27,50 @@ jitted ``step`` runs one complete market epoch:
      overflow and counts it in ``state["dropped"]`` instead of silently
      overwriting the book).
   5. **Clear / evict / transfer cascade** — repeat until fixpoint:
-     recompute the per-level ranked aggregates (only for levels whose bid
-     table changed since the previous wave — consumed slots are the only
-     mid-cascade mutation) and the clearing pass (jnp oracle or Pallas
-     kernel: per-leaf charged rate, ranked owner-excluded top-K candidate
-     slate, eviction mask); evict owners whose rate exceeds their
-     retention limit (outside the min-holding window); hand each evicted /
-     explicitly relinquished / idle leaf to its best covering bid meeting
-     the path floor.  One wave runs K in-wave claim rounds: a winning
-     order is consumed everywhere atomically (OCO) and wins at most one
-     leaf per round (lowest leaf index), and a contested leaf falls
-     through to its slate runner-up *within the wave* instead of waiting
-     for the next one — a cold-start flood of M marketable bids resolves
-     in O(ceil(M/K)) waves instead of O(M).  Fall-through stays
-     bit-identical to the K=1 cascade: an evicted leaf re-checks its
-     retention limit against each fall-through price (pressure that was
-     consumed no longer evicts), and a leaf that exhausts a possibly
-     truncated slate freezes in-wave resolution and waits for the next
-     full re-clear.  Leaves nobody covers fall back to the operator.  The
-     loop is a ``lax.while_loop`` (wave count observable via
-     ``state["waves"]``) so the whole step stays jitted.
+     recompute the per-level ranked aggregates from the sorted book view
+     and the clearing pass (jnp oracle or Pallas kernel: per-leaf charged
+     rate, ranked owner-excluded top-K candidate slate, eviction mask);
+     evict owners whose rate exceeds their retention limit (outside the
+     min-holding window); hand each evicted / explicitly relinquished /
+     idle leaf to its best covering bid meeting the path floor.  One wave
+     runs K in-wave claim rounds: a winning order is consumed everywhere
+     atomically (OCO) and wins at most one leaf per round (lowest leaf
+     index), and a contested leaf falls through to its slate runner-up
+     *within the wave* instead of waiting for the next one — a cold-start
+     flood of M marketable bids resolves in O(ceil(M/K)) waves instead of
+     O(M).  Fall-through stays bit-identical to the K=1 cascade: an
+     evicted leaf re-checks its retention limit against each fall-through
+     price (pressure that was consumed no longer evicts), and a leaf that
+     exhausts a possibly truncated slate freezes in-wave resolution and
+     waits for the next full re-clear.  Leaves nobody covers fall back to
+     the operator.  The loop is a ``lax.while_loop`` (wave count
+     observable via ``state["waves"]``) so the whole step stays jitted.
+
+**Sorted-book invariant.**  The engine maintains a segment-sorted view
+of the bid table — ``state["order"]`` (slot permutation),
+``state["sorted_gseg"]`` (segment key per sorted position) and
+``state["seg_start"]`` (per-segment start offsets) — sorted by
+``(segment asc, price desc, seq asc)`` where a segment is one
+(level, node) book, globally indexed ``level_off[level] + node``, and
+dead slots carry the sentinel segment ``n_seg_total``.  Exactly one
+lexsort runs per epoch (at the end of ``place``); every other mutation
+(cancel, OCO consumption inside cascade waves) only KILLS entries —
+never moves, re-prices or revives them — so between sorts each live
+slot still sits inside its segment's ``[seg_start[g], seg_start[g+1])``
+range in (price desc, seq asc) order.  Killed entries are skipped via a
+liveness cumsum, making per-wave aggregate maintenance O(capacity) flat
+(contiguous-prefix gathers + two scatters) instead of K scatter-sweeps
+per level (``ref.sorted_segment_aggregates``).
+
+**Seq-stamp semantics.**  ``state["seq"]`` carries a per-order arrival
+stamp from the monotone counter ``state["next_seq"]``, assigned in
+batch-position order by ``place``.  All equal-price tie-breaks — the
+ranked per-segment aggregates, the clearing kernel's candidate merge and
+the prefix-safety bounds — use (price desc, seq asc), i.e. TRUE arrival
+order, bit-identical to the event engine's ``Order.seq`` priority even
+after the ring allocator laps the table and slot order stops matching
+arrival order.  (The stamp is int32; it wraps after ~2.1e9 orders —
+re-init the engine before that.)
 
 ``transfers`` reports per-leaf {moved, old, new} owner ids for the step;
 ``bills`` is the cumulative per-tenant bill vector. Tenants are dense int
@@ -98,18 +122,34 @@ class BatchEngine:
         self.controls = controls or VolatilityControls()
         self.interpret = interpret
         self.k = max(1, int(k))   # contested claims resolved per wave
+        # global segment layout: segment id of (level d, node i) is
+        # level_off[d] + i; n_seg_total is the dead-slot sentinel
+        off, acc = [], 0
+        for d in range(tree.n_levels):
+            off.append(acc)
+            acc += tree.nodes_at(d)
+        self.level_off = tuple(off)
+        self.n_seg_total = acc
 
     def init_state(self) -> Dict[str, jax.Array]:
         t = self.tree
+        cap = self.capacity
         return {
             # bid table (ring buffer of OCO scoped orders)
-            "price": jnp.full((self.capacity,), NEG, jnp.float32),
-            "blimit": jnp.full((self.capacity,), jnp.inf, jnp.float32),
-            "level": jnp.zeros((self.capacity,), jnp.int32),
-            "node": jnp.zeros((self.capacity,), jnp.int32),
-            "tenant": jnp.full((self.capacity,), -1, jnp.int32),
+            "price": jnp.full((cap,), NEG, jnp.float32),
+            "blimit": jnp.full((cap,), jnp.inf, jnp.float32),
+            "level": jnp.zeros((cap,), jnp.int32),
+            "node": jnp.zeros((cap,), jnp.int32),
+            "tenant": jnp.full((cap,), -1, jnp.int32),
+            "seq": jnp.zeros((cap,), jnp.int32),    # arrival stamps
+            "next_seq": jnp.zeros((), jnp.int32),   # monotone counter
             "head": jnp.zeros((), jnp.int32),       # ring-buffer cursor
             "dropped": jnp.zeros((), jnp.int32),    # overflow drop count
+            # sorted book view (see module docstring): slot permutation,
+            # per-position segment key, per-segment start offsets
+            "order": jnp.arange(cap, dtype=jnp.int32),
+            "sorted_gseg": jnp.full((cap,), self.n_seg_total, jnp.int32),
+            "seg_start": jnp.zeros((self.n_seg_total + 1,), jnp.int32),
             # per-leaf ownership
             "owner": jnp.full((t.n_leaves,), -1, jnp.int32),
             "limit": jnp.full((t.n_leaves,), jnp.inf, jnp.float32),
@@ -132,6 +172,32 @@ class BatchEngine:
         }
 
     # ------------------------------------------------------------------
+    def _gseg(self, state):
+        """Current global segment id per slot (sentinel where dead)."""
+        off = jnp.array(self.level_off, jnp.int32)
+        nd = jnp.array([self.tree.nodes_at(d)
+                        for d in range(self.tree.n_levels)], jnp.int32)
+        lvl = jnp.clip(state["level"], 0, self.tree.n_levels - 1)
+        node = jnp.clip(state["node"], 0, nd[lvl] - 1)
+        live = (state["price"] > NEG / 2) & (state["tenant"] >= 0)
+        return jnp.where(live, off[lvl] + node,
+                         jnp.int32(self.n_seg_total))
+
+    def _resort(self, state):
+        """The once-per-epoch lexsort: rebuild the sorted book view.
+
+        Called only where live entries APPEAR or change key (``place``);
+        kills (cancel / OCO consumption) keep the view valid."""
+        order, sg = R.sort_book(self._gseg(state), state["price"],
+                                state["seq"])
+        state["order"] = order
+        state["sorted_gseg"] = sg
+        state["seg_start"] = jnp.searchsorted(
+            sg, jnp.arange(self.n_seg_total + 1, dtype=jnp.int32),
+            side="left").astype(jnp.int32)
+        return state
+
+    # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
     def place(self, state, prices, levels, nodes, tenants, limits=None):
         """Insert a batch of scoped bids into free table slots.
@@ -141,13 +207,11 @@ class BatchEngine:
         book). Bids that do not fit — the table holds ``capacity`` live
         orders — are dropped and counted in ``state["dropped"]``.
 
-        Known limitation: once the cursor has lapped the table, reused
-        holes break the "slot asc == arrival asc" identity the clear
-        tie-break relies on, so EQUAL-price bids placed after a lap may
-        win in slot order rather than strict arrival order (the event
-        engine's seq order).  Exact arrival ties need a monotone
-        per-order seq stamp threaded through the ranked aggregates —
-        ROADMAP open item.
+        Each accepted bid is stamped with the next monotone ``seq`` (in
+        batch-position order), so equal-price ties clear in TRUE arrival
+        order even after the wrapped cursor starts reusing freed holes
+        (slot order then no longer equals arrival order).  The sorted
+        book view is rebuilt here — the one lexsort per epoch.
 
         NOTE: this low-level insert skips volatility clipping and does
         not re-clear; use ``step`` for full semantics."""
@@ -172,70 +236,96 @@ class BatchEngine:
         state["level"] = state["level"].at[idx].set(levels, mode="drop")
         state["node"] = state["node"].at[idx].set(nodes, mode="drop")
         state["tenant"] = state["tenant"].at[idx].set(tenants, mode="drop")
+        state["seq"] = state["seq"].at[idx].set(
+            state["next_seq"] + j, mode="drop")
+        state["next_seq"] = state["next_seq"] + \
+            jnp.sum(live_in.astype(jnp.int32))
         n_used = jnp.sum(ok.astype(jnp.int32))
         state["dropped"] = state["dropped"] + \
             jnp.sum(live_in.astype(jnp.int32)) - n_used
         last = jnp.max(jnp.where(ok, ring[jnp.clip(dest, 0, cap - 1)], -1))
         state["head"] = jnp.where(
             n_used > 0, (state["head"] + last + 1) % cap, state["head"])
-        return state
+        return self._resort(state)
 
     @functools.partial(jax.jit, static_argnums=0)
     def cancel(self, state, bid_ids):
         """Deactivate bid slots. Follow with a zero-event ``step`` at the
-        same timestamp so cached rates refresh before billing resumes."""
+        same timestamp so cached rates refresh before billing resumes.
+        A kill keeps the sorted book view valid (dead entries are
+        skipped by live-rank), so no re-sort happens here."""
         state = dict(state)
         state["price"] = state["price"].at[bid_ids].set(NEG)
         state["tenant"] = state["tenant"].at[bid_ids].set(-1)
         return state
 
     # ------------------------------------------------------------------
-    def _level_aggs(self, state, d: int):
-        """Ranked owner-exclusion aggregates for one level's book."""
-        n_d = self.tree.nodes_at(d)
-        mask = (state["level"] == d) & (state["tenant"] >= 0)
-        prices = jnp.where(mask, state["price"], NEG)
-        seg = jnp.clip(state["node"], 0, n_d - 1)
-        return R.segment_aggregates(prices, seg, state["tenant"], n_d,
-                                    self.k)
-
     def _aggregates(self, state):
-        """Per-level ranked aggregates (pk, tk, sk, p2, s2) — pk/tk/sk
-        are (k, nodes_at(d)) top-k (price, tenant, slot) lists."""
-        aggs = [self._level_aggs(state, d)
-                for d in range(self.tree.n_levels)]
-        return tuple([a[i] for a in aggs] for i in range(5))
+        """Per-level ranked aggregates from the sorted book view: tuple
+        of 7 level-lists (pk, tk, sk, qk, p2, s2, q2) — pk/tk/sk/qk are
+        (k, nodes_at(d)) ranked (price, tenant, slot, seq) lists, the
+        rest the distinct-second-tenant fall-back.  One flat
+        prefix-gather over the global segment slab, sliced per level."""
+        pk, tk, sk, qk, p2, s2, q2 = R.sorted_segment_aggregates(
+            state["order"], state["sorted_gseg"], state["seg_start"],
+            state["price"], state["tenant"], state["seq"],
+            self.n_seg_total, self.k)
+        outs = tuple([] for _ in range(7))
+        for d in range(self.tree.n_levels):
+            a = self.level_off[d]
+            b = a + self.tree.nodes_at(d)
+            for o, arr in zip(outs, (pk[:, a:b], tk[:, a:b], sk[:, a:b],
+                                     qk[:, a:b], p2[a:b], s2[a:b],
+                                     q2[a:b])):
+                o.append(arr)
+        return outs
 
     def _clear_from_aggs(self, state, aggs, interpret=None):
         return clear_ops.clear(
-            tuple(a[0] for a in aggs), tuple(a[1] for a in aggs),
-            tuple(a[2] for a in aggs), tuple(a[3] for a in aggs),
-            tuple(a[4] for a in aggs), tuple(state["floor"]),
+            *(tuple(a) for a in aggs), tuple(state["floor"]),
             self.tree.strides, state["owner"], state["limit"],
             use_pallas=self.use_pallas,
             interpret=self.interpret if interpret is None else interpret)
 
     def _clear_arrays(self, state, interpret: Optional[bool] = None):
-        aggs = [self._level_aggs(state, d)
-                for d in range(self.tree.n_levels)]
-        return self._clear_from_aggs(state, aggs, interpret)
+        """Clearing pass with the slate in LEAF-MAJOR (n_leaves, K')
+        layout (K' = k+1 on the jnp path, with -1 holes at excluded or
+        sub-floor ranks; k on the Pallas path, compacted)."""
+        if self.use_pallas:
+            # the Pallas kernel consumes per-level contiguous slabs and
+            # emits the (K, n_leaves) compacted slate — normalize
+            rate, lvl, cands, trunc, evict = self._clear_from_aggs(
+                state, self._aggregates(state), interpret)
+            return rate, lvl, cands.T, trunc, evict
+        # jnp path: fused sorted-view clear with the hierarchical path
+        # merge (the flat per-level slab form costs O(levels*K^2) per
+        # leaf per wave; see ref.clear_sorted)
+        return R.clear_sorted(
+            state["order"], state["sorted_gseg"], state["seg_start"],
+            state["price"], state["tenant"], state["seq"],
+            state["level"], tuple(state["floor"]), self.level_off,
+            self.tree.strides, state["owner"], state["limit"], self.k)
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
     def clear(self, state, interpret: bool = True):
         """Full clearing pass: per-leaf charged rate, winning level, and
-        winning (owner-excluded, floor-gated) bid slot (the head of the
-        ranked candidate slate — use ``clear_topk`` for all K)."""
+        winning (owner-excluded, floor-gated) bid slot — the best live
+        entry of the ranked candidate slate (use ``clear_topk`` for all
+        of it)."""
         rate, best_level, cands, _, _ = self._clear_arrays(
             state, interpret)
-        return rate, best_level, cands[0]
+        first = jnp.argmax(cands >= 0, axis=-1)
+        winner = jnp.take_along_axis(cands, first[:, None], axis=-1)[:, 0]
+        return rate, best_level, winner
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
     def clear_topk(self, state, interpret: bool = True):
-        """Full clearing pass with the ranked (K, n_leaves) candidate
-        slate and the slate-truncation flag."""
+        """Full clearing pass with the ranked (K', n_leaves) candidate
+        slate (rank-ordered; -1 entries are padding or excluded holes)
+        and the slate-truncation flag."""
         rate, best_level, cands, trunc, _ = self._clear_arrays(
             state, interpret)
-        return rate, best_level, cands, trunc
+        return rate, best_level, cands.T, trunc
 
     # ------------------------------------------------------------------
     def _clip_bids(self, state, prices, levels, nodes):
@@ -280,12 +370,13 @@ class BatchEngine:
         """Clear / evict / transfer to fixpoint (see module docstring).
 
         Each wave resolves up to K contested OCO claims via in-wave
-        fall-through rounds; per-level aggregates are hoisted out of the
-        loop and only rebuilt for levels whose book changed (consumed
-        slots) since the previous wave."""
+        fall-through rounds.  Aggregates are recomputed per wave from
+        the maintained sorted book view — a flat O(capacity)
+        prefix-gather (consumption only kills entries, which the
+        liveness cumsum skips), replacing the pre-PR-3 per-level
+        ``lax.cond``-gated K-sweep rebuilds."""
         tree = self.tree
         n_leaves = tree.n_leaves
-        n_lvl = tree.n_levels
         K = self.k
         cap = self.capacity
         leafid = jnp.arange(n_leaves, dtype=jnp.int32)
@@ -297,17 +388,8 @@ class BatchEngine:
                                      state["floor"][d][leafid // s])
 
         def body(carry):
-            st, rel, aggs, changed, _ = carry
-            # incremental refresh: only levels whose book changed since
-            # the previous wave are re-aggregated
-            aggs = tuple(
-                lax.cond(changed[d],
-                         functools.partial(self._level_aggs, d=d),
-                         lambda st_, a=aggs[d]: a,
-                         st)
-                for d in range(n_lvl))
-            rate, _lvl, cands, trunc, evict_p = self._clear_from_aggs(
-                st, aggs)
+            st, rel, _ = carry
+            rate, _lvl, cands, trunc, evict_p = self._clear_arrays(st)
             st = dict(st)
             st["rate"] = rate
             st["waves"] = st["waves"] + 1
@@ -316,8 +398,10 @@ class BatchEngine:
             if min_hold > 0:
                 evict = evict & ((t - st["acq_t"]) >= min_hold)
             trunc_b = trunc != 0
-            slot0 = cands[0]
-            sell = (owner < 0) & (slot0 >= 0)    # idle supply matching
+            # the slate may contain -1 HOLES at excluded/sub-floor ranks
+            # (jnp path) — "has a candidate" is any(>= 0), not entry 0
+            has_cand = jnp.any(cands >= 0, axis=-1)
+            sell = (owner < 0) & has_cand        # idle supply matching
             # idle supply FIRST (matching Market._try_immediate_match):
             # while any marketable bid can still fill an idle leaf, its
             # pressure must not evict anyone — it will be consumed
@@ -329,29 +413,26 @@ class BatchEngine:
             # (not truncated) OR empty at wave start (the clear's top-1
             # is exact for the wave book, and consumption only removes
             # orders); otherwise the leaf needs a full re-clear
-            conclusive = ~trunc_b | (slot0 < 0)
+            conclusive = ~trunc_b | ~has_cand
             price_tab = st["price"]
             tenant_tab = st["tenant"]
             blimit_tab = st["blimit"]
+            cexp = jnp.clip(cands, 0, cap - 1)      # (n_leaves, K')
 
-            def round_one(rc, _):
+            def round_one(rc):
                 (owner_c, limit_c, acq_c, consumed, unresolved, moved,
-                 go) = rc
-
+                 go, r) = rc
                 # proposal: each unresolved leaf's best not-yet-consumed
-                # slate entry (exact fall-through — ref.clear_ref)
-                def prop_one(pc, sj):
-                    prop_i, found = pc
-                    okj = (sj >= 0) & \
-                        ~consumed[jnp.clip(sj, 0, cap - 1)]
-                    return (jnp.where(~found & okj, sj, prop_i),
-                            found | okj), None
-
-                (prop, _), _ = lax.scan(
-                    prop_one,
-                    (jnp.full((n_leaves,), -1, jnp.int32),
-                     jnp.zeros((n_leaves,), jnp.bool_)), cands)
-                prop = jnp.where(unresolved, prop, -1)
+                # slate entry (exact fall-through) — a vectorized
+                # first-hit over the leaf-major slate (contiguous rows)
+                okj = (cands >= 0) & ~consumed[cexp]
+                found = jnp.any(okj, axis=-1)
+                first = jnp.argmax(okj, axis=-1)
+                prop = jnp.where(
+                    unresolved & found,
+                    jnp.take_along_axis(
+                        cands, first[:, None], axis=-1)[:, 0],
+                    -1)
                 ps = jnp.clip(prop, 0, cap - 1)
                 # an evicted leaf re-checks its limit against the
                 # fall-through price: pressure that another leaf
@@ -379,6 +460,10 @@ class BatchEngine:
                     jnp.where(act, prop, cap)].min(
                     jnp.where(act, leafid, n_leaves), mode="drop")
                 win = act & (claimer[ps] == leafid)
+                # every claimed slot is consumed by its (unique, minimal)
+                # claimer, so the claimer array doubles as this round's
+                # consumption set — no second scatter needed
+                consumed = consumed | (claimer < n_leaves)
                 # movers with a conclusively exhausted slate fall back
                 # to the operator (releases always; evictions only
                 # while the floor itself still exceeds the limit)
@@ -391,8 +476,6 @@ class BatchEngine:
                     win, blimit_tab[ps],
                     jnp.where(recl, jnp.inf, limit_c))
                 acq_c = jnp.where(moved_r, t, acq_c)
-                consumed = consumed.at[jnp.where(win, prop, cap)].set(
-                    True, mode="drop")
                 # a reclaim creates NEW idle supply mid-wave: under the
                 # idle-supply-first rule the freshly idle leaf's sells
                 # (including the old owner's now-unexcluded bids) must
@@ -401,30 +484,38 @@ class BatchEngine:
                 go = go & ~jnp.any(recl)
                 return (owner_c, limit_c, acq_c, consumed,
                         unresolved & ~moved_r & ~lapsed & ~done,
-                        moved | moved_r, go), None
+                        moved | moved_r, go, r + 1)
 
-            rc0 = (st["owner"], st["limit"], st["acq_t"],
-                   jnp.zeros((cap,), jnp.bool_), unresolved0,
-                   jnp.zeros((n_leaves,), jnp.bool_), jnp.asarray(True))
-            (st["owner"], st["limit"], st["acq_t"], consumed, _, moved,
-             _), _ = lax.scan(round_one, rc0, None, length=K)
-            # consume winning orders (each OCO set dissolves atomically)
+            # early-exit round loop: identical to running all K rounds
+            # (a round with nothing unresolved or a frozen wave is a
+            # no-op by construction), but steady-state waves resolve in
+            # 1-2 active rounds, so skipping the idle tail saves the
+            # dominant per-round scatter cost.  K=1 keeps the single
+            # statically-fused round (the loop machinery costs more
+            # than the round it would skip).
+            rc = (st["owner"], st["limit"], st["acq_t"],
+                  jnp.zeros((cap,), jnp.bool_), unresolved0,
+                  jnp.zeros((n_leaves,), jnp.bool_), jnp.asarray(True),
+                  jnp.zeros((), jnp.int32))
+            if K == 1:
+                rc = round_one(rc)
+            else:
+                rc = lax.while_loop(
+                    lambda rc: rc[6] & jnp.any(rc[4]) & (rc[7] < K),
+                    round_one, rc)
+            st["owner"], st["limit"], st["acq_t"], consumed, _, moved, \
+                _, _ = rc
+            # consume winning orders (each OCO set dissolves atomically);
+            # a kill keeps the sorted book view valid
             st["price"] = jnp.where(consumed, NEG, st["price"])
             st["tenant"] = jnp.where(consumed, -1, st["tenant"])
-            changed = jnp.zeros((n_lvl,), jnp.bool_).at[
-                jnp.where(consumed,
-                          jnp.clip(st["level"], 0, n_lvl - 1),
-                          n_lvl)].set(True, mode="drop")
-            return st, rel & ~moved, aggs, changed, jnp.any(moved)
+            return st, rel & ~moved, jnp.any(moved)
 
         def cond(carry):
-            return carry[4]
+            return carry[2]
 
-        aggs0 = tuple(self._level_aggs(state, d) for d in range(n_lvl))
-        changed0 = jnp.zeros((n_lvl,), jnp.bool_)
-        state, release, _, _, _ = lax.while_loop(
-            cond, body,
-            (state, release, aggs0, changed0, jnp.asarray(True)))
+        state, release, _ = lax.while_loop(
+            cond, body, (state, release, jnp.asarray(True)))
         return state
 
     # ------------------------------------------------------------------

@@ -135,6 +135,55 @@ def test_differential_cold_start_flood():
     assert ev.stats["transfers"] == bm.stats["transfers"] == len(leaves)
 
 
+def test_differential_lap_equal_price_seq_order():
+    """Regression for the closed ROADMAP tie-break item: EQUAL-price
+    bids placed after the batch engine's ring allocator has lapped the
+    table (so a later arrival occupies a LOWER reused slot) must win in
+    the event engine's seq (arrival) order, not slot order."""
+    topo = build_cluster({"H100": 4}, gpus_per_host=2, hosts_per_rack=2,
+                         racks_per_zone=1)
+    ev = Market(topo)
+    bm = BatchMarket(topo, capacity=8, n_tenants=16)
+    root = topo.roots["H100"]
+    leaves = topo.leaves_of(root)
+    ev.set_floor(root, 100.0)                    # everything rests
+    bm.set_floor(root, 100.0)
+    fill = {}
+    for i in range(8):                           # fill all 8 slots
+        fill[i] = (ev.place_order(f"bg{i}", root, 2.0, limit=99.0),
+                   bm.place_order(f"bg{i}", root, 2.0, limit=99.0))
+    # punch a hole, lap into it with A, punch another EARLIER hole, lap
+    # into it with B: A arrives first but lands in the higher slot
+    ev.cancel_order("bg5", fill[5][0])
+    bm.cancel_order("bg5", fill[5][1])
+    oa = (ev.place_order("ta", root, 6.0, limit=99.0),
+          bm.place_order("ta", root, 6.0, limit=99.0))
+    ev.cancel_order("bg2", fill[2][0])
+    bm.cancel_order("bg2", fill[2][1])
+    ob = (ev.place_order("tb", root, 6.0, limit=99.0),
+          bm.place_order("tb", root, 6.0, limit=99.0))
+    a, b = bm.orders[oa[1]], bm.orders[ob[1]]
+    assert a.slot > b.slot, (a.slot, b.slot)     # the lap inversion
+    assert a.seq < b.seq                         # ...but A arrived first
+    # floor drop makes ONLY the two 6.0 bids marketable: the earlier
+    # arrival must take the first leaf in BOTH engines (slot order
+    # would hand it to B)
+    ev.set_floor(root, 5.5)
+    bm.set_floor(root, 5.5)
+    assert ev.owner_of(leaves[0]) == "ta"
+    assert ev.owner_of(leaves[1]) == "tb"
+    for leaf in leaves:
+        assert ev.owner_of(leaf) == bm.owner_of(leaf), leaf
+        assert ev.market_rate(leaf) == pytest.approx(
+            bm.market_rate(leaf), abs=1e-4), leaf
+    ev.advance_to(1800.0)
+    bm.advance_to(1800.0)
+    eb, bb = ev.settle(), bm.settle()
+    for t in ("ta", "tb", "bg0", "bg1"):
+        assert eb.get(t, 0.0) == pytest.approx(
+            bb.get(t, 0.0), rel=1e-4, abs=1e-3), t
+
+
 def test_differential_volatility_controls():
     """min-holding deferral, bounded floor falls and bid clipping active
     (tree kept <= 64 leaves so the event engine's first-64-leaf clip

@@ -118,6 +118,85 @@ def test_topk_fixpoint_identical_to_k1(seed):
             np.testing.assert_array_equal(x, y)
 
 
+def check_sorted_book(eng, state):
+    """The sorted-book invariant (see engine.py module docstring):
+
+    * ``state["order"]`` is a permutation of the table slots;
+    * segment CONTIGUITY — every live slot sits at a position inside its
+      current segment's ``[seg_start[g], seg_start[g+1])`` range, with
+      the matching sort-time segment key;
+    * within each segment, live entries appear in (price desc, seq asc)
+      order.
+    Holds for STALE views too: kills since the last sort leave holes but
+    never move or re-key live entries.
+    """
+    order = np.asarray(state["order"])
+    sg = np.asarray(state["sorted_gseg"])
+    ss = np.asarray(state["seg_start"])
+    price = np.asarray(state["price"])
+    tenant = np.asarray(state["tenant"])
+    seq = np.asarray(state["seq"])
+    level = np.asarray(state["level"])
+    node = np.asarray(state["node"])
+    cap = order.size
+    assert sorted(order.tolist()) == list(range(cap))
+    pos_of = np.empty(cap, np.int64)
+    pos_of[order] = np.arange(cap)
+    live = (price > NEG / 2) & (tenant >= 0)
+    for s in np.nonzero(live)[0]:
+        g = eng.level_off[level[s]] + node[s]
+        p = pos_of[s]
+        assert sg[p] == g, (s, p, sg[p], g)
+        assert ss[g] <= p < ss[g + 1], (s, p, ss[g], ss[g + 1])
+    for g in range(eng.n_seg_total):
+        ent = [(float(price[order[p]]), int(seq[order[p]]))
+               for p in range(ss[g], ss[g + 1]) if live[order[p]]]
+        assert ent == sorted(ent, key=lambda e: (-e[0], e[1])), (g, ent)
+
+
+_INV_TREE = build_tree(64)
+_INV_ENGINE = BatchEngine(_INV_TREE, capacity=96, n_tenants=8, k=4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_sorted_book_invariant_under_interleavings(seed):
+    """Segment contiguity and (price desc, seq asc) in-segment order
+    hold after arbitrary interleavings of place / cancel / evict /
+    transfer waves — including equal-price ties, ring-allocator laps
+    over freed holes, and stale (post-kill) views."""
+    rng = np.random.default_rng(seed)
+    tree = _INV_TREE
+    eng = _INV_ENGINE
+    state = eng.init_state()
+    state["floor"][-1] = state["floor"][-1].at[0].set(1.0)
+    t = 0.0
+    for _ in range(8):
+        op = rng.choice(["place", "cancel", "step"], p=[0.45, 0.25, 0.3])
+        if op == "place":
+            n = int(rng.integers(1, 24))
+            levels = rng.integers(0, tree.n_levels, n).astype(np.int32)
+            nodes = np.array([rng.integers(0, tree.nodes_at(d))
+                              for d in levels], np.int32)
+            # few discrete prices -> heavy equal-price ties; few
+            # tenants -> same-tenant shadowing
+            prices = rng.choice([2.0, 3.0, 5.0, 8.0], n).astype(
+                np.float32)
+            state = eng.place(
+                state, jnp.array(prices), jnp.array(levels),
+                jnp.array(nodes),
+                jnp.array(rng.integers(0, 5, n), jnp.int32),
+                jnp.array(prices * 1.5))
+        elif op == "cancel":
+            ids = rng.integers(0, eng.capacity, 6).astype(np.int32)
+            state = eng.cancel(state, jnp.array(ids))
+        else:
+            t += float(rng.uniform(0.0, 600.0))
+            rel = jnp.array(rng.integers(-1, 64, 4), jnp.int32)
+            state, _, _ = eng.step(state, t, None, None, rel)
+        check_sorted_book(eng, state)
+
+
 @settings(max_examples=10, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_step_oco_one_win_per_order(seed):

@@ -226,6 +226,53 @@ class TestPlacement:
         assert int(st["dropped"]) == 1
 
 
+class TestSeqTieBreak:
+    def test_lap_equal_price_ties_resolve_by_arrival(self):
+        """After the ring allocator laps the table, a LATER equal-price
+        arrival can land in a LOWER slot (a reused hole).  The clear
+        must still rank the earlier arrival first — seq order, exactly
+        like the event engine — not slot order."""
+        tree = TreeSpec(4, (1, 2, 4))
+        eng = BatchEngine(tree, capacity=8, n_tenants=16)
+        st = eng.init_state()
+        st["floor"][-1] = st["floor"][-1].at[0].set(100.0)  # all rest
+
+        def place1(st, price, tenant):
+            return eng.place(st, jnp.array([price], jnp.float32),
+                             jnp.array([2], jnp.int32),
+                             jnp.array([0], jnp.int32),
+                             jnp.array([tenant], jnp.int32),
+                             jnp.array([99.0], jnp.float32))
+
+        # fill all 8 slots with root-scoped filler bids
+        st = eng.place(st, jnp.full((8,), 2.0, jnp.float32),
+                       jnp.full((8,), 2, jnp.int32),
+                       jnp.zeros((8,), jnp.int32),
+                       jnp.arange(8, dtype=jnp.int32),
+                       jnp.full((8,), 99.0, jnp.float32))
+        # free two holes, then lap: A (earlier) -> the late hole, B
+        # (later) -> the EARLY hole, so slot order inverts arrival order
+        st = eng.cancel(st, jnp.array([5], jnp.int32))
+        st = place1(st, 6.0, 10)                   # A -> slot 5
+        st = eng.cancel(st, jnp.array([2], jnp.int32))
+        st = place1(st, 6.0, 11)                   # B -> slot 2
+        slot_a = int(np.argmax(np.asarray(st["tenant"]) == 10))
+        slot_b = int(np.argmax(np.asarray(st["tenant"]) == 11))
+        assert slot_a > slot_b, (slot_a, slot_b)   # the lap inversion
+        assert int(st["seq"][slot_a]) < int(st["seq"][slot_b])
+        # the ranked slate must put A (earlier seq) first
+        _, _, cands, _ = eng.clear_topk(st)
+        lead = np.asarray(cands)[0]
+        assert np.all(lead[lead >= 0] == slot_a)
+        # and the flood resolves in arrival order: A wins the lowest
+        # leaf, B the next (slot order would swap them)
+        floors = [jnp.full(f.shape, -1.0, jnp.float32)
+                  for f in st["floor"]]
+        floors[-1] = floors[-1].at[0].set(5.5)     # only A, B marketable
+        st, _, _ = eng.step(st, 10.0, floor_updates=floors)
+        assert owners(st)[:2] == [10, 11]
+
+
 class TestColdStartFlood:
     def test_flood_wave_bound_and_k1_equivalence(self):
         """2048 marketable root bids onto idle supply resolve in

@@ -179,30 +179,78 @@ def test_segment_aggregates_owner_exclusion_exact():
     prices = jnp.array([9.0, 8.0, 5.0, 1.0], jnp.float32)
     seg = jnp.zeros((4,), jnp.int32)
     tenants = jnp.array([7, 7, 3, 2], jnp.int32)
-    pk, tk, sk, p2, s2 = clear_ref.segment_aggregates(prices, seg,
-                                                      tenants, 1, k=1)
+    pk, tk, sk, qk, p2, s2, q2 = clear_ref.segment_aggregates(
+        prices, seg, tenants, 1, k=1)
     assert float(pk[0, 0]) == 9.0 and int(tk[0, 0]) == 7 \
         and int(sk[0, 0]) == 0
     assert float(p2[0]) == 5.0 and int(s2[0]) == 2
 
 
 def test_segment_aggregates_ranked_topk():
-    """The ranked list is the exact top-k by (price desc, slot asc),
-    tenants included, padded with NEG/-1 past the live book."""
+    """The ranked list is the exact top-k by (price desc, seq asc),
+    tenants included, padded with NEG/-1 past the live book (seqs
+    default to slot order here)."""
     prices = jnp.array([5.0, 9.0, 7.0, 9.0, NEG, 3.0], jnp.float32)
     seg = jnp.array([0, 0, 0, 0, 0, 1], jnp.int32)
     tenants = jnp.array([1, 2, 1, 3, 4, 2], jnp.int32)
-    pk, tk, sk, p2, s2 = clear_ref.segment_aggregates(prices, seg,
-                                                      tenants, 2, k=4)
+    pk, tk, sk, qk, p2, s2, q2 = clear_ref.segment_aggregates(
+        prices, seg, tenants, 2, k=4)
     np.testing.assert_allclose(np.asarray(pk[:, 0]), [9.0, 9.0, 7.0, 5.0])
     np.testing.assert_array_equal(np.asarray(sk[:, 0]), [1, 3, 2, 0])
     np.testing.assert_array_equal(np.asarray(tk[:, 0]), [2, 3, 1, 1])
+    np.testing.assert_array_equal(np.asarray(qk[:, 0]), [1, 3, 2, 0])
     # seg 1 has one bid; ranks 1..3 padded
     assert float(pk[0, 1]) == 3.0 and int(sk[0, 1]) == 5
     assert np.all(np.asarray(sk[1:, 1]) == -1)
+    assert np.all(np.asarray(qk[1:, 1]) == -1)
     # p2 = best from a tenant other than tk[0]
     assert float(p2[0]) == 9.0 and int(s2[0]) == 3
     assert float(p2[1]) < NEG / 2 and int(s2[1]) == -1
+
+
+def test_segment_aggregates_seq_breaks_equal_price_ties():
+    """Equal-price entries rank by the ARRIVAL stamp, not the table
+    slot: a later arrival sitting in a lower slot (a reused ring hole)
+    must rank below the earlier arrival in a higher slot."""
+    prices = jnp.array([6.0, 6.0, 6.0, 2.0], jnp.float32)
+    seg = jnp.zeros((4,), jnp.int32)
+    tenants = jnp.array([1, 2, 3, 4], jnp.int32)
+    # slot 0 arrived LAST (seq 30), slot 2 arrived first (seq 5)
+    seqs = jnp.array([30, 10, 5, 0], jnp.int32)
+    pk, tk, sk, qk, p2, s2, q2 = clear_ref.segment_aggregates(
+        prices, seg, tenants, 1, k=3, seqs=seqs)
+    np.testing.assert_array_equal(np.asarray(sk[:, 0]), [2, 1, 0])
+    np.testing.assert_array_equal(np.asarray(qk[:, 0]), [5, 10, 30])
+    # fall-back: best from a tenant != tk[0]=3 at equal price -> the
+    # earliest-seq one (slot 1, seq 10)
+    assert float(p2[0]) == 6.0 and int(s2[0]) == 1 and int(q2[0]) == 10
+
+
+def test_sorted_segment_aggregates_skips_killed_entries():
+    """A stale sorted view (entries consumed since the sort) must skip
+    dead entries by live-rank and still return the exact ranked prefix
+    of the surviving book."""
+    prices = np.array([9.0, 7.0, 5.0, 8.0, 3.0], np.float32)
+    seg = np.array([0, 0, 0, 1, 1], np.int32)
+    tenants = np.array([1, 2, 3, 1, 2], np.int32)
+    seqs = np.arange(5, dtype=np.int32)
+    gseg = jnp.array(seg)
+    order, sorted_gseg = clear_ref.sort_book(
+        gseg, jnp.array(prices), jnp.array(seqs))
+    seg_start = jnp.searchsorted(
+        sorted_gseg, jnp.arange(3, dtype=jnp.int32)).astype(jnp.int32)
+    # kill the top order of segment 0 (slot 0) AFTER the sort
+    prices2 = prices.copy(); prices2[0] = NEG
+    tenants2 = tenants.copy(); tenants2[0] = -1
+    pk, tk, sk, qk, p2, s2, q2 = clear_ref.sorted_segment_aggregates(
+        order, sorted_gseg, seg_start, jnp.array(prices2),
+        jnp.array(tenants2), jnp.array(seqs), 2, 2)
+    np.testing.assert_allclose(np.asarray(pk[:, 0]), [7.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(sk[:, 0]), [1, 2])
+    # seg 1 untouched
+    np.testing.assert_allclose(np.asarray(pk[:, 1]), [8.0, 3.0])
+    # p2 of seg 0: best tenant != 2 among survivors -> slot 2 @ 5.0
+    assert float(p2[0]) == 5.0 and int(s2[0]) == 2
 
 
 def test_clear_ref_slate_matches_bruteforce():
