@@ -7,6 +7,12 @@ when any matching ``full_step``/``flood`` row regressed by more than
 reported and skipped, so quick-mode and full-mode files can be diffed
 against the same baseline.
 
+Two machine-independent SHAPE invariants are enforced within the fresh
+file alone (see below): the k8-vs-k1 full_step non-inversion per
+backend, and the pallas/jnp ``clear_pass`` ratio — the latter so the
+Pallas kernel path cannot silently rot (or silently stop being
+benchmarked) while the jnp path keeps improving.
+
 The baseline was recorded on a different machine than the CI runner, so
 raw wall-clock ratios carry a constant machine-speed factor.  The gate
 calibrates that factor from the INDEPENDENT python-engine rows
@@ -48,6 +54,13 @@ def main() -> int:
                     help="max allowed fresh/baseline slowdown ratio")
     ap.add_argument("--prefixes", default=(
         "fig12/jax_batch/full_step,fig12/jax_batch/flood"))
+    ap.add_argument("--max-pallas-ratio", type=float, default=60.0,
+                    help="max allowed pallas/jnp clear_pass wall-clock "
+                         "ratio at the same pool size (the interpret-"
+                         "mode kernel pays a constant interpreter "
+                         "overhead; a blowup past this bound means the "
+                         "kernel path regressed).  0 disables the "
+                         "check (e.g. for --backend jnp runs)")
     args = ap.parse_args()
     base = load(args.baseline)
     fresh = load(args.fresh)
@@ -88,21 +101,52 @@ def main() -> int:
             failures.append(f"{name} regressed {rel:.2f}x calibrated "
                             f"(> {args.threshold}x)")
 
-    # shape invariant: k=8 full_step must not lose to k=1 at the same n
-    # (the pre-PR-3 inversions were 1.4x+; 15% headroom absorbs runner
-    # noise without letting a real inversion through)
+    # shape invariant: k=8 full_step must not lose to k=1 at the same n,
+    # ON EITHER BACKEND (the pre-PR-3 inversions were 1.4x+; 15%
+    # headroom absorbs runner noise without letting a real inversion
+    # through)
     by_nk = {}
     for name, us in fresh.items():
-        m = re.fullmatch(r"fig12/jax_batch/full_step/n=(\d+)/k=(\d+)",
-                         name)
+        m = re.fullmatch(r"fig12/jax_batch/full_step"
+                         r"(?:/backend=(\w+))?/n=(\d+)/k=(\d+)", name)
         if m:
-            by_nk[(int(m.group(1)), int(m.group(2)))] = us
-    for (n, k), us in sorted(by_nk.items()):
-        if k == 8 and (n, 1) in by_nk and us > by_nk[(n, 1)] * 1.15:
+            by_nk[(m.group(1) or "jnp", int(m.group(2)),
+                   int(m.group(3)))] = us
+    for (bk, n, k), us in sorted(by_nk.items()):
+        if k == 8 and (bk, n, 1) in by_nk \
+                and us > by_nk[(bk, n, 1)] * 1.15:
             failures.append(
-                f"K-scaling inversion: full_step n={n} k=8 "
+                f"K-scaling inversion ({bk}): full_step n={n} k=8 "
                 f"({us/1e6:.3f}s) slower than k=1 "
-                f"({by_nk[(n, 1)]/1e6:.3f}s)")
+                f"({by_nk[(bk, n, 1)]/1e6:.3f}s)")
+
+    # shape invariant: the pallas clear_pass must exist and stay within
+    # --max-pallas-ratio of the jnp clear_pass at the same pool size —
+    # both rows come from the same run, so the ratio is machine-free
+    if args.max_pallas_ratio > 0:
+        jnp_cp, pal_cp = {}, {}
+        for name, us in fresh.items():
+            m = re.fullmatch(r"fig12/jax_batch/clear_pass"
+                             r"(?:/backend=(\w+))?/n=(\d+)", name)
+            if m:
+                (pal_cp if m.group(1) == "pallas"
+                 else jnp_cp)[int(m.group(2))] = us
+        shared = sorted(set(jnp_cp) & set(pal_cp))
+        if not shared:
+            failures.append(
+                "no pallas clear_pass rows to gate — run "
+                "fig12_scalability.py with --backend both (or pass "
+                "--max-pallas-ratio 0 for a jnp-only run)")
+        for n in shared:
+            ratio = pal_cp[n] / jnp_cp[n]
+            tag = ("FAIL" if ratio > args.max_pallas_ratio else "ok")
+            print(f"{tag}  clear_pass pallas/jnp ratio n={n}: "
+                  f"{ratio:.1f}x (bound {args.max_pallas_ratio:.0f}x)")
+            if ratio > args.max_pallas_ratio:
+                failures.append(
+                    f"pallas clear_pass n={n} is {ratio:.1f}x the jnp "
+                    f"path (> {args.max_pallas_ratio:.0f}x): the "
+                    f"kernel path has rotted")
 
     if compared == 0:
         failures.append("no benchmark rows matched the baseline — "

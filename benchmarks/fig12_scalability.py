@@ -6,13 +6,18 @@ Three heaviest operations vs pool size (the paper's panels):
   (c) cancel a resting "anywhere" buy.
 
 Reported for the paper-faithful Python engine AND the beyond-paper JAX
-batch engine (ref + Pallas-interpret clearing) — the batch engine is the
-TPU-native scale path (DESIGN.md §3).  The batch rows compare K=1 with
-the top-K wave-parallel cascade (one wave resolves K contested OCO
-claims), including a cold-start flood of 2048 marketable bids onto idle
-supply that reports wave count and wall time.  All fig12 rows are also
-written to ``BENCH_fig12.json`` so the perf trajectory is tracked
-across PRs.
+batch engine — the batch engine is the TPU-native scale path
+(docs/DESIGN.md §3).  ``--backend`` selects the batch clearing backend:
+``jnp`` (the sorted-slab oracle), ``pallas`` (the sorted-slab kernel —
+interpret mode on CPU CI, compiled where a TPU is attached), or
+``both`` (default).  The batch rows compare K=1 with the top-K
+wave-parallel cascade (one wave resolves K contested OCO claims),
+including a cold-start flood of 2048 marketable bids onto idle supply
+that reports wave count and wall time.  All fig12 rows are also written
+to ``BENCH_fig12.json`` so the perf trajectory is tracked across PRs —
+including the pallas-backend rows, which
+``benchmarks/check_fig12_regression.py`` gates against the jnp rows so
+the kernel path cannot silently rot again.
 """
 from __future__ import annotations
 
@@ -26,6 +31,10 @@ from repro.core.topology import build_cluster
 
 POOL_SIZES = (512, 2048, 10_000)
 BENCH_JSON = "BENCH_fig12.json"
+# pallas rows: interpret mode pays a per-block interpreter overhead on
+# CPU, so the kernel backend is benchmarked on bounded shapes only
+PALLAS_CLEAR_SIZES = (2048, 16_384)
+PALLAS_STEP_SIZE = 2048
 
 
 def _python_engine(n: int):
@@ -39,7 +48,8 @@ def _python_engine(n: int):
     return topo, m, root
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backend: str = "both"):
+    backends = ("jnp", "pallas") if backend == "both" else (backend,)
     sizes = POOL_SIZES[:2] if quick else POOL_SIZES
     for n in sizes:
         topo, m, root = _python_engine(n)
@@ -80,80 +90,106 @@ def run(quick: bool = False):
         emit(f"fig12c/python/cancel/n={n}", us_c,
              f"{1e6 / us_c:.0f} req/s")
 
-    # JAX batch engine: full clearing pass over the largest pool
+    # JAX batch engine: full clearing pass over the largest pool, on
+    # each selected backend (the pallas rows keep the kernel path honest
+    # — check_fig12_regression.py gates their ratio to the jnp rows)
     import jax
     import jax.numpy as jnp
     from repro.market_jax.engine import BatchEngine, build_tree
+    interp = jax.default_backend() != "tpu"   # compiled where available
     for n in ((2048,) if quick else (2048, 16_384, 65_536)):
         tree = build_tree(n)
-        eng = BatchEngine(tree, capacity=1 << 14)
-        st = eng.init_state()
+        engines = {}
+        for bk in backends:
+            if bk == "pallas" and n not in PALLAS_CLEAR_SIZES:
+                continue
+            engines[bk] = BatchEngine(tree, capacity=1 << 14,
+                                      use_pallas=(bk == "pallas"),
+                                      interpret=interp)
+        if not engines:
+            continue
+        eng0 = next(iter(engines.values()))
+        st = eng0.init_state()
         st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
         rng = np.random.default_rng(0)
         nb = 8192
         levels = rng.integers(0, tree.n_levels, nb).astype(np.int32)
         nodes = np.array([rng.integers(0, tree.nodes_at(d))
                           for d in levels], np.int32)
-        st = eng.place(st, jnp.array(rng.uniform(1, 8, nb), jnp.float32),
-                       jnp.array(levels), jnp.array(nodes),
-                       jnp.array(rng.integers(0, 999, nb), jnp.int32))
-
-        def clear():
-            r, l, w = eng.clear(st)
-            r.block_until_ready()
-        us = time_op(clear, repeat=5, warmup=2)
-        emit(f"fig12/jax_batch/clear_pass/n={n}", us,
-             f"{n / (us / 1e6):.2e} leaf-clears/s (8192 resting bids)")
+        st = eng0.place(st, jnp.array(rng.uniform(1, 8, nb),
+                                      jnp.float32),
+                        jnp.array(levels), jnp.array(nodes),
+                        jnp.array(rng.integers(0, 999, nb), jnp.int32))
+        for bk, eng in engines.items():
+            def clear(eng=eng):
+                r, l, w = eng.clear(st)
+                r.block_until_ready()
+            us = time_op(clear, repeat=5, warmup=2)
+            tag = "" if bk == "jnp" else f"/backend={bk}"
+            emit(f"fig12/jax_batch/clear_pass{tag}/n={n}", us,
+                 f"{n / (us / 1e6):.2e} leaf-clears/s "
+                 f"(8192 resting bids)")
 
     # JAX batch engine: the FULL market epoch — place -> clear -> evict ->
     # transfer -> bill — i.e. one complete step() of the renegotiation
     # runtime, with a live bid inflow every epoch; K=1 vs the top-K
     # wave-parallel cascade (quick mode sweeps K to expose any
     # K-scaling inversion — the pre-PR-3 regression class)
+    step_cases = []
     for n in ((2048, 16_384) if quick else (2048, 16_384, 65_536)):
         for k in ((1, 4, 8, 16) if quick else (1, 8)):
-            tree = build_tree(n)
-            eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024,
-                              k=k)
-            st = eng.init_state()
-            st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
-            rng = np.random.default_rng(0)
-            # contested steady state: ~95% of the pool owned, random
-            # limits
-            st["owner"] = jnp.array(
-                np.where(rng.random(n) < 0.95,
-                         rng.integers(0, 1024, n), -1), jnp.int32)
-            st["limit"] = jnp.array(rng.uniform(3.0, 9.0, n),
-                                    jnp.float32)
-            nb = 2048
-            def fresh_bids():
-                levels = rng.integers(0, tree.n_levels,
-                                      nb).astype(np.int32)
-                return {
-                    "price": jnp.array(rng.uniform(1, 8, nb),
-                                       jnp.float32),
-                    "limit": jnp.array(rng.uniform(8, 12, nb),
-                                       jnp.float32),
-                    "level": jnp.array(levels),
-                    "node": jnp.array(np.array(
-                        [rng.integers(0, tree.nodes_at(d))
-                         for d in levels], np.int32)),
-                    "tenant": jnp.array(rng.integers(0, 1024, nb),
-                                        jnp.int32),
-                }
-            clock = [0.0]
-            holder = [st]
-            def full_step():
-                clock[0] += 30.0
-                s2, transfers, bills = eng.step(holder[0], clock[0],
-                                                fresh_bids())
-                holder[0] = jax.block_until_ready(s2)
-            us = time_op(full_step, repeat=5, warmup=2)
-            waves = int(holder[0]["waves"])
-            emit(f"fig12/jax_batch/full_step/n={n}/k={k}", us,
-                 f"{n / (us / 1e6):.2e} leaf-clears/s "
-                 f"({nb} new bids/epoch; billing+evictions on; "
-                 f"{waves} waves total)")
+            if "jnp" in backends:
+                step_cases.append((n, k, "jnp"))
+            # pallas full_step: bounded shape, K=1 vs K=8 so the
+            # K-scaling non-inversion guard covers the kernel path too
+            if "pallas" in backends and n == PALLAS_STEP_SIZE \
+                    and k in (1, 8):
+                step_cases.append((n, k, "pallas"))
+    for n, k, bk in step_cases:
+        tree = build_tree(n)
+        eng = BatchEngine(tree, capacity=1 << 14, n_tenants=1024,
+                          k=k, use_pallas=(bk == "pallas"),
+                          interpret=interp)
+        st = eng.init_state()
+        st["floor"][-1] = st["floor"][-1].at[0].set(2.0)
+        rng = np.random.default_rng(0)
+        # contested steady state: ~95% of the pool owned, random
+        # limits
+        st["owner"] = jnp.array(
+            np.where(rng.random(n) < 0.95,
+                     rng.integers(0, 1024, n), -1), jnp.int32)
+        st["limit"] = jnp.array(rng.uniform(3.0, 9.0, n),
+                                jnp.float32)
+        nb = 2048
+        def fresh_bids():
+            levels = rng.integers(0, tree.n_levels,
+                                  nb).astype(np.int32)
+            return {
+                "price": jnp.array(rng.uniform(1, 8, nb),
+                                   jnp.float32),
+                "limit": jnp.array(rng.uniform(8, 12, nb),
+                                   jnp.float32),
+                "level": jnp.array(levels),
+                "node": jnp.array(np.array(
+                    [rng.integers(0, tree.nodes_at(d))
+                     for d in levels], np.int32)),
+                "tenant": jnp.array(rng.integers(0, 1024, nb),
+                                    jnp.int32),
+            }
+        clock = [0.0]
+        holder = [st]
+        def full_step():
+            clock[0] += 30.0
+            s2, transfers, bills = eng.step(holder[0], clock[0],
+                                            fresh_bids())
+            holder[0] = jax.block_until_ready(s2)
+        us = time_op(full_step, repeat=5, warmup=2)
+        waves = int(holder[0]["waves"])
+        tag = "" if bk == "jnp" else f"/backend={bk}"
+        emit(f"fig12/jax_batch/full_step{tag}/n={n}/k={k}", us,
+             f"{n / (us / 1e6):.2e} leaf-clears/s "
+             f"({nb} new bids/epoch; billing+evictions on; "
+             f"{waves} waves total)")
 
     # cold-start flood: M marketable root-scope bids land on an idle
     # pool in ONE epoch.  K=1 pays one cascade wave per matched order;
@@ -195,4 +231,10 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="2048/16384-leaf pools only")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--backend", choices=("jnp", "pallas", "both"),
+                    default="both",
+                    help="batch clearing backend(s) to benchmark "
+                         "(pallas = the sorted-slab kernel, interpret "
+                         "mode on CPU)")
+    ns = ap.parse_args()
+    run(quick=ns.quick, backend=ns.backend)

@@ -240,7 +240,7 @@ def long_context_ok(cfg: ArchConfig) -> bool:
     """long_500k runs only for sub-quadratic archs (SSM / hybrid / SWA).
 
     Pure full-attention archs are skipped per the assignment; the skip is
-    recorded in DESIGN.md §Arch-applicability."""
+    recorded in docs/DESIGN.md §Arch-applicability."""
     if cfg.num_heads == 0:              # pure SSM
         return True
     if cfg.attn_layer_period:           # hybrid (mostly SSM)

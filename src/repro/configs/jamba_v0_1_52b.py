@@ -4,7 +4,7 @@
 vocab=65536, MoE 16 experts top-2.  Attention at offset 4 of each 8-layer
 period; MoE on every second layer (as in the released Jamba block layout).
 The SSM blocks use the Mamba2/SSD formulation (TPU-friendly chunked
-matmuls); see DESIGN.md §Arch-applicability.
+matmuls); see docs/DESIGN.md §Arch-applicability.
 """
 from repro.configs.base import ArchConfig
 

@@ -1,195 +1,286 @@
-"""Pallas TPU kernel for the hierarchical market-clearing pass.
+"""Pallas TPU kernel for the hierarchical market-clearing pass over the
+sort-once segmented order book.
 
-TPU-native formulation (DESIGN.md §3): the tree is regular, so leaf i's
-ancestor at level d is ``i // stride[d]`` — pure index arithmetic, no
-pointer chasing. The grid tiles leaves into VMEM blocks; each level's node
+SORTED-SLAB formulation (docs/DESIGN.md §3): the kernel consumes the
+SAME contiguous segment-major ``(n_seg, k)`` ranked aggregates the jnp
+path uses — one shared producer, ``ref._prefix_aggregates`` over
+``state["order"] / ["sorted_gseg"] / ["seg_start"]`` — and runs the
+HIERARCHICAL 2-WAY PATH MERGE (``ref._merge2`` semantics) in VMEM per
+leaf block, replacing the old flat ``n_levels*(K+1)``-wide per-leaf
+candidate matrix (O(levels*K^2) per leaf) with the O(K) merged path
+list.  The tree is regular, so leaf i's ancestor at level d is
+``i // stride[d]`` — pure index arithmetic, no pointer chasing.
+
+Layout: the grid tiles leaves into VMEM blocks; each level's node
 aggregates arrive as a *contiguous window* via its BlockSpec index map
-(every 128/512-leaf block shares a handful of ancestors), so the kernel
-does only static `jnp.repeat` expansions and vector max/select ops — no
-gathers, fully VPU-friendly.
+(every leaf block shares a handful of ancestors), packed into two
+TPU-shaped slabs per level — a float slab (ranked prices, fall-back
+price, floor) and an int slab (ranked tenant/slot/seq lists, fall-back
+tenant/slot/seq) — with the rank dimension on SUBLANES padded to a
+multiple of 8 and the node dimension on LANES padded to a multiple of
+128.  Merges run top-down at node granularity inside the block (static
+``jnp.repeat`` expansions between levels — no gathers, fully
+VPU-friendly); each _merge2 is the same k-pass (price desc, seq asc)
+selection as ``ref._topk_select``, over sublanes instead of the last
+axis.  Each entry carries its originating LEVEL as a merge payload, so
+``best_level`` needs no bid-table gather.
 
-Per level the inputs are contiguous SORTED-SLAB aggregates computed by
-``ref.sorted_segment_aggregates`` from the sort-once segmented book: the
-ranked top-K bids (price pk, tenant tk, slot sk, arrival seq qk — price
-desc, seq asc), the best bid from any tenant other than tk[0]
-(p2, s2, q2 — the exact exclusion fall-back), and the operator floor.
-Outputs per leaf: charged rate, winning level, the ranked (K, block)
-owner-excluded floor-gated candidate slate, the slate-truncation flag,
-and the retention-limit eviction mask — see ref.clear_ref.
+The leaf dimension is PADDED with dead lanes (owner -1, NEG prices, -1
+slots) to a whole number of blocks instead of asserting divisibility,
+so non-block-multiple and non-power-of-two topologies (e.g. a 768-leaf
+``build_tree`` pool) run unchanged; outputs are sliced back to
+``n_leaves``.  ``_pick_block`` shrinks the block size when a level's
+node windows would otherwise straddle a real node boundary.
 
-The top-K merge across levels is a K-pass selection over the stacked
-(n_levels*(K+1), block) candidate matrix: per pass one vector max, a
-seq-asc tie-break min (TRUE arrival order, matching the event engine
-even after the ring allocator laps the bid table), and a mask-out — no
-sorts, all VPU ops.
-
-Block size 512 divides all level strides (8/32/128/512-style topologies);
-lane dim padded to multiples of 128 where needed by the caller (ops.py).
+Outputs per leaf (bit-identical to ``ref.clear_sorted``): charged rate,
+winning level, the LEAF-MAJOR (n_leaves, k+1) ranked candidate slate
+with -1 holes at excluded/sub-floor ranks, the slate-truncation flag,
+and the retention-limit eviction mask.
 """
 from __future__ import annotations
 
 import functools
-from typing import List, Sequence, Tuple
+import math
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NEG = -1e30
-EPSF = 1e-6
-BIGS = 1 << 30        # slot/seq sentinel above any real value
-_REFS_PER_LEVEL = 8   # pk, tk, sk, qk, p2, s2, q2, floor
+from repro.kernels.market_clear.ref import BIGS, EPSF, NEG
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pick_block(n_leaves: int, strides: Sequence[int],
+                block: int) -> int:
+    """Largest leaf-block size <= ``block`` whose blocks never straddle
+    a REAL node boundary at any level (each level's aggregates reach a
+    block through one contiguous node window, so a block must tile the
+    level's nodes — b % s == 0 — or sit inside a single node —
+    s % b == 0).  Levels with a single real node are unconstrained:
+    their only boundary is into leaf padding.  Consecutive sub-block
+    strides must also nest (s2 % s1 == 0) so the in-kernel parent
+    expansion is a static uniform repeat; regular trees satisfy this by
+    construction."""
+    b = max(1, min(block, n_leaves))
+
+    def clash(b: int) -> int:
+        for d, s in enumerate(strides):
+            if -(-n_leaves // s) > 1 and s % b != 0 and b % s != 0:
+                return s
+            if d + 1 < len(strides):
+                s2 = strides[d + 1]
+                if s < b and s2 < b and s2 % s != 0:
+                    return s
+        return 0
+
+    while b > 1:
+        s = clash(b)
+        if s == 0:
+            break
+        b = math.gcd(b, s)
+    return b
+
+
+def _merge2_rows(A, a2, B, b2, k: int):
+    """``ref._merge2`` with the rank dimension on SUBLANES (axis 0) —
+    the TPU-native layout inside a leaf block.  A/B: (P, T, S, Q, L)
+    tuples of (k, lanes) ranked lists; a2/b2: (p2, t2, s2, q2, l2)
+    (lanes,) fall-backs.  Semantics (and hence results) are identical
+    to the jnp path's merge — see ref._merge2 for the invariants."""
+    Pa, Ta, Sa, Qa, La = A
+    Pb, Tb, Sb, Qb, Lb = B
+    W = jnp.concatenate([Pa, Pb], axis=0)          # (2k, lanes)
+    T = jnp.concatenate([Ta, Tb], axis=0)
+    S = jnp.concatenate([Sa, Sb], axis=0)
+    Q = jnp.concatenate([Qa, Qb], axis=0)
+    L = jnp.concatenate([La, Lb], axis=0)
+    mP, mT, mS, mQ, mL = [], [], [], [], []
+    for _ in range(k):
+        pm = jnp.max(W, axis=0)
+        cand = (W > NEG / 2) & (W >= pm[None])
+        qm = jnp.min(jnp.where(cand, Q, BIGS), axis=0)  # seq asc tie
+        sel = cand & (Q == qm[None])
+        alive = pm > NEG / 2
+        mP.append(jnp.where(alive, pm, NEG))
+        mQ.append(jnp.where(alive, qm, -1))
+        mT.append(jnp.max(jnp.where(sel, T, -1), axis=0))
+        mS.append(jnp.max(jnp.where(sel, S, -1), axis=0))
+        mL.append(jnp.max(jnp.where(sel, L, -1), axis=0))
+        W = jnp.where(sel, NEG, W)
+    merged = (jnp.stack(mP), jnp.stack(mT), jnp.stack(mS),
+              jnp.stack(mQ), jnp.stack(mL))
+    t0 = merged[1][0]
+    a_top_is = Ta[0] == t0
+    cA = tuple(jnp.where(a_top_is, x2, x[0])
+               for x2, x in zip(a2, (Pa, Ta, Sa, Qa, La)))
+    b_top_is = Tb[0] == t0
+    cB = tuple(jnp.where(b_top_is, x2, x[0])
+               for x2, x in zip(b2, (Pb, Tb, Sb, Qb, Lb)))
+    a_wins = (cA[0] > cB[0]) | ((cA[0] == cB[0]) & (cA[3] < cB[3]))
+    m2 = tuple(jnp.where(a_wins, xa, xb) for xa, xb in zip(cA, cB))
+    return merged, m2
 
 
 def _clear_kernel(owner_ref, limit_ref, *refs,
-                  strides: Sequence[int], block: int, k: int):
-    """refs layout: for each level d: (pk, tk, sk, qk, p2, s2, q2,
-    floor) then outputs (rate, best_level, cand_slots, truncated,
-    evict)."""
-    n_lvl = len(strides)
-    lvl_refs = refs[:_REFS_PER_LEVEL * n_lvl]
-    (rate_ref, lvl_out, slots_out, trunc_out,
-     evict_out) = refs[_REFS_PER_LEVEL * n_lvl:]
-    owner = owner_ref[...]
-    limit = limit_ref[...]
+                  ws: Sequence[int], block: int, k: int, rs: int):
+    """refs layout: per level d (leaf -> root): float slab F_d
+    (rows: k ranked prices, fall-back price, floor; sublane-padded) and
+    int slab I_d (rows: k tenants, k slots, k seqs, fall-back
+    tenant/slot/seq; sublane-padded) — then the outputs (rate, level,
+    slate, truncated, evict)."""
+    n_lvl = len(ws)
+    (rate_ref, lvl_ref, slate_ref, trunc_ref,
+     evict_ref) = refs[2 * n_lvl:]
+    owner = owner_ref[0, :]
+    limit = limit_ref[0, :]
+
+    def load(d):
+        F = refs[2 * d][...]
+        I = refs[2 * d + 1][...]
+        pk, p2, fl = F[:k], F[k], F[k + 1]
+        tk, sk, qk = I[:k], I[k:2 * k], I[2 * k:3 * k]
+        t2, s2, q2 = I[3 * k], I[3 * k + 1], I[3 * k + 2]
+        ranked = (pk, tk, sk, qk,
+                  jnp.where(pk > NEG / 2, jnp.int32(d), -1))
+        fall = (p2, t2, s2, q2,
+                jnp.where(p2 > NEG / 2, jnp.int32(d), -1))
+        return ranked, fall, fl
+
+    # ---- hierarchical path merge, root -> leaf, at node granularity
+    top = n_lvl - 1
+    path, path2, fl = load(top)
+    floor = jnp.maximum(fl, 0.0)
+    for d in range(n_lvl - 2, -1, -1):
+        r = ws[d] // ws[d + 1]
+
+        def rep(a, r=r, w=ws[d]):
+            return jnp.repeat(a, r, axis=-1, total_repeat_length=w)
+
+        A = tuple(rep(x) for x in path)
+        a2 = tuple(rep(x) for x in path2)
+        B, b2, fl = load(d)
+        path, path2 = _merge2_rows(A, a2, B, b2, k)
+        floor = jnp.maximum(rep(floor), fl)
+    rleaf = block // ws[0]
+    if rleaf > 1:
+        def rep(a):
+            return jnp.repeat(a, rleaf, axis=-1,
+                              total_repeat_length=block)
+        path = tuple(rep(x) for x in path)
+        path2 = tuple(rep(x) for x in path2)
+        floor = rep(floor)
+
+    # ---- leaf stage: owner exclusion, slate — see clear_sorted_from_aggs
+    P, T, S, Q, L = path                            # (k, block)
+    fp, ft, fs, fq, fl2 = path2
     has_owner = owner >= 0
-    floor = jnp.zeros((block,), jnp.float32)
-    rows_p: List[jax.Array] = []
-    rows_s: List[jax.Array] = []
-    rows_q: List[jax.Array] = []
-    bps: List[jax.Array] = []
-    bqs: List[jax.Array] = []
-    for d, s in enumerate(strides):
-        pk, tk, sk, qk, p2, s2, q2, fl = (
-            lvl_refs[_REFS_PER_LEVEL * d + i][...] for i in range(8))
-        reps = s if s <= block else block
-        # expand the node window to per-leaf lanes (static repeat)
-        pk = jnp.repeat(pk, reps, axis=1, total_repeat_length=block)
-        tk = jnp.repeat(tk, reps, axis=1, total_repeat_length=block)
-        sk = jnp.repeat(sk, reps, axis=1, total_repeat_length=block)
-        qk = jnp.repeat(qk, reps, axis=1, total_repeat_length=block)
-        p2 = jnp.repeat(p2, reps, total_repeat_length=block)
-        s2 = jnp.repeat(s2, reps, total_repeat_length=block)
-        q2 = jnp.repeat(q2, reps, total_repeat_length=block)
-        fl = jnp.repeat(fl, reps, total_repeat_length=block)
-        floor = jnp.maximum(floor, fl)
-        live_k = pk > NEG / 2
-        excl = has_owner[None] & (tk == owner[None])
-        rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
-        rows_s.extend(sk[i] for i in range(k))
-        rows_q.extend(qk[i] for i in range(k))
-        all_owned = has_owner & live_k[0] \
-            & jnp.all(~live_k | excl, axis=0)
-        rows_p.append(jnp.where(all_owned, p2, NEG))
-        rows_s.append(s2)
-        rows_q.append(q2)
-        # hidden-eligible-order bound pair per level — see ref.py
-        full = live_k[k - 1]
-        bps.append(jnp.where(full & all_owned, p2,
-                             jnp.where(full, pk[k - 1], NEG)))
-        bqs.append(jnp.where(full & all_owned, q2,
-                             jnp.where(full, qk[k - 1], -1)))
-    P = jnp.stack(rows_p)                  # (n_lvl*(k+1), block)
-    S = jnp.stack(rows_s)
-    Q = jnp.stack(rows_q)
-    D = jnp.repeat(jnp.arange(n_lvl, dtype=jnp.int32), k + 1)[:, None]
-    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[None] - EPSF),
-                         axis=0)
-
-    sel_p, sel_s, sel_q, sel_d = [], [], [], []
-    work = P
-    for _ in range(k):
-        pm = jnp.max(work, axis=0)
-        cand = (work > NEG / 2) & (work >= pm[None])
-        qm = jnp.min(jnp.where(cand, Q, BIGS), axis=0)   # seq asc tie
-        selrow = cand & (Q == qm[None])
-        any_live = pm > NEG / 2
-        sel_p.append(jnp.where(any_live, pm, NEG))
-        sel_q.append(jnp.where(any_live, qm, -1))
-        sel_s.append(jnp.where(any_live,
-                               jnp.max(jnp.where(selrow, S, -1), axis=0),
-                               -1))
-        sel_d.append(jnp.max(jnp.where(selrow, D, -1), axis=0))
-        work = jnp.where(selrow, NEG, work)
-
-    rate = jnp.maximum(floor, jnp.maximum(sel_p[0], 0.0))
-    rate_ref[...] = rate
-    lvl_out[...] = jnp.where(sel_p[0] > NEG / 2, sel_d[0], -1)
-    # prefix-safety gate against the hidden-order bounds — see ref.py
-    slots = []
-    unsafe_seen = jnp.zeros((block,), jnp.bool_)
-    for j in range(k):
-        safe_j = jnp.ones((block,), jnp.bool_)
-        for d in range(n_lvl):
-            outranks = (sel_p[j] > bps[d]) | \
-                ((sel_p[j] == bps[d]) & (sel_q[j] < bqs[d]))
-            safe_j = safe_j & ((bps[d] < NEG / 2) | (sel_d[j] == d)
-                               | outranks)
-        unsafe_seen = unsafe_seen | ~safe_j
-        slots.append(jnp.where(
-            (sel_s[j] >= 0) & ~unsafe_seen
-            & (sel_p[j] >= floor - EPSF), sel_s[j], -1))
-    slots_out[...] = jnp.stack(slots)
-    bound = functools.reduce(jnp.maximum, bps)
-    trunc_out[...] = ((elig_count > k) | (bound >= floor - EPSF)
-                      ).astype(jnp.int32)
-    evict_out[...] = ((owner >= 0)
-                      & (rate > limit + EPSF)).astype(jnp.int32)
+    live_m = P > NEG / 2
+    excl = has_owner[None] & (T == owner[None])
+    Pex = jnp.where(excl, NEG, P)
+    all_owned = has_owner & live_m[0] & jnp.all(~live_m | excl, axis=0)
+    E = jnp.concatenate(
+        [Pex, jnp.where(all_owned, fp, NEG)[None]], axis=0)
+    ES = jnp.concatenate([S, fs[None]], axis=0)     # (k+1, block)
+    EL = jnp.concatenate([L, fl2[None]], axis=0)
+    top_p = jnp.max(E, axis=0)
+    rate = jnp.maximum(floor, jnp.maximum(top_p, 0.0))
+    live_e = E > NEG / 2
+    hit = live_e & (E >= top_p[None])
+    first = hit & (jnp.cumsum(hit.astype(jnp.int32), axis=0) == 1)
+    best_level = jnp.max(jnp.where(first, EL, -1), axis=0)
+    rate_ref[...] = rate[None]
+    lvl_ref[...] = jnp.where(top_p > NEG / 2, best_level, -1)[None]
+    cand = jnp.where(live_e & (E >= floor[None] - EPSF), ES, -1)
+    slate_ref[...] = jnp.concatenate(
+        [cand, jnp.full((rs - k - 1, block), -1, jnp.int32)], axis=0)
+    trunc_ref[...] = (live_m[k - 1]
+                      & (P[k - 1] >= floor - EPSF)).astype(jnp.int32)[None]
+    evict_ref[...] = (has_owner
+                      & (rate > limit + EPSF)).astype(jnp.int32)[None]
 
 
-def clear_pallas(level_pk: Sequence[jax.Array],
-                 level_tk: Sequence[jax.Array],
-                 level_sk: Sequence[jax.Array],
-                 level_qk: Sequence[jax.Array],
-                 level_p2: Sequence[jax.Array],
-                 level_s2: Sequence[jax.Array],
-                 level_q2: Sequence[jax.Array],
+def clear_pallas(pk: jax.Array, tk: jax.Array, sk: jax.Array,
+                 qk: jax.Array, p2: jax.Array, t2: jax.Array,
+                 s2: jax.Array, q2: jax.Array,
                  level_floor: Sequence[jax.Array],
-                 strides: Sequence[int], owner: jax.Array,
-                 limit: jax.Array,
+                 level_off: Sequence[int], strides: Sequence[int],
+                 owner: jax.Array, limit: jax.Array, *,
                  block: int = 512, interpret: bool = True
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                             jax.Array]:
+    """Sorted-slab hierarchical path-merge clearing pass.
+
+    pk/tk/sk/qk: segment-major (n_seg, k) ranked aggregates and
+    p2/t2/s2/q2: (n_seg,) distinct-second-tenant fall-backs, both from
+    ``ref._prefix_aggregates`` over the global segment index (the SAME
+    producer the jnp path consumes); ``level_floor[d]``:
+    (nodes_at(d),) operator floors; ``level_off[d]``: global segment id
+    of node 0 at level d.  Returns the normalized leaf-major contract
+    (rate, best_level, cand_slots (n_leaves, k+1), truncated, evict) —
+    bit-identical to ``ref.clear_sorted``.
+    """
     n_leaves = owner.shape[0]
-    k = level_pk[0].shape[0]
-    block = min(block, n_leaves)    # tiny trees: one block over all leaves
-    assert n_leaves % block == 0, (n_leaves, block)
-    grid = (n_leaves // block,)
-    leaf_spec = pl.BlockSpec((block,), lambda i: (i,))
+    k = pk.shape[1]
+    b = _pick_block(n_leaves, strides, block)
+    n_pad = _round_up(n_leaves, b)
+    grid = (n_pad // b,)
+    ws = tuple(max(b // s, 1) for s in strides)
+    rf = _round_up(k + 2, 8)        # pk rows + p2 + floor, sublanes
+    ri = _round_up(3 * k + 3, 8)    # tk/sk/qk rows + t2/s2/q2
+    rs = _round_up(k + 1, 8)        # slate rows
+    leaf_spec = pl.BlockSpec((1, b), lambda i: (0, i))
     in_specs = [leaf_spec, leaf_spec]
-    args = [owner, limit]
+    args = [jnp.pad(owner, (0, n_pad - n_leaves),
+                    constant_values=-1)[None, :],
+            jnp.pad(limit, (0, n_pad - n_leaves))[None, :]]
     for d, s in enumerate(strides):
-        w = max(block // s, 1)          # nodes visible to one leaf block
-        # leaf block i starts at node (i*block)//s, i.e. node-block
-        # (i*block)//s//w — for s <= block this reduces to (i,)
-        spec1 = pl.BlockSpec(
-            (w,), lambda i, s=s, w=w: (i * block // s // w,))
-        spec2 = pl.BlockSpec(
-            (k, w), lambda i, s=s, w=w: (0, i * block // s // w))
-        for arr in (level_pk[d], level_tk[d], level_sk[d], level_qk[d],
-                    level_p2[d], level_s2[d], level_q2[d],
-                    level_floor[d]):
-            pad = (-arr.shape[-1]) % w
-            fillv = NEG if arr.dtype == jnp.float32 else -1
-            if arr.ndim == 2:
-                if pad:
-                    arr = jnp.pad(arr, ((0, 0), (0, pad)),
-                                  constant_values=fillv)
-                in_specs.append(spec2)
-            else:
-                if pad:
-                    arr = jnp.pad(arr, (0, pad), constant_values=fillv)
-                in_specs.append(spec1)
-            args.append(arr)
-    out_shape = (jax.ShapeDtypeStruct((n_leaves,), jnp.float32),
-                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
-                 jax.ShapeDtypeStruct((k, n_leaves), jnp.int32),
-                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32),
-                 jax.ShapeDtypeStruct((n_leaves,), jnp.int32))
-    slate_spec = pl.BlockSpec((k, block), lambda i: (0, i))
-    out_specs = (leaf_spec, leaf_spec, slate_spec, leaf_spec, leaf_spec)
-    kern = functools.partial(_clear_kernel, strides=tuple(strides),
-                             block=block, k=k)
-    return pl.pallas_call(kern, grid=grid, in_specs=in_specs,
-                          out_specs=out_specs, out_shape=out_shape,
-                          interpret=interpret)(*args)
+        w = ws[d]
+        nd = -(-n_leaves // s)
+        a0 = level_off[d]
+        # lanes: enough nodes for the last block's window, 128-padded
+        lanes = _round_up(((n_pad - b) // s // w) * w + w, 128)
+
+        def padn(arr, fill, lanes=lanes, nd=nd):
+            return jnp.pad(arr, ((0, 0), (0, lanes - nd)),
+                           constant_values=fill)
+
+        def pad1(arr, fill, lanes=lanes, nd=nd):
+            return jnp.pad(arr, (0, lanes - nd), constant_values=fill)
+
+        F = jnp.concatenate([
+            padn(pk[a0:a0 + nd].T, NEG),
+            pad1(p2[a0:a0 + nd], NEG)[None],
+            pad1(level_floor[d].astype(jnp.float32), 0.0)[None],
+            jnp.full((rf - k - 2, lanes), NEG, jnp.float32)], axis=0)
+        I = jnp.concatenate([
+            padn(tk[a0:a0 + nd].T, -1),
+            padn(sk[a0:a0 + nd].T, -1),
+            padn(qk[a0:a0 + nd].T, -1),
+            pad1(t2[a0:a0 + nd], -1)[None],
+            pad1(s2[a0:a0 + nd], -1)[None],
+            pad1(q2[a0:a0 + nd], -1)[None],
+            jnp.full((ri - 3 * k - 3, lanes), -1, jnp.int32)], axis=0)
+        in_specs.append(pl.BlockSpec(
+            (rf, w), lambda i, s=s, w=w: (0, i * b // s // w)))
+        in_specs.append(pl.BlockSpec(
+            (ri, w), lambda i, s=s, w=w: (0, i * b // s // w)))
+        args.extend((F, I))
+    out_shape = (jax.ShapeDtypeStruct((1, n_pad), jnp.float32),
+                 jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+                 jax.ShapeDtypeStruct((rs, n_pad), jnp.int32),
+                 jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+                 jax.ShapeDtypeStruct((1, n_pad), jnp.int32))
+    out_specs = (leaf_spec, leaf_spec,
+                 pl.BlockSpec((rs, b), lambda i: (0, i)),
+                 leaf_spec, leaf_spec)
+    kern = functools.partial(_clear_kernel, ws=ws, block=b, k=k, rs=rs)
+    rate, lvl, slate, trunc, evict = pl.pallas_call(
+        kern, grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret)(*args)
+    return (rate[0, :n_leaves], lvl[0, :n_leaves],
+            slate[:k + 1, :n_leaves].T, trunc[0, :n_leaves],
+            evict[0, :n_leaves])

@@ -1,40 +1,45 @@
 """Jitted wrapper: hierarchical clearing via the Pallas kernel (TPU) or
 the pure-jnp oracle (CPU / differentiability).
 
-Both paths take the per-level ranked owner-exclusion aggregates from the
-sort-once segmented book (``ref.sorted_segment_aggregates``): top-K
-(price, tenant, slot, seq) lists plus the distinct-second-tenant
-fall-back (p2, s2, q2) — and the per-leaf owner/limit arrays, and return
-``(rate, best_level, cand_slots, truncated, evict)`` where
-``cand_slots`` is the (K, n_leaves) ranked candidate slate ordered by
-(price desc, seq asc) — see ref.clear_ref.
+Both backends consume the SAME sorted-book view (``state["order"] /
+["sorted_gseg"] / ["seg_start"]`` plus the current bid-table columns)
+through ONE aggregate producer — ``ref._prefix_aggregates``'s
+segment-major (n_seg, k) ranked slabs + distinct-second-tenant
+fall-backs — and run the hierarchical 2-way path merge down the tree
+(``ref.clear_sorted_from_aggs`` in jnp; ``kernel.clear_pallas`` per
+VMEM leaf block).  The normalized contract (docs/DESIGN.md §3), from
+both backends, is::
+
+    (rate, best_level, cand_slots, truncated, evict)
+
+with ``cand_slots`` LEAF-MAJOR (n_leaves, k+1), ranked (price desc,
+seq asc) along the last axis with -1 holes at excluded/sub-floor ranks
+— no transposes or backend special-casing for callers.
 """
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.market_clear import ref as R
 from repro.kernels.market_clear.kernel import clear_pallas
 
 
-@functools.partial(jax.jit, static_argnames=("strides", "use_pallas",
-                                             "interpret", "block"))
-def clear(level_pk, level_tk, level_sk, level_qk, level_p2, level_s2,
-          level_q2, level_floor, strides: Tuple[int, ...], owner, limit,
-          *, use_pallas: bool = False, interpret: bool = True,
+@functools.partial(jax.jit, static_argnames=(
+    "level_off", "strides", "k", "use_pallas", "interpret", "block"))
+def clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
+          level_floor, level_off: Tuple[int, ...],
+          strides: Tuple[int, ...], owner, limit, k: int, *,
+          use_pallas: bool = False, interpret: bool = True,
           block: int = 512):
+    n_seg = seg_start.shape[0] - 1
+    aggs = R._prefix_aggregates(order, sorted_gseg, seg_start, prices,
+                                tenants, seqs, n_seg, k)
     if use_pallas:
-        return clear_pallas(list(level_pk), list(level_tk),
-                            list(level_sk), list(level_qk),
-                            list(level_p2), list(level_s2),
-                            list(level_q2), list(level_floor), strides,
-                            owner, limit, block=block,
+        return clear_pallas(*aggs, tuple(level_floor), level_off,
+                            strides, owner, limit, block=block,
                             interpret=interpret)
-    return R.clear_ref(list(level_pk), list(level_tk), list(level_sk),
-                       list(level_qk), list(level_p2), list(level_s2),
-                       list(level_q2), list(level_floor), strides,
-                       owner, limit)
+    return R.clear_sorted_from_aggs(aggs, tuple(level_floor), level_off,
+                                    strides, owner, limit, k)

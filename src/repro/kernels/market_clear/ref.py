@@ -9,21 +9,22 @@ The sort runs ONCE per market epoch (``sort_book``); cascade waves only
 entry, so per-wave maintenance is a liveness cumsum — no re-sort, no
 per-segment reduction sweeps.  Ranked per-segment aggregates then fall
 out of contiguous-prefix gathers from the segment start offsets
-(``sorted_segment_aggregates``) instead of K sequential scatter-max
-sweeps over the full capacity-sized table per level (the pre-PR-3 hot
-spot that made K=8 waves *slower* than K=1 waves).
+(``_prefix_aggregates``) instead of K sequential scatter-max sweeps
+over the full capacity-sized table per level (the pre-PR-3 hot spot
+that made K=8 waves *slower* than K=1 waves).
 
-Given those per-level aggregates and the regular topology, ``clear_ref``
-computes for every leaf:
+Given those per-level aggregates and the regular topology,
+``clear_sorted`` computes for every leaf:
 
   rate       = max(path floor, best covering bid price, owner-excluded)
   cand_slots = ranked bid-table slots of the top-K owner-excluded covering
-               bids meeting the leaf's path floor (price desc, seq asc;
-               -1 padded) — the leaf's ordered candidate slate.  Entry 0
-               is the classic ``winner_slot``; entries 1..K-1 are the
-               fall-through runners-up the engine's in-wave top-K claim
-               resolution consumes when a better-ranked leaf takes the
-               same order.
+               bids meeting the leaf's path floor (price desc, seq asc) —
+               the leaf's ordered candidate slate, LEAF-MAJOR
+               (n_leaves, K+1) with -1 HOLES at excluded or sub-floor
+               ranks.  The first live entry is the classic
+               ``winner_slot``; later entries are the fall-through
+               runners-up the engine's in-wave top-K claim resolution
+               consumes when a better-ranked leaf takes the same order.
   truncated  = 1 where the slate may be INCOMPLETE (the book holds more
                eligible orders below the K-th entry).  The engine must
                stop in-wave fall-through for a leaf that exhausts a
@@ -48,10 +49,15 @@ Tie-breaks mirror the event-driven engine exactly: price desc, then
 ``BatchEngine.place``.  (Pre-PR-3 the tie-break was bid-table slot
 order, which diverges from arrival order once the ring allocator laps
 the table and reuses freed holes.)
+
+The Pallas kernel (``kernel.clear_pallas``) consumes the SAME
+``_prefix_aggregates`` slabs and runs the same hierarchical path merge
+per leaf block in VMEM — docs/DESIGN.md §3 specifies the shared
+contract; the two backends are bit-identical.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -66,8 +72,8 @@ def sort_book(gseg: jax.Array, prices: jax.Array, seqs: jax.Array
     """One lexsort of the bid table by ``(segment, price desc, seq asc)``.
 
     gseg: (cap,) int32 global segment id of each slot; DEAD slots must
-      carry a sentinel id larger than every live segment so they sink to
-      the tail.  prices: (cap,) f32; seqs: (cap,) int32 arrival stamps.
+    carry a sentinel id larger than every live segment so they sink to
+    the tail.  prices: (cap,) f32; seqs: (cap,) int32 arrival stamps.
     Returns (order, sorted_gseg): ``order`` is the slot permutation and
     ``sorted_gseg`` the (non-decreasing) segment key at each sorted
     position.  Segment start offsets are ``jnp.searchsorted(sorted_gseg,
@@ -87,7 +93,19 @@ def sorted_segment_aggregates(order: jax.Array, sorted_gseg: jax.Array,
                               ) -> Tuple[jax.Array, jax.Array, jax.Array,
                                          jax.Array, jax.Array, jax.Array,
                                          jax.Array]:
-    """Ranked per-segment aggregates as contiguous-prefix gathers.
+    """Level-major compatibility wrapper over ``_prefix_aggregates``:
+    returns (pk, tk, sk, qk, p2, s2, q2) with (k, n_seg) ranked lists —
+    see ``_prefix_aggregates`` for the contract and cost."""
+    pk, tk, sk, qk, p2, _, s2, q2 = _prefix_aggregates(
+        order, sorted_gseg, seg_start, prices, tenants, seqs, n_seg, k)
+    return pk.T, tk.T, sk.T, qk.T, p2, s2, q2
+
+
+def _prefix_aggregates(order, sorted_gseg, seg_start, prices, tenants,
+                       seqs, n_seg: int, k: int):
+    """Ranked per-segment aggregates as contiguous-prefix gathers — THE
+    aggregate producer shared by both clearing backends (jnp
+    ``clear_sorted`` and the Pallas sorted-slab kernel).
 
     ``(order, sorted_gseg, seg_start)`` is a sorted book view from
     ``sort_book``.  The view may be STALE with respect to *liveness*:
@@ -98,29 +116,17 @@ def sorted_segment_aggregates(order: jax.Array, sorted_gseg: jax.Array,
     between sorts only KILL entries, never move or re-price them).
 
     prices/tenants/seqs: (cap,) CURRENT bid-table columns (NEG/-1 dead).
-    Returns (pk, tk, sk, qk, p2, s2, q2):
-      pk/tk/sk/qk — (k, n_seg) ranked price/tenant/slot/seq lists,
-        price desc then seq asc (NEG/-1 padded past the live book);
-      p2/s2/q2 — (n_seg,) best price/slot/seq among live entries whose
-        tenant differs from tk[0] (the exact owner-exclusion fall-back).
+    Returns SEGMENT-MAJOR (n_seg, k) ranked slabs (pk, tk, sk, qk) —
+    price desc then seq asc, NEG/-1 padded past the live book — plus the
+    (n_seg,) fall-back (p2, t2, s2, q2): the best live entry from a
+    tenant other than tk[:, 0] (the exact owner-exclusion fall-back),
+    INCLUDING its tenant, which the hierarchical path merge needs.
 
     Cost: O(cap) gathers + one cumsum + exactly two scatters (the
     prefix-position scatter and the fall-back position min-scatter) —
     independent of k and of the number of levels, vs the pre-PR-3
     k-sweep costing ~2k scatters per level per wave.
     """
-    pk, tk, sk, qk, p2, _, s2, q2 = _prefix_aggregates(
-        order, sorted_gseg, seg_start, prices, tenants, seqs, n_seg, k)
-    return pk.T, tk.T, sk.T, qk.T, p2, s2, q2
-
-
-def _prefix_aggregates(order, sorted_gseg, seg_start, prices, tenants,
-                       seqs, n_seg: int, k: int):
-    """Shared core of the sorted-view aggregate computation (see
-    ``sorted_segment_aggregates`` for the contract): returns
-    SEGMENT-MAJOR (n_seg, k) ranked slabs (pk, tk, sk, qk) plus the
-    fall-back (p2, t2, s2, q2) — including the fall-back's TENANT,
-    which the hierarchical path merge needs."""
     cap = order.shape[0]
     pos = jnp.arange(cap, dtype=jnp.int32)
     p_s = prices[order]
@@ -162,9 +168,9 @@ def _prefix_aggregates(order, sorted_gseg, seg_start, prices, tenants,
 
 def _topk_select(W, Q, payloads, k: int):
     """K-pass top-k selection by (price desc, seq asc) over the LAST
-    axis — the shared merge primitive of ``clear_ref`` and the
-    hierarchical path merge (the Pallas kernel keeps its own axis-0
-    copy; see the ROADMAP TPU item).
+    axis — the shared merge primitive of the hierarchical path merge
+    (the Pallas kernel keeps a sublane-axis copy of the same selection;
+    see kernel._merge2_rows).
 
     Deliberately an UNROLLED python loop: XLA fuses the passes into one
     pipeline, where the same body under lax.scan pays per-iteration
@@ -195,12 +201,15 @@ def _topk_select(W, Q, payloads, k: int):
     return outs
 
 
-def _merge2(A, a2, B, b2, k: int):
+def _merge2(A, a2, B, b2, k):
     """Merge two ranked path aggregates (the 2-way step of the
     hierarchical path merge).
 
-    A/B: (P, T, S, Q) tuples of (nodes, k) ranked lists, price desc /
-    seq asc; a2/b2: (p2, t2, s2, q2) distinct-second-tenant fall-backs
+    A/B: (P, T, S, Q, L) tuples of (nodes, k) ranked lists, price desc /
+    seq asc, where L is each entry's ORIGINATING LEVEL (carried through
+    the merge so the clearing pass reports best_level without a
+    bid-table gather — the Pallas kernel has no access to the table);
+    a2/b2: (p2, t2, s2, q2, l2) distinct-second-tenant fall-backs
     covering each side's FULL books.  Returns the merged ranked top-k
     plus the merged fall-back, with the invariants preserved:
 
@@ -213,56 +222,71 @@ def _merge2(A, a2, B, b2, k: int):
         its top tenant IS the merged top tenant, else its head (its
         global best, which then has a different tenant).
     """
-    Pa, Ta, Sa, Qa = A
-    Pb, Tb, Sb, Qb = B
+    Pa, Ta, Sa, Qa, La = A
+    Pb, Tb, Sb, Qb, Lb = B
     W = jnp.concatenate([Pa, Pb], axis=-1)        # (nodes, 2k)
     T = jnp.concatenate([Ta, Tb], axis=-1)
     S = jnp.concatenate([Sa, Sb], axis=-1)
     Q = jnp.concatenate([Qa, Qb], axis=-1)
-    sel = _topk_select(W, Q, (T, S), k)
+    L = jnp.concatenate([La, Lb], axis=-1)
+    sel = _topk_select(W, Q, (T, S, L), k)
     mP = jnp.stack([o[0] for o in sel], axis=-1)
     mQ = jnp.stack([o[1] for o in sel], axis=-1)
     mT = jnp.stack([o[2][0] for o in sel], axis=-1)
     mS = jnp.stack([o[2][1] for o in sel], axis=-1)
+    mL = jnp.stack([o[2][2] for o in sel], axis=-1)
     t0 = mT[:, 0]
-    pa2, ta2, sa2, qa2 = a2
-    pb2, tb2, sb2, qb2 = b2
     a_top_is = Ta[:, 0] == t0
-    cA = (jnp.where(a_top_is, pa2, Pa[:, 0]),
-          jnp.where(a_top_is, ta2, Ta[:, 0]),
-          jnp.where(a_top_is, sa2, Sa[:, 0]),
-          jnp.where(a_top_is, qa2, Qa[:, 0]))
+    cA = tuple(jnp.where(a_top_is, x2, x[:, 0])
+               for x2, x in zip(a2, (Pa, Ta, Sa, Qa, La)))
     b_top_is = Tb[:, 0] == t0
-    cB = (jnp.where(b_top_is, pb2, Pb[:, 0]),
-          jnp.where(b_top_is, tb2, Tb[:, 0]),
-          jnp.where(b_top_is, sb2, Sb[:, 0]),
-          jnp.where(b_top_is, qb2, Qb[:, 0]))
+    cB = tuple(jnp.where(b_top_is, x2, x[:, 0])
+               for x2, x in zip(b2, (Pb, Tb, Sb, Qb, Lb)))
     a_wins = (cA[0] > cB[0]) | ((cA[0] == cB[0]) & (cA[3] < cB[3]))
     m2 = tuple(jnp.where(a_wins, xa, xb) for xa, xb in zip(cA, cB))
-    return (mP, mT, mS, mQ), m2
+    return (mP, mT, mS, mQ, mL), m2
 
 
 def clear_sorted(order: jax.Array, sorted_gseg: jax.Array,
                  seg_start: jax.Array, prices: jax.Array,
                  tenants: jax.Array, seqs: jax.Array,
-                 levels_tab: jax.Array,
                  level_floor: Sequence[jax.Array],
                  level_off: Sequence[int], strides: Sequence[int],
                  owner: jax.Array, limit: jax.Array, k: int
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                             jax.Array]:
     """Fused sorted-view clearing pass (the engine's jnp hot path):
-    per-segment prefix-gather aggregates + a HIERARCHICAL PATH MERGE.
+    per-segment prefix-gather aggregates + the hierarchical path merge.
 
-    Instead of stacking every ancestor level's ranked list into one
-    n_levels*(K+1)-wide per-leaf candidate matrix (O(levels*K^2) work
-    per leaf per wave — the flat formulation ``clear_ref`` uses and the
-    Pallas kernel keeps), the ranked aggregates are merged pairwise DOWN
-    the tree: path(root) = agg(root); path(d) = merge2(path(d+1) at the
-    parent, agg(d)).  Each merge runs at that level's node granularity,
-    so the per-leaf merge is a single 2k-wide pass and the upper-level
-    merges amortize across the leaves under each node (sum of nodes ~
-    1.2 * n_leaves).
+    ``level_off[d]`` is the global segment id of node 0 at level d.
+    Returns (rate, best_level, cand_slots, truncated, evict) — the
+    normalized contract of ``ops.clear``; see ``clear_sorted_from_aggs``.
+    """
+    n_seg = int(seg_start.shape[0]) - 1
+    aggs = _prefix_aggregates(order, sorted_gseg, seg_start, prices,
+                              tenants, seqs, n_seg, k)
+    return clear_sorted_from_aggs(aggs, level_floor, level_off, strides,
+                                  owner, limit, k)
+
+
+def clear_sorted_from_aggs(aggs, level_floor: Sequence[jax.Array],
+                           level_off: Sequence[int],
+                           strides: Sequence[int], owner: jax.Array,
+                           limit: jax.Array, k: int
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array,
+                                      jax.Array, jax.Array]:
+    """HIERARCHICAL PATH MERGE over precomputed sorted-slab aggregates.
+
+    ``aggs`` is the 8-tuple from ``_prefix_aggregates`` (segment-major
+    slabs over the global segment index).  Instead of stacking every
+    ancestor level's ranked list into one n_levels*(K+1)-wide per-leaf
+    candidate matrix (O(levels*K^2) work per leaf per wave — the flat
+    formulation pre-PR-4), the ranked aggregates are merged pairwise
+    DOWN the tree: path(root) = agg(root); path(d) = merge2(path(d+1)
+    at the parent, agg(d)).  Each merge runs at that level's node
+    granularity, so the per-leaf merge is a single 2k-wide pass and the
+    upper-level merges amortize across the leaves under each node (sum
+    of nodes ~ 1.2 * n_leaves).
 
     The merged path list also collapses the prefix-safety machinery: a
     slate drawn from the single globally-ranked path list is prefix-
@@ -278,47 +302,44 @@ def clear_sorted(order: jax.Array, sorted_gseg: jax.Array,
     -1 HOLES — rank order is preserved along the last axis, consumers
     skip holes (``BatchEngine._cascade`` does; an empty slate is
     ``~any(cand_slots >= 0, axis=-1)``, NOT ``cand_slots[:, 0] < 0``).
-    (The flat ``clear_ref``/Pallas path returns the transposed
-    (K, n_leaves) compacted form; ``BatchEngine`` normalizes.)
+    The Pallas kernel emits the identical layout (docs/DESIGN.md §3).
 
-    ``levels_tab`` is the bid table's level column (for best_level);
-    ``level_off[d]`` the global segment id of node 0 at level d.
     Returns (rate, best_level, cand_slots, truncated, evict).
     """
-    cap = order.shape[0]
-    n_seg = int(seg_start.shape[0]) - 1
+    pk, tk, sk, qk, p2, t2, s2, q2 = aggs
     n_lvl = len(strides)
     n_leaves = owner.shape[0]
-    # segment-major (n_seg, k) slabs so the per-node gathers below pull
-    # contiguous rows
-    pk, tk, sk, qk, p2, t2, s2, q2 = _prefix_aggregates(
-        order, sorted_gseg, seg_start, prices, tenants, seqs, n_seg, k)
 
-    # ---- hierarchical path merge, root -> leaf ----
     def nodes_at(d):
         return -(-n_leaves // strides[d])
 
     def lvl_slice(arr, d):
         return arr[level_off[d]:level_off[d] + nodes_at(d)]
 
+    def ranked(d):
+        P, T, S, Q = (lvl_slice(a, d) for a in (pk, tk, sk, qk))
+        return (P, T, S, Q, jnp.where(P > NEG / 2, jnp.int32(d), -1))
+
+    def fallback(d):
+        p, t, s, q = (lvl_slice(a, d) for a in (p2, t2, s2, q2))
+        return (p, t, s, q, jnp.where(p > NEG / 2, jnp.int32(d), -1))
+
+    # ---- hierarchical path merge, root -> leaf ----
     top = n_lvl - 1
-    path = tuple(lvl_slice(a, top) for a in (pk, tk, sk, qk))
-    path2 = tuple(lvl_slice(a, top) for a in (p2, t2, s2, q2))
+    path, path2 = ranked(top), fallback(top)
     for d in range(n_lvl - 2, -1, -1):
         nd = nodes_at(d)
         parent = (jnp.arange(nd, dtype=jnp.int32) * strides[d]) \
             // strides[d + 1]
         A = tuple(x[parent] for x in path)
         a2 = tuple(x[parent] for x in path2)
-        B = tuple(lvl_slice(a, d) for a in (pk, tk, sk, qk))
-        b2 = tuple(lvl_slice(a, d) for a in (p2, t2, s2, q2))
-        path, path2 = _merge2(A, a2, B, b2, k)
+        path, path2 = _merge2(A, a2, ranked(d), fallback(d), k)
 
     # ---- leaf stage: floor combine, owner exclusion, slate ----
     leaf = jnp.arange(n_leaves)
     il = leaf // strides[0]
-    P, T, S, Q = (x[il] for x in path)             # (n_leaves, k)
-    fp, ft, fs, fq = (x[il] for x in path2)
+    P, T, S, Q, L = (x[il] for x in path)           # (n_leaves, k)
+    fp, ft, fs, fq, fl2 = (x[il] for x in path2)
     floor = jnp.zeros((n_leaves,), jnp.float32)
     for d, s in enumerate(strides):
         floor = jnp.maximum(floor, level_floor[d][leaf // s])
@@ -334,13 +355,13 @@ def clear_sorted(order: jax.Array, sorted_gseg: jax.Array,
     E = jnp.concatenate(
         [Pex, jnp.where(all_owned, fp, NEG)[:, None]], axis=-1)
     ES = jnp.concatenate([S, fs[:, None]], axis=-1)
+    EL = jnp.concatenate([L, fl2[:, None]], axis=-1)
     top_p = jnp.max(E, axis=-1)
     rate = jnp.maximum(floor, jnp.maximum(top_p, 0.0))
     col0 = jnp.argmax((E >= top_p[:, None]) & (E > NEG / 2), axis=-1)
-    sel0 = jnp.take_along_axis(ES, col0[:, None], axis=-1)[:, 0]
     best_level = jnp.where(
         top_p > NEG / 2,
-        levels_tab[jnp.clip(sel0, 0, cap - 1)], -1)
+        jnp.take_along_axis(EL, col0[:, None], axis=-1)[:, 0], -1)
     cand_slots = jnp.where(
         (E > NEG / 2) & (E >= floor[:, None] - EPSF), ES, -1)
     full = live_m[:, k - 1]
@@ -388,148 +409,3 @@ def segment_top2(prices: jax.Array, seg: jax.Array, owners: jax.Array,
     pk, tk, _, _, p2, _, _ = segment_aggregates(prices, seg, owners,
                                                 n_seg, k=1)
     return pk[0], tk[0], p2
-
-
-def _leaf_candidates(level_pk: Sequence[jax.Array],
-                     level_tk: Sequence[jax.Array],
-                     level_sk: Sequence[jax.Array],
-                     level_qk: Sequence[jax.Array],
-                     level_p2: Sequence[jax.Array],
-                     level_s2: Sequence[jax.Array],
-                     level_q2: Sequence[jax.Array],
-                     level_floor: Sequence[jax.Array],
-                     strides: Sequence[int], owner: jax.Array
-                     ) -> Tuple[jax.Array, jax.Array, jax.Array,
-                                jax.Array, jax.Array, jax.Array,
-                                jax.Array]:
-    """Gather the per-level ranked entries down each leaf's ancestor path.
-
-    Returns (P, S, Q, D, floor, bp, bq): candidate matrices of shape
-    (n_leaves, n_levels*(K+1)) — leaf-major so the merge's reductions
-    run over the small CONTIGUOUS last axis (XLA:CPU reduces strided
-    axis-0 columns ~2.5x slower) — price (owner-excluded entries masked
-    to NEG), slot, seq, and the (n_levels*(K+1),) level row-vector D —
-    plus the combined path floor and per-level
-    hidden-order bound pairs (n_levels, n_leaves): the K-th
-    pre-exclusion entry's (price, seq) where the level list is full
-    (NEG/-1 otherwise).  Orders NOT represented in the candidate matrix
-    rank strictly below their own level's bound pair (and below p2 in
-    the all-owned case, which that K-th entry also bounds), so an entry
-    that outranks every OTHER full level's bound — its own level's
-    hidden orders rank below it by construction — provably outranks
-    every hidden order.
-    """
-    n_leaves = owner.shape[0]
-    leaf = jnp.arange(n_leaves)
-    k = level_pk[0].shape[0]
-    has_owner = owner >= 0
-    floor = jnp.zeros((n_leaves,), jnp.float32)
-    rows_p: List[jax.Array] = []
-    rows_s: List[jax.Array] = []
-    rows_q: List[jax.Array] = []
-    bps: List[jax.Array] = []
-    bqs: List[jax.Array] = []
-    for d, s in enumerate(strides):
-        idx = leaf // s
-        pk = level_pk[d][:, idx]          # (k, n_leaves)
-        tk = level_tk[d][:, idx]
-        sk = level_sk[d][:, idx]
-        qk = level_qk[d][:, idx]
-        floor = jnp.maximum(floor, level_floor[d][idx])
-        live_k = pk > NEG / 2
-        excl = has_owner[None] & (tk == owner[None])
-        rows_p.extend(jnp.where(excl[i], NEG, pk[i]) for i in range(k))
-        rows_s.extend(sk[i] for i in range(k))
-        rows_q.extend(qk[i] for i in range(k))
-        # exact exclusion fall-back: the owner monopolizes every live
-        # ranked entry, so the true owner-excluded best is (p2, s2, q2)
-        all_owned = has_owner & live_k[0] \
-            & jnp.all(~live_k | excl, axis=0)
-        p2 = level_p2[d][idx]
-        s2 = level_s2[d][idx]
-        q2 = level_q2[d][idx]
-        rows_p.append(jnp.where(all_owned, p2, NEG))
-        rows_s.append(s2)
-        rows_q.append(q2)
-        # a full ranked list may hide further ELIGIBLE orders: they rank
-        # below the K-th pre-exclusion entry — or below (p2, q2) when
-        # the owner monopolizes the list (hidden non-owner bids all rank
-        # below the best one)
-        full = live_k[k - 1]
-        bps.append(jnp.where(full & all_owned, p2,
-                             jnp.where(full, pk[k - 1], NEG)))
-        bqs.append(jnp.where(full & all_owned, q2,
-                             jnp.where(full, qk[k - 1], -1)))
-    D = jnp.repeat(jnp.arange(len(strides), dtype=jnp.int32), k + 1)
-    return (jnp.stack(rows_p, axis=-1), jnp.stack(rows_s, axis=-1),
-            jnp.stack(rows_q, axis=-1), D, floor, jnp.stack(bps),
-            jnp.stack(bqs))
-
-
-def clear_ref(level_pk: Sequence[jax.Array],
-              level_tk: Sequence[jax.Array],
-              level_sk: Sequence[jax.Array],
-              level_qk: Sequence[jax.Array],
-              level_p2: Sequence[jax.Array],
-              level_s2: Sequence[jax.Array],
-              level_q2: Sequence[jax.Array],
-              level_floor: Sequence[jax.Array],
-              strides: Sequence[int],
-              owner: jax.Array,
-              limit: jax.Array
-              ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                         jax.Array]:
-    """Combine per-level ranked aggregates down each leaf's ancestor path.
-
-    Level d arrays have one entry per node at that level; leaf i's ancestor
-    at level d is i // strides[d] (regular tree). ``owner``: (n_leaves,)
-    int32 current owner of each leaf (-1 = operator/idle); ``limit``:
-    (n_leaves,) f32 retention limit of the current owner.
-
-    Returns (rate, best_level, cand_slots, truncated, evict) — see the
-    module docstring.  ``cand_slots`` is (K, n_leaves) with K =
-    level_pk[0].shape[0]; entry 0 is the classic single winner_slot.
-    """
-    K = level_pk[0].shape[0]
-    P, S, Q, D, floor, bp, bq = _leaf_candidates(
-        level_pk, level_tk, level_sk, level_qk, level_p2, level_s2,
-        level_q2, level_floor, strides, owner)
-    elig_count = jnp.sum((P > NEG / 2) & (P >= floor[:, None] - EPSF),
-                         axis=-1)
-
-    # top-K merge by (price desc, seq asc) over the leaf-major
-    # candidate matrix, so every reduction runs down the small
-    # CONTIGUOUS last axis — see _topk_select for the selection
-    # mechanics and the unroll/sort tradeoff
-    sel = _topk_select(P, Q, (S, D[None, :]), K)
-    sel_p = jnp.stack([o[0] for o in sel])
-    sel_q = jnp.stack([o[1] for o in sel])
-    sel_s = jnp.stack([o[2][0] for o in sel])
-    sel_d = jnp.stack([o[2][1] for o in sel])
-
-    rate = jnp.maximum(floor, jnp.maximum(sel_p[0], 0.0))
-    best_level = jnp.where(sel_p[0] > NEG / 2, sel_d[0], -1)
-    # the slate is only prefix-exact down to the hidden-order bounds: a
-    # selected entry is trusted iff it outranks (price desc, seq asc)
-    # every OTHER full level's K-th pre-exclusion entry — its own
-    # level's hidden orders rank below it by construction.  Entries at
-    # or below a foreign bound could be outranked by that level's
-    # hidden orders, so the slate is cut there (the engine falls back
-    # to a full re-clear via the truncation flag).
-    n_lvl = bp.shape[0]
-    safe = jnp.ones(sel_p.shape, jnp.bool_)
-    for d in range(n_lvl):
-        outranks = (sel_p > bp[d][None]) | \
-            ((sel_p == bp[d][None]) & (sel_q < bq[d][None]))
-        safe = safe & ((bp[d][None] < NEG / 2) | (sel_d == d) | outranks)
-    prefix_safe = jnp.cumsum((~safe).astype(jnp.int32), axis=0) == 0
-    cand_slots = jnp.where((sel_s >= 0) & prefix_safe
-                           & (sel_p >= floor[None] - EPSF), sel_s, -1)
-    # the slate may be incomplete when more than K floor-eligible
-    # candidates were merged, or when some full level list can still
-    # hide floor-eligible orders below its K-th entry
-    bound = jnp.max(bp, axis=0)
-    truncated = ((elig_count > K) | (bound >= floor - EPSF)
-                 ).astype(jnp.int32)
-    evict = ((owner >= 0) & (rate > limit + EPSF)).astype(jnp.int32)
-    return rate, best_level, cand_slots, truncated, evict

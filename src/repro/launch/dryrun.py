@@ -167,7 +167,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         rec["status"] = "skipped"
         rec["reason"] = ("long-context decode requires sub-quadratic "
                         "attention; this arch is pure full-attention "
-                        "(see DESIGN.md §Arch-applicability)")
+                        "(see docs/DESIGN.md §Arch-applicability)")
         out_path.write_text(json.dumps(rec, indent=1))
         return rec
     try:

@@ -68,11 +68,13 @@ class BatchMarket:
     def __init__(self, topo: Topology,
                  controls: Optional[VolatilityControls] = None,
                  capacity: int = 1 << 12, n_tenants: int = 256,
-                 use_pallas: bool = False, k: int = 8) -> None:
+                 use_pallas: bool = False, interpret: bool = True,
+                 k: int = 8) -> None:
         self.topo = topo
         self.controls = controls or VolatilityControls()
         self.now = 0.0
         self.n_tenants = n_tenants
+        self.interpret = interpret
         self.k = k
         self.engines: Dict[str, BatchEngine] = {}
         self.states: Dict[str, dict] = {}
@@ -126,7 +128,8 @@ class BatchMarket:
                 self._node_map[nid] = (rtype, d, idx)
         eng = BatchEngine(tree, capacity=capacity, use_pallas=use_pallas,
                           n_tenants=self.n_tenants,
-                          controls=self.controls, k=self.k)
+                          controls=self.controls,
+                          interpret=self.interpret, k=self.k)
         self.engines[rtype] = eng
         self.states[rtype] = eng.init_state()
         self._np[rtype] = None

@@ -260,58 +260,30 @@ class BatchEngine:
         return state
 
     # ------------------------------------------------------------------
-    def _aggregates(self, state):
-        """Per-level ranked aggregates from the sorted book view: tuple
-        of 7 level-lists (pk, tk, sk, qk, p2, s2, q2) — pk/tk/sk/qk are
-        (k, nodes_at(d)) ranked (price, tenant, slot, seq) lists, the
-        rest the distinct-second-tenant fall-back.  One flat
-        prefix-gather over the global segment slab, sliced per level."""
-        pk, tk, sk, qk, p2, s2, q2 = R.sorted_segment_aggregates(
+    def _clear_arrays(self, state, interpret: Optional[bool] = None):
+        """Clearing pass (jnp oracle or Pallas kernel — ONE shared
+        aggregate producer over the sorted book view, see ops.clear).
+        Both backends return the normalized leaf-major (n_leaves, k+1)
+        slate with -1 holes at excluded/sub-floor ranks.
+
+        ``interpret=None`` inherits the constructor's ``self.interpret``
+        — a compiled-mode engine stays compiled through every clearing
+        entry point (clear/clear_topk/step)."""
+        return clear_ops.clear(
             state["order"], state["sorted_gseg"], state["seg_start"],
             state["price"], state["tenant"], state["seq"],
-            self.n_seg_total, self.k)
-        outs = tuple([] for _ in range(7))
-        for d in range(self.tree.n_levels):
-            a = self.level_off[d]
-            b = a + self.tree.nodes_at(d)
-            for o, arr in zip(outs, (pk[:, a:b], tk[:, a:b], sk[:, a:b],
-                                     qk[:, a:b], p2[a:b], s2[a:b],
-                                     q2[a:b])):
-                o.append(arr)
-        return outs
-
-    def _clear_from_aggs(self, state, aggs, interpret=None):
-        return clear_ops.clear(
-            *(tuple(a) for a in aggs), tuple(state["floor"]),
-            self.tree.strides, state["owner"], state["limit"],
+            tuple(state["floor"]), self.level_off, self.tree.strides,
+            state["owner"], state["limit"], self.k,
             use_pallas=self.use_pallas,
             interpret=self.interpret if interpret is None else interpret)
 
-    def _clear_arrays(self, state, interpret: Optional[bool] = None):
-        """Clearing pass with the slate in LEAF-MAJOR (n_leaves, K')
-        layout (K' = k+1 on the jnp path, with -1 holes at excluded or
-        sub-floor ranks; k on the Pallas path, compacted)."""
-        if self.use_pallas:
-            # the Pallas kernel consumes per-level contiguous slabs and
-            # emits the (K, n_leaves) compacted slate — normalize
-            rate, lvl, cands, trunc, evict = self._clear_from_aggs(
-                state, self._aggregates(state), interpret)
-            return rate, lvl, cands.T, trunc, evict
-        # jnp path: fused sorted-view clear with the hierarchical path
-        # merge (the flat per-level slab form costs O(levels*K^2) per
-        # leaf per wave; see ref.clear_sorted)
-        return R.clear_sorted(
-            state["order"], state["sorted_gseg"], state["seg_start"],
-            state["price"], state["tenant"], state["seq"],
-            state["level"], tuple(state["floor"]), self.level_off,
-            self.tree.strides, state["owner"], state["limit"], self.k)
-
     @functools.partial(jax.jit, static_argnums=(0, 2))
-    def clear(self, state, interpret: bool = True):
+    def clear(self, state, interpret: Optional[bool] = None):
         """Full clearing pass: per-leaf charged rate, winning level, and
         winning (owner-excluded, floor-gated) bid slot — the best live
         entry of the ranked candidate slate (use ``clear_topk`` for all
-        of it)."""
+        of it).  ``interpret=None`` (default) inherits the engine's
+        constructor setting."""
         rate, best_level, cands, _, _ = self._clear_arrays(
             state, interpret)
         first = jnp.argmax(cands >= 0, axis=-1)
@@ -319,10 +291,11 @@ class BatchEngine:
         return rate, best_level, winner
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
-    def clear_topk(self, state, interpret: bool = True):
+    def clear_topk(self, state, interpret: Optional[bool] = None):
         """Full clearing pass with the ranked (K', n_leaves) candidate
         slate (rank-ordered; -1 entries are padding or excluded holes)
-        and the slate-truncation flag."""
+        and the slate-truncation flag.  ``interpret=None`` (default)
+        inherits the engine's constructor setting."""
         rate, best_level, cands, trunc, _ = self._clear_arrays(
             state, interpret)
         return rate, best_level, cands.T, trunc

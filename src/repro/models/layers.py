@@ -220,7 +220,7 @@ def moe_ep(p: Dict[str, jax.Array], cfg: ArchConfig, x: jax.Array, *,
     Dispatch is sort-based with a static per-expert capacity; each ep-rank
     computes its local experts' contribution for all of its tokens, partial
     outputs are combined with a psum over the ep axis (the TPU-native
-    mapping of the paper's workloads' NCCL all-to-all; see DESIGN.md §3).
+    mapping of the paper's workloads' NCCL all-to-all; see docs/DESIGN.md §3).
     """
     E, k = cfg.num_experts, cfg.num_experts_per_tok
     ep_size = mesh.shape[ep_axis]

@@ -194,6 +194,13 @@ class LaissezCloud(CloudBase):
 # the paper's §5.5.1 scale path wired into the simulator end to end.
 # ---------------------------------------------------------------------------
 class LaissezBatchCloud(LaissezCloud):
+    # class-level backend toggles so scenario code can flip the whole
+    # fleet onto the Pallas clearing kernel (interpret on CPU; set
+    # interpret=False on real TPU hosts)
+    use_pallas = False
+    interpret = True
+
     def _make_market(self, topo: Topology, controls):
         from repro.market_jax.bridge import BatchMarket
-        return BatchMarket(topo, controls)
+        return BatchMarket(topo, controls, use_pallas=self.use_pallas,
+                           interpret=self.interpret)

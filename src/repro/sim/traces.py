@@ -2,7 +2,7 @@
 
 The paper drives tenants with Azure LLM-serving traces [32] and Google
 power traces; neither is redistributable offline, so we generate traces
-with the published statistical shape (see DESIGN.md §7):
+with the published statistical shape (see docs/DESIGN.md §7):
 
 * LLM request rate: diurnal sinusoid + log-normal bursts, 200 s windows.
 * Power rows: baseline + utilization-driven load with step events (the

@@ -19,10 +19,12 @@ from repro.market_jax.bridge import BatchMarket
 TENANTS = [f"t{i}" for i in range(5)]
 
 
-def replay(topo, controls, seed, n_events=220, check_every=1):
+def replay(topo, controls, seed, n_events=220, check_every=1,
+           use_pallas=False):
     rng = np.random.default_rng(seed)
     ev = Market(topo, controls)
-    bm = BatchMarket(topo, controls, capacity=1 << 10, n_tenants=16)
+    bm = BatchMarket(topo, controls, capacity=1 << 10, n_tenants=16,
+                     use_pallas=use_pallas)
     leaves = [l for root in topo.roots.values()
               for l in topo.leaves_of(root)]
     nodes = [n.node_id for n in topo.nodes]
@@ -182,6 +184,48 @@ def test_differential_lap_equal_price_seq_order():
     for t in ("ta", "tb", "bg0", "bg1"):
         assert eb.get(t, 0.0) == pytest.approx(
             bb.get(t, 0.0), rel=1e-4, abs=1e-3), t
+
+
+def test_differential_use_pallas_full_step_trace():
+    """A full random trace through ``step()`` with the sorted-slab
+    Pallas kernel (interpret) clearing every wave: owners, rates and
+    bills must match the event engine exactly as the jnp path does —
+    and must stay BIT-IDENTICAL to a jnp-backend batch engine replaying
+    the same trace (the two backends share one aggregate producer and
+    one merge formulation, so no tolerance is needed)."""
+    topo = build_cluster({"H100": 16}, gpus_per_host=4, hosts_per_rack=2,
+                         racks_per_zone=2)
+    replay(topo, None, seed=4, n_events=90, use_pallas=True)
+
+    # same trace, both batch backends: bit-identical end state
+    def run(use_pallas):
+        rng = np.random.default_rng(17)
+        bm = BatchMarket(topo, None, capacity=1 << 10, n_tenants=16,
+                         use_pallas=use_pallas)
+        root = next(iter(topo.roots.values()))
+        bm.set_floor(root, 2.0)
+        nodes = [n.node_id for n in topo.nodes]
+        now = 0.0
+        for _ in range(60):
+            kind = rng.choice(["place", "floor", "advance"],
+                              p=[0.6, 0.2, 0.2])
+            if kind == "place":
+                bm.place_order(TENANTS[rng.integers(len(TENANTS))],
+                               nodes[rng.integers(len(nodes))],
+                               float(rng.uniform(0.5, 12.0)))
+            elif kind == "floor":
+                bm.set_floor(nodes[rng.integers(len(nodes))],
+                             float(rng.uniform(0.0, 8.0)))
+            else:
+                now += float(rng.uniform(60.0, 1800.0))
+                bm.advance_to(now)
+        st = bm.states["H100"]
+        return (np.asarray(st["owner"]), np.asarray(st["rate"]),
+                np.asarray(st["bills"]))
+
+    jnp_res, pal_res = run(False), run(True)
+    for a, b in zip(jnp_res, pal_res):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_differential_volatility_controls():

@@ -131,9 +131,38 @@ def test_market_clear_vs_bruteforce(n_leaves, n_bids):
         assert abs(best - float(rate[int(leaf)])) < 1e-4
 
 
-def test_market_clear_pallas_equals_ref():
-    tree = build_tree(1024)
-    eng = BatchEngine(tree, capacity=4096, k=8)
+def _sorted_clear_args(eng, st):
+    """ops.clear positional args from an engine state's sorted view."""
+    return (st["order"], st["sorted_gseg"], st["seg_start"], st["price"],
+            st["tenant"], st["seq"], tuple(st["floor"]), eng.level_off,
+            eng.tree.strides, st["owner"], st["limit"], eng.k)
+
+
+def _assert_backends_identical(eng, st):
+    args = _sorted_clear_args(eng, st)
+    ref = clear(*args, use_pallas=False)
+    pal = clear(*args, use_pallas=True, interpret=True)
+    for name, a, b in zip(("rate", "best_level", "cand_slots",
+                           "truncated", "evict"), ref, pal):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+    return ref
+
+
+@pytest.mark.parametrize("k", [1, 4, 8])
+@pytest.mark.parametrize("shape", ["n512", "n768", "n1024",
+                                   "n24-nonpow2"])
+def test_market_clear_sorted_pallas_parity(shape, k):
+    """The sorted-slab Pallas kernel is BIT-IDENTICAL to
+    ref.clear_sorted across K and tree shapes, including
+    non-block-multiple and non-power-of-two leaf counts (the old kernel
+    asserted n_leaves % block == 0 and crashed on 768)."""
+    from repro.market_jax.engine import TreeSpec
+    if shape == "n24-nonpow2":
+        tree = TreeSpec(24, (1, 4, 12, 24))   # non-power-of-two strides
+    else:
+        tree = build_tree(int(shape.lstrip("n")))
+    eng = BatchEngine(tree, capacity=4096, k=k)
     st = eng.init_state()
     floors = list(st["floor"])
     floors[-1] = floors[-1].at[0].set(1.5)
@@ -146,21 +175,60 @@ def test_market_clear_pallas_equals_ref():
                    jnp.array(levels), jnp.array(nodes),
                    jnp.array(RNG.integers(0, 9, n), jnp.int32))
     # mixed ownership so the owner-exclusion and eviction paths exercise
-    st["owner"] = st["owner"].at[:512].set(
-        jnp.array(RNG.integers(0, 9, 512), jnp.int32))
-    st["limit"] = st["limit"].at[:512].set(
-        jnp.array(RNG.uniform(2, 8, 512), jnp.float32))
-    args = (*eng._aggregates(st),
-            tuple(st["floor"]), tree.strides, st["owner"], st["limit"])
-    r_ref, l_ref, w_ref, t_ref, e_ref = clear(*args, use_pallas=False)
-    r_pal, l_pal, w_pal, t_pal, e_pal = clear(*args, use_pallas=True,
-                                              interpret=True)
-    np.testing.assert_allclose(np.asarray(r_ref), np.asarray(r_pal),
-                               rtol=1e-6)
-    np.testing.assert_array_equal(np.asarray(l_ref), np.asarray(l_pal))
-    np.testing.assert_array_equal(np.asarray(w_ref), np.asarray(w_pal))
-    np.testing.assert_array_equal(np.asarray(t_ref), np.asarray(t_pal))
-    np.testing.assert_array_equal(np.asarray(e_ref), np.asarray(e_pal))
+    half = tree.n_leaves // 2
+    st["owner"] = st["owner"].at[:half].set(
+        jnp.array(RNG.integers(0, 9, half), jnp.int32))
+    st["limit"] = st["limit"].at[:half].set(
+        jnp.array(RNG.uniform(2, 8, half), jnp.float32))
+    _assert_backends_identical(eng, st)
+
+
+def test_market_clear_pallas_lap_reused_seq_ties():
+    """Equal-price bids whose slots were reused after a ring-allocator
+    lap (so slot order INVERTS arrival order) must merge identically on
+    both backends: seq asc is the tie-break, not slot order."""
+    tree = build_tree(64)
+    eng = BatchEngine(tree, capacity=8, k=4)
+    st = eng.init_state()
+    root = tree.n_levels - 1
+    ones = lambda v: jnp.full((8,), v, jnp.float32)
+    # fill all 8 slots with equal-price root bids, then kill two and
+    # re-place at the SAME price: later arrivals land in LOWER slots
+    st = eng.place(st, ones(5.0), jnp.full((8,), root, jnp.int32),
+                   jnp.zeros((8,), jnp.int32),
+                   jnp.arange(8, dtype=jnp.int32))
+    one = lambda v, t: (jnp.array([v], jnp.float32),
+                        jnp.array([root], jnp.int32),
+                        jnp.array([0], jnp.int32),
+                        jnp.array([t], jnp.int32))
+    st = eng.cancel(st, jnp.array([5], jnp.int32))
+    st = eng.place(st, *one(5.0, 8))            # A -> reused slot 5
+    st = eng.cancel(st, jnp.array([2], jnp.int32))
+    st = eng.place(st, *one(5.0, 9))            # B -> EARLIER slot 2
+    # the lap inversion: B (slot 2) arrived AFTER A (slot 5)
+    assert int(st["seq"][2]) > int(st["seq"][5]) > int(st["seq"][7])
+    ref = _assert_backends_identical(eng, st)
+    # the slate must rank the surviving equal-price book in seq order
+    slate = np.asarray(ref[2])[0]
+    live = [s for s in slate if s >= 0]
+    seqs = np.asarray(st["seq"])[live]
+    assert list(seqs) == sorted(seqs), (live, seqs)
+
+
+def test_market_clear_pallas_truncated_slates():
+    """A node book deeper than K truncates the slate identically on
+    both backends (flag set, slate cut at K ranks)."""
+    tree = build_tree(512)
+    eng = BatchEngine(tree, capacity=4096, k=2)
+    st = eng.init_state()
+    m = 40    # 40 distinct-tenant bids on one host node: far beyond K=2
+    st = eng.place(st, jnp.array(RNG.uniform(3, 9, m), jnp.float32),
+                   jnp.ones((m,), jnp.int32), jnp.zeros((m,), jnp.int32),
+                   jnp.arange(m, dtype=jnp.int32))
+    ref = _assert_backends_identical(eng, st)
+    trunc = np.asarray(ref[3])
+    assert trunc[: tree.strides[1]].all()      # covered leaves truncated
+    assert not trunc[tree.strides[1]:].any()   # uncovered ones are not
 
 
 def test_segment_top2():
@@ -253,7 +321,7 @@ def test_sorted_segment_aggregates_skips_killed_entries():
     assert float(p2[0]) == 5.0 and int(s2[0]) == 2
 
 
-def test_clear_ref_slate_matches_bruteforce():
+def test_clear_sorted_slate_matches_bruteforce():
     """The per-leaf ranked candidate slate equals the brute-force top-K
     owner-excluded floor-gated order ranking (price desc, slot asc)."""
     rng = np.random.default_rng(7)
