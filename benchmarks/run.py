@@ -52,6 +52,8 @@ def main() -> None:
     # --only run that includes fig12 still leaves a fresh dump)
     if any(r.startswith("fig12") for r in ROWS):
         dump_json(fig12_scalability.BENCH_JSON, prefix="fig12")
+    if any(r.startswith("fig06") for r in ROWS):
+        dump_json(fig06_contention.BENCH_JSON, prefix="fig06")
     sys.exit(1 if failures else 0)
 
 

@@ -200,6 +200,84 @@ class BatchMarket:
                 "node": jnp.array([node], jnp.int32),
                 "tenant": jnp.array([tenant], jnp.int32)}
 
+    # ------------------------------------------------------ fleet hooks
+    # Array-native epoch interface for the vectorized tenant fleet
+    # (sim/fleet.py): whole bid/relinquish/limit batches flow straight
+    # into one jitted BatchEngine.step per epoch — no per-order
+    # str-tenant round trips.  Fleet tenant ids ARE engine tenant ids;
+    # callers that also want name-keyed callbacks (the differential
+    # reference loop) intern names first so the dense ids line up.
+
+    def leaf_view(self, rtype: str):
+        """Device views of one engine's per-leaf + floor state:
+        ``(owner, rate, floors)``, zero-copy jnp arrays."""
+        st = self.states[rtype]
+        return st["owner"], st["rate"], tuple(st["floor"])
+
+    def cancel_all(self, rtype: str) -> None:
+        """Kill every resting order (the fleet's fresh-book-each-epoch
+        policy; the next step re-clears)."""
+        eng = self.engines[rtype]
+        self.states[rtype] = eng.cancel_all(self.states[rtype])
+        self._np[rtype] = None
+
+    def step_arrays(self, rtype: str, t: float, bids=None,
+                    relinquish=None, limits=None,
+                    explicit: Set[int] = frozenset()):
+        """Run ONE engine epoch at ``t`` with a whole event batch.
+
+        bids: dict of (b,) arrays (``price``/``limit`` f32,
+            ``level``/``node``/``tenant`` i32; tenant -1 = padding);
+        relinquish: (m,) i32 local leaf ids (-1 padded);
+        limits: (n_leaves,) f32 retention-limit refresh (NaN = keep).
+
+        Fires ``on_transfer`` callbacks only when some are registered
+        (the pure-array fleet path reads the returned transfer arrays
+        instead); stats are updated either way.  Returns the engine's
+        transfers dict ``{moved, old, new}``.
+        """
+        assert t >= self.now - 1e-9, (t, self.now)
+        self.now = max(self.now, t)
+        eng = self.engines[rtype]
+        st, transfers, _ = eng.step(self.states[rtype], self.now, bids,
+                                    None, relinquish, limits)
+        self.states[rtype] = st
+        self._np[rtype] = None
+        if bids is not None:
+            self.stats["orders"] += int(
+                np.sum(np.asarray(bids["tenant"]) >= 0))
+        if self.on_transfer:
+            self._fire(rtype, transfers, explicit)
+        else:
+            moved = np.asarray(transfers["moved"])
+            new = np.asarray(transfers["new"])
+            taken = moved & (new >= 0)
+            self.stats["transfers"] += int(taken.sum())
+            expl = np.zeros_like(moved)
+            if explicit:
+                expl[list(explicit)] = True
+            self.stats["explicit_relinquish"] += int(
+                (moved & expl).sum())
+            self.stats["implicit_relinquish"] += int(
+                (taken & ~expl
+                 & (np.asarray(transfers["old"]) >= 0)).sum())
+        return transfers
+
+    def reset(self) -> None:
+        """Re-initialise every engine's state in place (same layout, so
+        every jitted trace is reused) — fresh-market semantics for the
+        per-tenant alone runs of the fleet retention metric.  Floors
+        must be re-seeded by the caller."""
+        for rtype, eng in self.engines.items():
+            self.states[rtype] = eng.init_state()
+            self._np[rtype] = None
+            self._slot_gen[rtype][:] = 0
+        self.now = 0.0
+        self.orders.clear()
+        self.bills = {}
+        self._next_oid = 0
+        self.stats = {k: 0 for k in self.stats}
+
     # ----------------------------------------------------------- tenants
     def advance_to(self, t: float) -> None:
         assert t >= self.now - 1e-9, (t, self.now)

@@ -249,6 +249,18 @@ class BatchEngine:
         return self._resort(state)
 
     @functools.partial(jax.jit, static_argnums=0)
+    def cancel_all(self, state):
+        """Kill EVERY resting order in one sweep — the vectorized
+        fleet's fresh-book-each-epoch policy (mirroring the
+        EconAdapter's cancel-stale-orders-every-step behaviour) without
+        materializing a slot-id list.  Kills keep the sorted book view
+        valid, so no re-sort happens here; the next ``step`` re-clears."""
+        state = dict(state)
+        state["price"] = jnp.full_like(state["price"], NEG)
+        state["tenant"] = jnp.full_like(state["tenant"], -1)
+        return state
+
+    @functools.partial(jax.jit, static_argnums=0)
     def cancel(self, state, bid_ids):
         """Deactivate bid slots. Follow with a zero-event ``step`` at the
         same timestamp so cached rates refresh before billing resumes.
@@ -494,7 +506,7 @@ class BatchEngine:
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
     def step(self, state, t, new_bids=None, floor_updates=None,
-             relinquish=None):
+             relinquish=None, limits=None):
         """One market epoch at time ``t`` — see module docstring.
 
         new_bids: optional dict with (k,) arrays ``price``, ``limit``,
@@ -503,6 +515,10 @@ class BatchEngine:
             (value < 0 = no change for that node).
         relinquish: optional (m,) int32 leaf ids to explicitly release
             (-1 = padding).
+        limits: optional (n_leaves,) float32 retention-limit refresh
+            (NaN = leave that leaf's limit unchanged) — the fleet's
+            batched ``set_retention_limit``, applied after matured
+            deferred evictions and before this step's events.
         Returns (state, transfers, bills) where transfers is a dict of
         per-leaf {moved, old, new} owner ids and bills the cumulative
         per-tenant vector.
@@ -525,6 +541,11 @@ class BatchEngine:
         #    BEFORE this step's events (matching Market.advance_to)
         if self.controls.min_holding_s > 0:
             state = self._cascade(state, t, no_release)
+        # 2b) batched retention-limit refresh (NaN = no change), before
+        #     this step's events so the subsequent cascade sees them
+        if limits is not None:
+            state["limit"] = jnp.where(jnp.isnan(limits),
+                                       state["limit"], limits)
         # 3) operator floor updates, drops bounded by floor_fall_rate
         if floor_updates is not None:
             fall = self.controls.floor_fall_rate

@@ -196,11 +196,17 @@ class LaissezCloud(CloudBase):
 class LaissezBatchCloud(LaissezCloud):
     # class-level backend toggles so scenario code can flip the whole
     # fleet onto the Pallas clearing kernel (interpret on CPU; set
-    # interpret=False on real TPU hosts)
+    # interpret=False on real TPU hosts), plus sizing knobs so bigger
+    # scenarios can grow the bid table / tenant table / cascade width
     use_pallas = False
     interpret = True
+    capacity = 1 << 12
+    n_tenants = 256
+    k = 8
 
     def _make_market(self, topo: Topology, controls):
         from repro.market_jax.bridge import BatchMarket
-        return BatchMarket(topo, controls, use_pallas=self.use_pallas,
+        return BatchMarket(topo, controls, capacity=self.capacity,
+                           n_tenants=self.n_tenants, k=self.k,
+                           use_pallas=self.use_pallas,
                            interpret=self.interpret)

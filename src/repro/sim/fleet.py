@@ -1,0 +1,477 @@
+"""Vectorized tenant fleet: the Python ``Tenant`` state machine as
+struct-of-arrays JAX ops, driving the batch market engine directly.
+
+The per-tenant simulator (``sim/workloads.Tenant`` + ``core/econadapter``)
+reproduces the paper's contention scenarios at 32-node toy scale; the
+jitted batch engine (``market_jax``) clears 10k+ leaves in milliseconds.
+This module removes the scenario-layer bottleneck between them: one
+``Fleet`` holds EVERY tenant's state as dense arrays (kind, work,
+progress, deadline, reconfig window, checkpoint clock, held-node counts,
+EWMA load), and the per-epoch loop is three jitted calls —
+
+  ``policy``      -> this epoch's bid batch / relinquish set / retention
+                     limits, emitted directly as the int/float arrays
+                     ``BatchEngine.step()`` consumes (no per-order
+                     str-tenant ``BatchMarket`` round trips);
+  ``after_step``  -> grant/revoke effects (reconfiguration windows,
+                     wasted work since the last checkpoint) from the
+                     engine's per-leaf transfer arrays;
+  ``advance``     -> workload dynamics (progress, served/demanded,
+                     planner EWMA, checkpoint clock, completion).
+
+**Fidelity contract** (differential-tested against the Python ``Tenant``
+in ``tests/test_fleet.py``): for single-type, locality-free tenants
+(``topology_sensitive=False``, one resource tree, homogeneous speed 1.0)
+the fleet reproduces ``Tenant.advance`` / ``desired_nodes`` /
+``performance`` and the EconAdapter Listing-1 ``price`` /
+``retention_limit`` formulas elementwise.  Documented v1 simplifications
+vs the object path:
+
+* homogeneous node speed (one resource type; ``GPU_SPEED`` lookup and
+  the locality factor collapse to 1.0) — held NODES are a count, not a
+  leaf set, on the fleet side;
+* the grow-bid reference price is the cluster-min path floor (the event
+  path's ``query_price`` also folds in book tops and owned-leaf limits);
+* ``node_redundant`` is False for grow bids (the object path peeks at
+  the surplus set of the probe leaf);
+* same-epoch grant+revoke for one tenant applies revokes first (the
+  object path interleaves callbacks in leaf order).
+
+Inference arrival rates are pre-sampled onto a dense piecewise-constant
+``(n_tenants, n_ticks)`` grid (``traces.sample_rate_grid``) with the
+same 10 s tick the per-tenant callables use internally, so rate lookups
+at arbitrary times (including off-tick arrivals) are bit-identical to
+``rate_fn(t)``.
+
+Static knobs live on the ``Fleet`` instance (jit static arg); all
+per-tenant params and mutable state travel as array pytrees, so alone /
+counterfactual runs over the same shapes reuse the compiled traces.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.market_jax.engine import TreeSpec
+from repro.sim import traces
+from repro.sim.workloads import KIND_IDS, Tenant
+
+KIND_TRAIN = KIND_IDS["training"]
+KIND_INFER = KIND_IDS["inference"]
+KIND_BATCH = KIND_IDS["batch"]
+
+# SLA credit fraction exposed by inference tenants (Tenant.
+# value_per_utility_gap: P99 -> 10% + P999 -> 25% service credits)
+_SLA_CREDITS = 0.10 + 0.25
+
+
+def params_from_tenants(tenants: Sequence[Tenant], duration_s: float,
+                        rate_tick_s: float = 10.0) -> Dict[str, jnp.ndarray]:
+    """Build the fleet's per-tenant parameter arrays (plus the dense
+    inference-rate grid) from Python ``Tenant`` objects.
+
+    Setup-time only — the returned dict is a pytree of ``(n,)`` arrays
+    (and the ``(n, T)`` rate grid) consumed by the jitted fleet ops.
+    """
+    f32 = lambda xs: jnp.asarray(np.asarray(xs, np.float32))  # noqa: E731
+    i32 = lambda xs: jnp.asarray(np.asarray(xs, np.int32))    # noqa: E731
+    rates = traces.sample_rate_grid(
+        [t.p.rate_fn for t in tenants], duration_s, tick_s=rate_tick_s)
+    return {
+        "kind": i32([KIND_IDS[t.p.kind] for t in tenants]),
+        "work": f32([t.p.work for t in tenants]),
+        "deadline_s": f32([t.p.deadline_s for t in tenants]),
+        "checkpoint_interval_s": f32([t.p.checkpoint_interval_s
+                                      for t in tenants]),
+        "reconfig_s": f32([t.p.reconfig_s for t in tenants]),
+        "max_nodes": i32([t.p.max_nodes for t in tenants]),
+        "cap_per_node": f32([t.p.cap_per_node for t in tenants]),
+        "sla_value_per_h": f32([t.p.sla_value_per_h for t in tenants]),
+        "value_per_gap": f32([t.p.value_per_gap for t in tenants]),
+        "arrival_s": f32([t.arrival_s for t in tenants]),
+        "overhead_mult": f32([t.overhead_mult for t in tenants]),
+        "rates": jnp.asarray(rates),
+    }
+
+
+def params_alone(params: Dict[str, jnp.ndarray], i: int
+                 ) -> Dict[str, jnp.ndarray]:
+    """Counterfactual params where only tenant ``i`` ever arrives — same
+    shapes as ``params`` so every jitted trace is reused across the
+    per-tenant alone runs (retention denominators)."""
+    n = params["arrival_s"].shape[0]
+    mask = jnp.arange(n) == i
+    out = dict(params)
+    out["arrival_s"] = jnp.where(mask, params["arrival_s"], jnp.inf)
+    return out
+
+
+@dataclass(frozen=True)
+class FleetConfig:
+    """Static fleet knobs (hashable — part of the jit static self)."""
+    n: int                           # number of tenants
+    rate_tick_s: float = 10.0        # rate-grid tick (traces default)
+    b_max: int = 1024                # bid-batch capacity per epoch
+    per_tenant_bids: int = 8         # grow bids per tenant per epoch
+    hysteresis_s: float = 120.0      # Tenant scale-down hysteresis
+    horizon_h: float = 1.0           # AdapterConfig.horizon_h
+    reconfig_estimate_mult: float = 1.0   # Fig 15 misestimation knob
+
+
+class Fleet:
+    """Static orchestration object over the array state.
+
+    Per-epoch contract (shapes; see docs/DESIGN.md §8):
+
+      bids dict  — ``price/limit`` f32, ``level/node/tenant`` i32, all
+                   ``(b_max,)``; ``tenant == -1`` marks padding;
+      relinquish — ``(n_leaves,)`` i32 leaf ids, ``-1`` padded;
+      limits     — ``(n_leaves,)`` f32 retention limits, ``NaN`` where
+                   unchanged (unowned / relinquishing leaves).
+    """
+
+    def __init__(self, cfg: FleetConfig, tree: TreeSpec) -> None:
+        self.cfg = cfg
+        self.tree = tree
+
+    # ------------------------------------------------------------ state
+    def init_state(self, params: Dict[str, jnp.ndarray]
+                   ) -> Dict[str, jnp.ndarray]:
+        arr = params["arrival_s"]
+        n = self.cfg.n
+        z = jnp.zeros((n,), jnp.float32)
+        return {
+            "progress": z, "served": z, "demanded": z, "rate_ewma": z,
+            "reconfig_until": jnp.full((n,), -1.0, jnp.float32),
+            "last_checkpoint": arr, "last_t": arr,
+            "last_scale_down": arr,
+            "done_at": jnp.full((n,), jnp.inf, jnp.float32),
+        }
+
+    # ------------------------------------------------------ rate lookup
+    def _lam(self, params, t):
+        """Piecewise-constant rate lookup, identical to the per-tenant
+        ``rate_fn`` indexing (``i = min(int(t / tick), T - 1)``);
+        ``t`` may be a scalar or a per-tenant vector."""
+        rates = params["rates"]
+        T = rates.shape[1]
+        idx = jnp.clip((t / self.cfg.rate_tick_s).astype(jnp.int32),
+                       0, T - 1)
+        idx = jnp.broadcast_to(idx, (self.cfg.n,))
+        return jnp.take_along_axis(rates, idx[:, None], axis=1)[:, 0]
+
+    # --------------------------------------------------------- dynamics
+    @functools.partial(jax.jit, static_argnums=0)
+    def advance(self, params, state, now, held):
+        """Vectorized ``Tenant.advance``: one tick of workload dynamics
+        given current held-node counts."""
+        p, s = params, dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        heldf = held.astype(jnp.float32)
+        dt = now - s["last_t"]
+        tick = dt > 0
+        done = jnp.isfinite(s["done_at"])
+        live = tick & (now >= p["arrival_s"]) & ~done
+        ru = s["reconfig_until"]
+        active_dt = jnp.where(
+            now <= ru, 0.0,
+            jnp.where(ru > now - dt, now - ru, dt))
+        lam = self._lam(p, now)
+        inf_m = live & (p["kind"] == KIND_INFER)
+        alpha = jnp.minimum(1.0, dt / 300.0)      # ~5 min planner smoothing
+        s["rate_ewma"] = jnp.where(
+            inf_m, s["rate_ewma"] + alpha * (lam - s["rate_ewma"]),
+            s["rate_ewma"])
+        s["demanded"] = jnp.where(inf_m, s["demanded"] + lam * dt,
+                                  s["demanded"])
+        cap_rps = heldf * p["cap_per_node"]
+        s["served"] = jnp.where(
+            inf_m, s["served"] + jnp.minimum(lam, cap_rps) * active_dt,
+            s["served"])
+        wk = live & (p["kind"] != KIND_INFER)
+        s["progress"] = jnp.where(
+            wk, s["progress"] + heldf * active_dt / 3600.0, s["progress"])
+        s["last_checkpoint"] = jnp.where(
+            wk & (now - s["last_checkpoint"]
+                  >= p["checkpoint_interval_s"]),
+            now, s["last_checkpoint"])
+        s["done_at"] = jnp.where(wk & (s["progress"] >= p["work"]),
+                                 now, s["done_at"])
+        s["last_t"] = jnp.where(tick, now, s["last_t"])
+        return s
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def desired_nodes(self, params, state, now):
+        """Vectorized shared autoscaler (``Tenant.desired_nodes``)."""
+        p, s = params, state
+        now = jnp.asarray(now, jnp.float32)
+        done = jnp.isfinite(s["done_at"])
+        lam = self._lam(p, now)
+        plan = jnp.maximum(s["rate_ewma"], 0.7 * lam)
+        want_inf = jnp.minimum(
+            p["max_nodes"],
+            jnp.ceil(plan / p["cap_per_node"]).astype(jnp.int32))
+        remaining = jnp.maximum(p["work"] - s["progress"], 0.0)
+        t_left = jnp.maximum(p["arrival_s"] + p["deadline_s"] - now, 1.0)
+        need = remaining / (t_left / 3600.0)
+        want_wk = jnp.minimum(
+            p["max_nodes"],
+            jnp.maximum(0, jnp.ceil(need).astype(jnp.int32)))
+        want = jnp.where(p["kind"] == KIND_INFER, want_inf, want_wk)
+        return jnp.where((now < p["arrival_s"]) | done, 0, want)
+
+    # ------------------------------------------------ AppHooks, batched
+    def _hooks(self, params, state, held):
+        """Vectorized Listing-1 inputs at ``last_t`` (policy runs before
+        advance, exactly when the EconAdapter reads its app): marginal
+        utility, utility gap, $-value per gap, checkpoint distance."""
+        p, s = params, state
+        heldf = held.astype(jnp.float32)
+        lam = self._lam(p, s["last_t"])
+        is_inf = p["kind"] == KIND_INFER
+        mu_inf = jnp.where(lam > 0,
+                           jnp.minimum(p["cap_per_node"], lam)
+                           / jnp.maximum(lam, 1e-30), 0.0)
+        mu_wk = jnp.minimum(
+            1.0, 1.0 / jnp.maximum(p["work"] - s["progress"], 1e-9))
+        mu = jnp.where(is_inf, mu_inf, mu_wk)
+        cap_rps = heldf * p["cap_per_node"]
+        gap_inf = jnp.where(
+            lam > 0,
+            jnp.maximum(0.0, 1.0 - cap_rps / jnp.maximum(lam, 1e-30)),
+            0.0)
+        t_left = jnp.maximum(
+            p["arrival_s"] + p["deadline_s"] - s["last_t"], 1.0)
+        need = jnp.maximum(p["work"] - s["progress"], 0.0) \
+            / (t_left / 3600.0)
+        gap_wk = jnp.maximum(0.0, (need - heldf)
+                             / jnp.maximum(need, 1e-9))
+        gap = jnp.where(is_inf, gap_inf, gap_wk)
+        urgency = 1.0 + 2.0 * gap
+        value = jnp.where(is_inf, p["sla_value_per_h"] * _SLA_CREDITS,
+                          p["value_per_gap"]) * urgency
+        since_chkpt = s["last_t"] - s["last_checkpoint"]
+        reconf_h = (p["reconfig_s"] + since_chkpt) \
+            * self.cfg.reconfig_estimate_mult / 3600.0
+        return mu, gap, value, reconf_h
+
+    # the Listing-1 quote formulas — ONE definition each; policy() and
+    # the test-facing listing1() both call these, so the differential
+    # tests exercise exactly the shipped pricing
+    def _grow_price(self, mu, value, reconf_h, ref):
+        return value * mu - reconf_h * ref / self.cfg.horizon_h
+
+    def _retention_limit(self, mu, value, reconf_h, rate):
+        return value * mu + reconf_h * jnp.maximum(rate, 1e-6) \
+            / self.cfg.horizon_h
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def listing1(self, params, state, held, ref, rate):
+        """Listing-1 quotes for every tenant: the grow-bid price against
+        scope reference price ``ref`` and the retention limit against
+        per-tenant charged rate ``rate`` — the vectorized twins of
+        ``EconAdapter.price``/``retention_limit`` (differential-tested
+        elementwise in tests/test_fleet.py)."""
+        mu, _gap, value, reconf_h = self._hooks(params, state, held)
+        return (self._grow_price(mu, value, reconf_h, ref),
+                self._retention_limit(mu, value, reconf_h, rate))
+
+    @staticmethod
+    def _rank_in_group(group, *tie_keys):
+        """Rank of every element within its ``group`` under the order
+        ``lexsort((*tie_keys, group))`` (tie_keys minor -> major)."""
+        L = group.shape[0]
+        ordr = jnp.lexsort((*tie_keys, group))
+        sg = group[ordr]
+        first = jnp.searchsorted(sg, sg, side="left")
+        pos = jnp.arange(L, dtype=jnp.int32)
+        return jnp.zeros((L,), jnp.int32).at[ordr].set(
+            (pos - first).astype(jnp.int32))
+
+    # ------------------------------------------------------------ policy
+    @functools.partial(jax.jit, static_argnums=0)
+    def policy(self, params, state, now, owner, rate_leaf, floors):
+        """One epoch of the fleet-side renegotiation policy.
+
+        Mirrors ``EconAdapter.step`` items (0)-(2) — publish/refresh
+        retention limits, prune surplus with the 120 s hysteresis, grow
+        toward desired nodes with Listing-1 bids — emitting the epoch's
+        whole batch as engine-ready arrays.  (Exchange moves, item (3),
+        are an object-path-only refinement for now.)
+
+        Returns ``(limits, relinquish, sel, bids, state, info)`` where
+        ``sel`` is the per-leaf graceful-release mask ``after_step``
+        uses to classify revocations, and ``info`` carries host-side
+        counters (bids emitted / clipped by ``b_max``).
+        """
+        cfg = self.cfg
+        n, tree = cfg.n, self.tree
+        p, s = params, dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        n_leaves = tree.n_leaves
+        leafid = jnp.arange(n_leaves, dtype=jnp.int32)
+        owner_c = jnp.clip(owner, 0, n - 1)
+        owned = (owner >= 0) & (owner < n)
+        held = jnp.zeros((n,), jnp.int32).at[owner_c].add(
+            owned.astype(jnp.int32))
+        want = self.desired_nodes(p, s, now)
+        mu, gap, value, reconf_h = self._hooks(p, s, held)
+
+        # ---- surplus pruning (value-per-dollar asc = rate desc, with
+        # leaf asc as the deterministic tie-break) under hysteresis
+        extra = held - want
+        eligible = (now - s["last_scale_down"] >= cfg.hysteresis_s) \
+            & (extra > 0)
+        rank = self._rank_in_group(jnp.where(owned, owner, n),
+                                   leafid, -rate_leaf)
+        sel = owned & eligible[owner_c] & (rank < extra[owner_c])
+        relinq = jnp.nonzero(sel, size=n_leaves,
+                             fill_value=-1)[0].astype(jnp.int32)
+        rel_cnt = jnp.zeros((n,), jnp.int32).at[owner_c].add(
+            sel.astype(jnp.int32))
+        s["last_scale_down"] = jnp.where(rel_cnt > 0, now,
+                                         s["last_scale_down"])
+
+        # ---- retention limits on kept leaves (Listing-1 limit: value
+        # plus the work at risk since the last checkpoint)
+        lim_leaf = self._retention_limit(
+            mu[owner_c], value[owner_c], reconf_h[owner_c], rate_leaf)
+        limits = jnp.where(owned & ~sel, lim_leaf, jnp.nan)
+
+        # ---- grow bids at the type root ("anywhere"), Listing-1 priced
+        # against the cluster-min path floor
+        floor_leaf = jnp.zeros((n_leaves,), jnp.float32)
+        for d, st_d in enumerate(tree.strides):
+            floor_leaf = jnp.maximum(floor_leaf,
+                                     floors[d][leafid // st_d])
+        ref = jnp.min(floor_leaf)
+        price = self._grow_price(mu, value, reconf_h, ref)
+        can_bid = (want > held) & (now >= p["arrival_s"]) \
+            & ~jnp.isfinite(s["done_at"]) & (price > 0)
+        nb = jnp.where(can_bid,
+                       jnp.minimum(want - held, cfg.per_tenant_bids), 0)
+        offsets = jnp.cumsum(nb)
+        total = offsets[-1]
+        j = jnp.arange(cfg.b_max, dtype=jnp.int32)
+        tid = jnp.searchsorted(offsets, j, side="right").astype(jnp.int32)
+        valid = j < jnp.minimum(total, cfg.b_max)
+        tid_c = jnp.clip(tid, 0, n - 1)
+        bids = {
+            "price": jnp.where(valid, price[tid_c], 0.0)
+            .astype(jnp.float32),
+            "limit": jnp.where(valid, price[tid_c], 0.0)
+            .astype(jnp.float32),
+            "level": jnp.full((cfg.b_max,), tree.n_levels - 1, jnp.int32),
+            "node": jnp.zeros((cfg.b_max,), jnp.int32),
+            "tenant": jnp.where(valid, tid_c, -1).astype(jnp.int32),
+        }
+        info = {"bids": jnp.minimum(total, cfg.b_max),
+                "bids_clipped": jnp.maximum(total - cfg.b_max, 0),
+                "relinquished": jnp.sum(sel.astype(jnp.int32))}
+        return limits, relinq, sel, bids, s, info
+
+    # -------------------------------------------------------- transfers
+    @functools.partial(jax.jit, static_argnums=0)
+    def after_step(self, params, state, now, owner_before, owner_after,
+                   sel):
+        """Apply the engine's per-leaf ownership delta to the fleet:
+        reconfiguration windows for every touched tenant, and wasted
+        work since the last checkpoint for involuntary revocations
+        (``sel`` marks this epoch's graceful releases).  Returns the
+        updated state and the post-transfer held counts."""
+        cfg, p = self.cfg, params
+        n = cfg.n
+        s = dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        n_leaves = owner_before.shape[0]
+        leafid = jnp.arange(n_leaves, dtype=jnp.int32)
+        ob_c = jnp.clip(owner_before, 0, n - 1)
+        oa_c = jnp.clip(owner_after, 0, n - 1)
+        owned_b = (owner_before >= 0) & (owner_before < n)
+        owned_a = (owner_after >= 0) & (owner_after < n)
+        held_before = jnp.zeros((n,), jnp.int32).at[ob_c].add(
+            owned_b.astype(jnp.int32))
+        held_after = jnp.zeros((n,), jnp.int32).at[oa_c].add(
+            owned_a.astype(jnp.int32))
+        moved = owner_before != owner_after
+        lost = moved & owned_b
+        gain = moved & owned_a
+        forced = lost & ~sel
+        # wasted work: the object path discards the leaf, then charges
+        # throughput() * waste_s per revoke, processing leaves in
+        # ascending order — reproduce the per-ordinal throughput
+        # (h0 - k - 1) exactly via the shared rank-in-group trick
+        k_rank = self._rank_in_group(jnp.where(lost, ob_c, n), leafid)
+        waste_s = jnp.minimum(now - s["last_checkpoint"],
+                              p["checkpoint_interval_s"])
+        contrib = jnp.where(
+            forced,
+            (held_before[ob_c] - k_rank - 1).astype(jnp.float32), 0.0)
+        lost_nodes_s = jnp.zeros((n,), jnp.float32).at[ob_c].add(contrib)
+        lost_work = jnp.maximum(waste_s, 0.0) / 3600.0 * lost_nodes_s
+        wk = p["kind"] != KIND_INFER
+        s["progress"] = jnp.where(
+            wk, jnp.maximum(0.0, s["progress"] - lost_work),
+            s["progress"])
+        gain_cnt = jnp.zeros((n,), jnp.int32).at[oa_c].add(
+            gain.astype(jnp.int32))
+        lost_cnt = jnp.zeros((n,), jnp.int32).at[ob_c].add(
+            lost.astype(jnp.int32))
+        touched = (gain_cnt > 0) | (lost_cnt > 0)
+        done = jnp.isfinite(s["done_at"])
+        s["reconfig_until"] = jnp.where(
+            touched & ~done,
+            jnp.maximum(s["reconfig_until"],
+                        now + p["reconfig_s"] * p["overhead_mult"]),
+            s["reconfig_until"])
+        return s, held_after
+
+    # ---------------------------------------------- alone counterfactual
+    @functools.partial(jax.jit, static_argnums=0)
+    def resize_to_desired(self, params, state, now, held):
+        """Analytic 'alone' allocator: grant desired nodes instantly
+        (an uncontended cluster serves any single tenant), shrink
+        gracefully under the same 120 s hysteresis.  Reconfiguration
+        windows still apply, so the denominator keeps the object path's
+        churn costs."""
+        p, s = params, dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        want = jnp.minimum(self.desired_nodes(p, s, now),
+                           self.tree.n_leaves)
+        can_shrink = now - s["last_scale_down"] >= self.cfg.hysteresis_s
+        target = jnp.where(want < held,
+                           jnp.where(can_shrink, want, held), want)
+        done = jnp.isfinite(s["done_at"])
+        touched = (target != held) & ~done
+        s["reconfig_until"] = jnp.where(
+            touched,
+            jnp.maximum(s["reconfig_until"],
+                        now + p["reconfig_s"] * p["overhead_mult"]),
+            s["reconfig_until"])
+        s["last_scale_down"] = jnp.where(target < held, now,
+                                         s["last_scale_down"])
+        return s, target
+
+    # ----------------------------------------------------------- metrics
+    @functools.partial(jax.jit, static_argnums=0)
+    def performance(self, params, state, now):
+        """Vectorized ``Tenant.performance`` (paper §5.1)."""
+        p, s = params, state
+        now = jnp.asarray(now, jnp.float32)
+        perf_inf = jnp.where(s["demanded"] > 0,
+                             s["served"] / jnp.maximum(s["demanded"],
+                                                       1e-30), 1.0)
+        expected = p["work"] * jnp.minimum(
+            1.0, jnp.maximum(now - p["arrival_s"], 1e-9)
+            / jnp.maximum(p["deadline_s"], 1e-9))
+        perf_wk = jnp.where(
+            jnp.isfinite(s["done_at"]), 1.0,
+            jnp.where(expected > 0,
+                      jnp.minimum(1.0, s["progress"]
+                                  / jnp.maximum(expected, 1e-30)), 1.0))
+        return jnp.where(p["kind"] == KIND_INFER, perf_inf, perf_wk)

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import math
 import statistics
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -20,7 +21,7 @@ from repro.core.econadapter import AdapterConfig
 from repro.sim import traces
 from repro.sim.cloud import CloudBase, FCFSCloud, FCFSPCloud, \
     LaissezBatchCloud, LaissezCloud
-from repro.sim.workloads import Tenant, WorkloadParams
+from repro.sim.workloads import ON_DEMAND, Tenant, WorkloadParams
 
 
 @dataclass
@@ -166,3 +167,166 @@ def run_with_retention(kind: str, cfg: ScenarioConfig) -> RunResult:
         denom = max(alone.perf[name], 1e-9)
         multi.retention[name] = min(1.5, multi.perf[name] / denom)
     return multi
+
+
+# ---------------------------------------------------------------------------
+# FleetScenario: the paper's contention scenarios at 10k-node scale on the
+# vectorized tenant fleet + batch engine (sim/fleet.py; docs/DESIGN.md §8).
+# ---------------------------------------------------------------------------
+@dataclass
+class FleetScenarioConfig:
+    """Scale-path scenario: one homogeneous type-tree, regime-scaled
+    tenant mix, every epoch a single array batch into the batch engine."""
+    regime: str = "heavy"
+    n_leaves: int = 2048
+    n_training: int = 24
+    n_inference: int = 24
+    n_batch: int = 16
+    duration_s: float = 1800.0
+    tick_s: float = 60.0
+    seed: int = 0
+    k: int = 16                     # top-K cascade width at fleet scale
+    b_max: int = 1024               # bid-batch capacity per epoch
+    per_tenant_bids: int = 8
+    use_pallas: bool = False
+    interpret: bool = True
+    alone: str = "analytic"         # retention denominator:
+    #   "analytic" — uncontended counterfactual, one vectorized run
+    #   "engine"   — per-tenant alone runs through the engine (toy scale)
+    #   "none"     — skip (perf only)
+    controls: VolatilityControls = field(
+        default_factory=lambda: VolatilityControls(max_bid_multiple=4.0,
+                                                   floor_fall_rate=0.5))
+
+    @property
+    def n_tenants(self) -> int:
+        return self.n_training + self.n_inference + self.n_batch
+
+
+@dataclass
+class FleetRunResult:
+    perf: np.ndarray                 # (n_tenants,) multi-tenant run
+    alone_perf: np.ndarray           # (n_tenants,) denominator (or ones)
+    retention: np.ndarray            # clip(perf / alone, 1.5)
+    epoch_s: List[float]             # wall-clock per multi-run epoch
+    stats: Dict[str, float]
+
+    @property
+    def mean_retention(self) -> float:
+        return float(np.mean(self.retention)) if len(self.retention) \
+            else float("nan")
+
+
+def make_fleet(fcfg: FleetScenarioConfig):
+    """Build (topo, tenants, market, fleet, params) for a fleet scenario.
+
+    Tenant mixes reuse ``make_tenants``'s regime scaling on a single
+    H100 tree; ``topology_sensitive`` is forced off — the fleet's v1
+    fidelity contract is locality-free (sim/fleet.py docstring)."""
+    from repro.market_jax.bridge import BatchMarket
+    from repro.sim.fleet import Fleet, FleetConfig, params_from_tenants
+    topo = build_cluster({"H100": fcfg.n_leaves}, gpus_per_host=8,
+                         hosts_per_rack=4, racks_per_zone=4)
+    scfg = ScenarioConfig(
+        regime=fcfg.regime, n_h100=fcfg.n_leaves, n_a100=0,
+        duration_s=fcfg.duration_s, tick_s=fcfg.tick_s, seed=fcfg.seed,
+        n_training=fcfg.n_training, n_inference=fcfg.n_inference,
+        n_batch=fcfg.n_batch, controls=fcfg.controls)
+    tenants = make_tenants(scfg, topo)
+    for t in tenants:
+        t.p.topology_sensitive = False
+    cap = 1 << max(11, (2 * fcfg.b_max - 1).bit_length())
+    market = BatchMarket(topo, fcfg.controls, capacity=cap,
+                         n_tenants=len(tenants) + 1, k=fcfg.k,
+                         use_pallas=fcfg.use_pallas,
+                         interpret=fcfg.interpret)
+    fleet = Fleet(FleetConfig(n=len(tenants), b_max=fcfg.b_max,
+                              per_tenant_bids=fcfg.per_tenant_bids),
+                  market.engines["H100"].tree)
+    params = params_from_tenants(tenants, fcfg.duration_s)
+    return topo, tenants, market, fleet, params
+
+
+def _seed_floors(market, topo) -> None:
+    for rtype, root in topo.roots.items():
+        market.set_floor(root, ON_DEMAND.get(rtype, 2.0) * 0.7)
+
+
+def _drive_fleet(fleet, params, market, fcfg: FleetScenarioConfig,
+                 rtype: str = "H100"):
+    """The multi-tenant fleet loop: per epoch, one jitted policy, one
+    jitted engine step, one jitted transfer/advance application."""
+    import jax
+    state = fleet.init_state(params)
+    epoch_s: List[float] = []
+    clipped = 0
+    t = 0.0
+    while t <= fcfg.duration_s:
+        t0 = time.perf_counter()
+        owner_b, rate, floors = market.leaf_view(rtype)
+        limits, relinq, sel, bids, state, info = fleet.policy(
+            params, state, t, owner_b, rate, floors)
+        market.cancel_all(rtype)
+        relinq_np = np.asarray(relinq)
+        market.step_arrays(rtype, t, bids=bids, relinquish=relinq,
+                           limits=limits,
+                           explicit=set(relinq_np[relinq_np >= 0]
+                                        .tolist()))
+        owner_a = market.leaf_view(rtype)[0]
+        state, held = fleet.after_step(params, state, t, owner_b,
+                                       owner_a, sel)
+        state = fleet.advance(params, state, t, held)
+        jax.block_until_ready(state["progress"])
+        clipped += int(info["bids_clipped"])
+        epoch_s.append(time.perf_counter() - t0)
+        t += fcfg.tick_s
+    return state, epoch_s, clipped
+
+
+def _alone_perf(fleet, params, market, topo,
+                fcfg: FleetScenarioConfig) -> np.ndarray:
+    """Retention denominator — see FleetScenarioConfig.alone."""
+    from repro.sim.fleet import params_alone
+    n = fcfg.n_tenants
+    if fcfg.alone == "none":
+        return np.ones(n, np.float32)
+    if fcfg.alone == "analytic":
+        import jax.numpy as jnp
+        state = fleet.init_state(params)
+        held = jnp.zeros((n,), jnp.int32)
+        t = 0.0
+        while t <= fcfg.duration_s:
+            state, held = fleet.resize_to_desired(params, state, t, held)
+            state = fleet.advance(params, state, t, held)
+            t += fcfg.tick_s
+        return np.asarray(fleet.performance(params, state,
+                                            fcfg.duration_s))
+    assert fcfg.alone == "engine", fcfg.alone
+    out = np.ones(n, np.float32)
+    for i in range(n):
+        market.reset()
+        _seed_floors(market, topo)
+        p_i = params_alone(params, i)
+        state, _, _ = _drive_fleet(fleet, p_i, market, fcfg)
+        out[i] = float(fleet.performance(p_i, state,
+                                         fcfg.duration_s)[i])
+    return out
+
+
+def run_fleet_scenario(fcfg: FleetScenarioConfig) -> FleetRunResult:
+    """Multi-tenant fleet run (+ alone denominator) => paper-scale
+    retention under contention, with per-epoch wall times."""
+    topo, tenants, market, fleet, params = make_fleet(fcfg)
+    _seed_floors(market, topo)
+    state, epoch_s, clipped = _drive_fleet(fleet, params, market, fcfg)
+    perf = np.asarray(fleet.performance(params, state, fcfg.duration_s))
+    # snapshot BEFORE the alone runs: alone="engine" resets the market
+    # per tenant, so reading stats afterwards would report the last
+    # single-tenant run instead of the multi-tenant one
+    stats = dict(market.stats)
+    stats["bids_clipped"] = clipped
+    alone = _alone_perf(fleet, params, market, topo, fcfg)
+    retention = np.minimum(1.5, perf / np.maximum(alone, 1e-9))
+    return FleetRunResult(perf=perf, alone_perf=alone,
+                          retention=retention, epoch_s=epoch_s,
+                          stats=stats)

@@ -11,7 +11,7 @@ with the published statistical shape (see docs/DESIGN.md §7):
 from __future__ import annotations
 
 import math
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -59,6 +59,26 @@ def power_rows(seed: int, duration_s: float, cap_kw: float = 100.0,
 
     return {"rowA": row(0.55, 300.0, 0.97),
             "rowB": row(0.50, math.inf, 0.50)}
+
+
+def sample_rate_grid(rate_fns: List[Optional[Callable[[float], float]]],
+                     duration_s: float, tick_s: float = 10.0) -> np.ndarray:
+    """Sample per-tenant rate callables onto one dense piecewise-constant
+    ``(n_tenants, n_ticks)`` float32 grid for the vectorized fleet.
+
+    The grid tick matches :func:`llm_request_rate`'s internal tick
+    (default 10 s), so a fleet lookup ``grid[i, min(int(t / tick_s),
+    n_ticks - 1)]`` reproduces ``rate_fns[i](t)`` exactly at ANY time
+    ``t`` — including off-tick tenant arrivals.  ``None`` entries
+    (training/batch tenants without a rate function) sample as zeros.
+    """
+    n_ticks = int(duration_s / tick_s) + 2
+    out = np.zeros((len(rate_fns), n_ticks), np.float32)
+    for i, f in enumerate(rate_fns):
+        if f is None:
+            continue
+        out[i] = [f(k * tick_s) for k in range(n_ticks)]
+    return out
 
 
 def poisson_arrivals(seed: int, duration_s: float, mean_interarrival_s: float

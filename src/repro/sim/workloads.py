@@ -24,6 +24,9 @@ from repro.core.topology import Topology
 GPU_SPEED = {"H100": 1.0, "A100": 0.45}
 # on-demand $/h anchors [34]
 ON_DEMAND = {"H100": 4.76, "A100": 3.67}
+# dense kind codes shared with the vectorized fleet (sim/fleet.py keeps
+# one int32 array column per tenant instead of the string kind)
+KIND_IDS = {"training": 0, "inference": 1, "batch": 2}
 
 
 @dataclass

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the vectorized fleet's advance/transfer
+invariants (sim/fleet.py).
+
+Split from tests/test_fleet.py so the deterministic fleet tests run on
+environments without hypothesis installed (requirements-dev pins it).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.market_jax.engine import TreeSpec
+from repro.sim.fleet import Fleet, FleetConfig
+
+N = 4
+N_LEAVES = 16
+DURATION = 3600.0
+
+
+def _mk_fleet():
+    return Fleet(FleetConfig(n=N, b_max=32),
+                 TreeSpec(n_leaves=N_LEAVES, strides=(1, 8, 16, 16, 16)))
+
+
+def _params(rng):
+    f32 = lambda a: jnp.asarray(np.asarray(a, np.float32))  # noqa: E731
+    rates = rng.uniform(0.0, 80.0, size=(N, int(DURATION / 10) + 2))
+    return {
+        "kind": jnp.asarray(rng.integers(0, 3, N).astype(np.int32)),
+        "work": f32(rng.uniform(0.2, 4.0, N)),
+        "deadline_s": f32(rng.uniform(1200.0, DURATION, N)),
+        "checkpoint_interval_s": f32(rng.uniform(60.0, 600.0, N)),
+        "reconfig_s": f32(rng.uniform(30.0, 300.0, N)),
+        "max_nodes": jnp.asarray(rng.integers(1, 9, N).astype(np.int32)),
+        "cap_per_node": f32(rng.uniform(5.0, 15.0, N)),
+        "sla_value_per_h": f32(rng.uniform(20.0, 80.0, N)),
+        "value_per_gap": f32(rng.uniform(5.0, 40.0, N)),
+        "arrival_s": f32(rng.uniform(0.0, 600.0, N)),
+        "overhead_mult": f32(np.ones(N)),
+        "rates": f32(rates),
+    }
+
+
+schedule_strategy = st.lists(
+    st.tuples(
+        st.floats(5.0, 400.0),             # dt to the next epoch
+        st.lists(st.integers(0, N * N_LEAVES - 1),  # ownership flips
+                 min_size=0, max_size=6),
+    ), min_size=2, max_size=12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), sched=schedule_strategy)
+def test_advance_and_transfer_invariants(seed, sched):
+    """Random ownership churn + advance ticks preserve:
+    * progress never decreases across a pure advance, never < 0 overall;
+    * cumulative served <= demanded (inference);
+    * no progress/served accrues while inside a reconfiguration window;
+    * done_at is monotone (once set, it stays);
+    * desired_nodes stays within [0, max_nodes]."""
+    rng = np.random.default_rng(seed)
+    fleet = _mk_fleet()
+    params = _params(rng)
+    state = fleet.init_state(params)
+    owner = np.full(N_LEAVES, -1, np.int64)
+    held = jnp.zeros((N,), jnp.int32)
+    t = 0.0
+    for dt, flips in sched:
+        t += dt
+        owner_b = owner.copy()
+        for f in flips:
+            leaf, tid = f % N_LEAVES, f // N_LEAVES
+            owner[leaf] = -1 if owner[leaf] == tid else tid
+        sel = np.zeros(N_LEAVES, bool)   # every revoke is involuntary
+        pre = dict(state)
+        state, held = fleet.after_step(
+            params, state, t, jnp.asarray(owner_b, jnp.int32),
+            jnp.asarray(owner, jnp.int32), jnp.asarray(sel))
+        in_window = np.asarray(state["reconfig_until"]) >= t
+        mid = dict(state)
+        state = fleet.advance(params, state, t, held)
+        prog_mid = np.asarray(mid["progress"])
+        prog = np.asarray(state["progress"])
+        # transfers may waste work, advance may only add
+        assert np.all(prog >= prog_mid - 1e-5)
+        assert np.all(prog >= 0.0)
+        served = np.asarray(state["served"])
+        demanded = np.asarray(state["demanded"])
+        assert np.all(served <= demanded * (1 + 1e-5) + 1e-3)
+        # a tenant still inside its reconfiguration window gains nothing
+        # from this tick (active_dt == 0 while now <= reconfig_until)
+        stalled = in_window
+        assert np.all(prog[stalled] == prog_mid[stalled])
+        served_mid = np.asarray(mid["served"])
+        assert np.all(served[stalled] == served_mid[stalled])
+        done_pre = np.isfinite(np.asarray(pre["done_at"]))
+        done = np.isfinite(np.asarray(state["done_at"]))
+        assert np.all(done | ~done_pre)
+        want = np.asarray(fleet.desired_nodes(params, state, t))
+        maxn = np.asarray(params["max_nodes"])
+        assert np.all((want >= 0) & (want <= maxn))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_performance_bounded(seed):
+    """performance() stays in [0, 1] for any reachable state."""
+    rng = np.random.default_rng(seed)
+    fleet = _mk_fleet()
+    params = _params(rng)
+    state = fleet.init_state(params)
+    held = jnp.asarray(rng.integers(0, 8, N).astype(np.int32))
+    t = 0.0
+    for _ in range(6):
+        t += float(rng.uniform(10.0, 500.0))
+        state = fleet.advance(params, state, t, held)
+        perf = np.asarray(fleet.performance(params, state, t))
+        assert np.all((perf >= 0.0) & (perf <= 1.0 + 1e-6))
