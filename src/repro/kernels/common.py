@@ -1,0 +1,41 @@
+"""Shared backend-toggle policy for the kernel packages.
+
+Every kernel entry point takes ``interpret: Optional[bool] = None``
+where ``None`` INHERITS a single package-wide default instead of
+hard-coding one (lcheck rule LC001 — the PR 4 bug class: a
+``interpret: bool = True`` parameter default silently overrode a
+constructor's ``interpret=False`` and ran compiled engines in the
+Pallas interpreter).  The default is *auto*: interpret mode off-TPU
+(Pallas kernels cannot compile on CPU hosts), compiled on TPU.
+
+Resolution happens OUTSIDE any ``jax.jit`` boundary — ``interpret`` is
+a static argument everywhere, so resolving before the jitted call means
+flipping the process-wide default can never serve a stale cached trace.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+_DEFAULT_INTERPRET: Optional[bool] = None
+
+
+def set_default_interpret(value: Optional[bool]) -> None:
+    """Override the process-wide ``interpret`` default (``None`` restores
+    auto: interpret everywhere except on a TPU backend)."""
+    global _DEFAULT_INTERPRET
+    _DEFAULT_INTERPRET = value
+
+
+def default_interpret() -> bool:
+    """The package-wide ``interpret`` default: the explicit override if
+    one was set, else auto (True unless running on a TPU backend)."""
+    if _DEFAULT_INTERPRET is not None:
+        return _DEFAULT_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` inherits the package default; a bool wins as-is."""
+    return default_interpret() if interpret is None else bool(interpret)

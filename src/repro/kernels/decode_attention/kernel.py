@@ -62,8 +62,8 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 def decode_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                             pos: jax.Array, window: int = 0,
-                            block_s: int = 512,
-                            interpret: bool = True) -> jax.Array:
+                            block_s: int = 512, *,
+                            interpret: bool) -> jax.Array:
     """q: (B, K, G, hd); k/v: (B, S, K, hd); returns (B, K, G, hd)."""
     B, S, K, hd = k.shape
     G = q.shape[2]

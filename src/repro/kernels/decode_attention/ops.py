@@ -2,20 +2,36 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.decode_attention.kernel import decode_attention_pallas
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
 
+def decode_attention(q, k, v, pos, *, window: int = 0,
+                     use_pallas: bool = False,
+                     interpret: Optional[bool] = None,
+                     block_s: int = 512):
+    """q: (B, K, G, hd); k/v: (B, S, K, hd); pos scalar int32.
+
+    ``interpret=None`` inherits the package default
+    (``repro.kernels.common`` — interpret mode off-TPU, compiled on
+    TPU); resolution happens before the jit boundary so the default can
+    be flipped without serving a stale cached trace."""
+    return _decode_attention(q, k, v, pos, window=window,
+                             use_pallas=use_pallas,
+                             interpret=resolve_interpret(interpret),
+                             block_s=block_s)
+
+
 @functools.partial(jax.jit, static_argnames=("window", "use_pallas",
                                              "interpret", "block_s"))
-def decode_attention(q, k, v, pos, *, window: int = 0,
-                     use_pallas: bool = False, interpret: bool = True,
-                     block_s: int = 512):
-    """q: (B, K, G, hd); k/v: (B, S, K, hd); pos scalar int32."""
+def _decode_attention(q, k, v, pos, *, window: int, use_pallas: bool,
+                      interpret: bool, block_s: int):
     if use_pallas:
         return decode_attention_pallas(q, k, v, pos, window=window,
                                        block_s=block_s,

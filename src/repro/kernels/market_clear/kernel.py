@@ -209,7 +209,7 @@ def clear_pallas(pk: jax.Array, tk: jax.Array, sk: jax.Array,
                  level_floor: Sequence[jax.Array],
                  level_off: Sequence[int], strides: Sequence[int],
                  owner: jax.Array, limit: jax.Array, *,
-                 block: int = 512, interpret: bool = True
+                 block: int = 512, interpret: bool
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                             jax.Array]:
     """Sorted-slab hierarchical path-merge clearing pass.

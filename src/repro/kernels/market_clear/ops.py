@@ -15,25 +15,42 @@ both backends, is::
 with ``cand_slots`` LEAF-MAJOR (n_leaves, k+1), ranked (price desc,
 seq asc) along the last axis with -1 holes at excluded/sub-floor ranks
 — no transposes or backend special-casing for callers.
+
+``interpret=None`` inherits the package default
+(``repro.kernels.common``); ``BatchEngine`` always passes its
+constructor-resolved setting explicitly, so an engine built for
+compiled mode can never be silently dropped into the interpreter by a
+callee default (lcheck rule LC001, the PR 4 bug class).
 """
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.market_clear import ref as R
 from repro.kernels.market_clear.kernel import clear_pallas
 
 
-@functools.partial(jax.jit, static_argnames=(
-    "level_off", "strides", "k", "use_pallas", "interpret", "block"))
 def clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
           level_floor, level_off: Tuple[int, ...],
           strides: Tuple[int, ...], owner, limit, k: int, *,
-          use_pallas: bool = False, interpret: bool = True,
+          use_pallas: bool = False, interpret: Optional[bool] = None,
           block: int = 512):
+    return _clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
+                  level_floor, level_off, strides, owner, limit, k,
+                  use_pallas=use_pallas,
+                  interpret=resolve_interpret(interpret), block=block)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "level_off", "strides", "k", "use_pallas", "interpret", "block"))
+def _clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
+           level_floor, level_off: Tuple[int, ...],
+           strides: Tuple[int, ...], owner, limit, k: int, *,
+           use_pallas: bool, interpret: bool, block: int):
     n_seg = seg_start.shape[0] - 1
     aggs = R._prefix_aggregates(order, sorted_gseg, seg_start, prices,
                                 tenants, seqs, n_seg, k)

@@ -43,7 +43,7 @@ def _route_kernel(logits_ref, w_ref, i_ref, *, k: int, E: int,
 
 
 def route_pallas(logits: jax.Array, k: int, renormalize: bool = True,
-                 block_t: int = 256, interpret: bool = True):
+                 block_t: int = 256, *, interpret: bool):
     T, E = logits.shape
     Epad = -(-E // 128) * 128
     if Epad != E:

@@ -2,19 +2,31 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.moe_route.kernel import route_pallas
 from repro.kernels.moe_route.ref import route_ref
+
+
+def route(logits, *, k: int, renormalize: bool = True,
+          use_pallas: bool = False, interpret: Optional[bool] = None,
+          block_t: int = 256):
+    """``interpret=None`` inherits the package default
+    (``repro.kernels.common``), resolved before the jit boundary."""
+    return _route(logits, k=k, renormalize=renormalize,
+                  use_pallas=use_pallas,
+                  interpret=resolve_interpret(interpret),
+                  block_t=block_t)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "renormalize",
                                              "use_pallas", "interpret",
                                              "block_t"))
-def route(logits, *, k: int, renormalize: bool = True,
-          use_pallas: bool = False, interpret: bool = True,
-          block_t: int = 256):
+def _route(logits, *, k: int, renormalize: bool, use_pallas: bool,
+           interpret: bool, block_t: int):
     if use_pallas:
         return route_pallas(logits, k, renormalize, block_t=block_t,
                             interpret=interpret)

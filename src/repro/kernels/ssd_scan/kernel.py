@@ -54,8 +54,8 @@ def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, fs_ref,
         fs_ref[0] = state_ref[...]
 
 
-def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, block_h: int = 16,
-                    interpret: bool = True):
+def ssd_scan_pallas(x, dt, A, Bm, Cm, chunk: int, block_h: int = 16, *,
+                    interpret: bool):
     """x: (B,S,H,P) any float dtype; dt: (B,S,H) f32; A: (H,) f32;
     Bm/Cm: (B,S,N). Returns (y (B,S,H,P), final_state (B,H,P,N) f32)."""
     B, S, H, P = x.shape

@@ -2,18 +2,30 @@
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 
+from repro.kernels.common import resolve_interpret
 from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
 from repro.kernels.ssd_scan.ref import ssd_scan_ref
 
 
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
+             use_pallas: bool = False,
+             interpret: Optional[bool] = None, block_h: int = 16):
+    """``interpret=None`` inherits the package default
+    (``repro.kernels.common``), resolved before the jit boundary."""
+    return _ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                     use_pallas=use_pallas,
+                     interpret=resolve_interpret(interpret),
+                     block_h=block_h)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk", "use_pallas",
                                              "interpret", "block_h"))
-def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 256,
-             use_pallas: bool = False, interpret: bool = True,
-             block_h: int = 16):
+def _ssd_scan(x, dt, A, Bm, Cm, *, chunk: int, use_pallas: bool,
+              interpret: bool, block_h: int):
     if use_pallas:
         return ssd_scan_pallas(x, dt, A, Bm, Cm, chunk, block_h=block_h,
                                interpret=interpret)

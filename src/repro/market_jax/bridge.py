@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from repro.core.market import OPERATOR, TICK, VisibilityError, \
     VolatilityControls
 from repro.core.topology import Topology
+from repro.market_jax import schema
 from repro.market_jax.engine import NEG, BatchEngine, TreeSpec
 
 
@@ -68,7 +69,8 @@ class BatchMarket:
     def __init__(self, topo: Topology,
                  controls: Optional[VolatilityControls] = None,
                  capacity: int = 1 << 12, n_tenants: int = 256,
-                 use_pallas: bool = False, interpret: bool = True,
+                 use_pallas: bool = False,
+                 interpret: Optional[bool] = None,
                  k: int = 8) -> None:
         self.topo = topo
         self.controls = controls or VolatilityControls()
@@ -167,6 +169,7 @@ class BatchMarket:
                                     new_bids, floors, relinquish)
         self.states[rtype] = st
         self._np[rtype] = None
+        schema.maybe_validate(st, eng, where=f"{rtype} state")
         self._fire(rtype, transfers, explicit)
 
     def _fire(self, rtype: str, transfers, explicit: Set[int]) -> None:
@@ -243,6 +246,7 @@ class BatchMarket:
                                     None, relinquish, limits)
         self.states[rtype] = st
         self._np[rtype] = None
+        schema.maybe_validate(st, eng, where=f"{rtype} state")
         if bids is not None:
             self.stats["orders"] += int(
                 np.sum(np.asarray(bids["tenant"]) >= 0))

@@ -88,6 +88,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.market import VolatilityControls
+from repro.kernels.common import resolve_interpret
 from repro.kernels.market_clear import ref as R
 from repro.kernels.market_clear import ops as clear_ops
 
@@ -114,13 +115,16 @@ class BatchEngine:
     def __init__(self, tree: TreeSpec, capacity: int = 1 << 16,
                  use_pallas: bool = False, n_tenants: int = 1024,
                  controls: Optional[VolatilityControls] = None,
-                 interpret: bool = True, k: int = 8) -> None:
+                 interpret: Optional[bool] = None, k: int = 8) -> None:
         self.tree = tree
         self.capacity = capacity
         self.use_pallas = use_pallas
         self.n_tenants = n_tenants
         self.controls = controls or VolatilityControls()
-        self.interpret = interpret
+        # None = the package default (interpret off-TPU, compiled on
+        # TPU) — resolved once here; every clearing entry point then
+        # inherits the resolved constructor setting (lcheck LC001)
+        self.interpret = resolve_interpret(interpret)
         self.k = max(1, int(k))   # contested claims resolved per wave
         # global segment layout: segment id of (level d, node i) is
         # level_off[d] + i; n_seg_total is the dead-slot sentinel
@@ -542,10 +546,13 @@ class BatchEngine:
         if self.controls.min_holding_s > 0:
             state = self._cascade(state, t, no_release)
         # 2b) batched retention-limit refresh (NaN = no change), before
-        #     this step's events so the subsequent cascade sees them
+        #     this step's events so the subsequent cascade sees them.
+        #     Masked to owned leaves: Market.set_retention_limit asserts
+        #     ownership, and unowned leaves must keep limit = +inf
         if limits is not None:
-            state["limit"] = jnp.where(jnp.isnan(limits),
-                                       state["limit"], limits)
+            state["limit"] = jnp.where(
+                jnp.isnan(limits) | (state["owner"] < 0),
+                state["limit"], limits)
         # 3) operator floor updates, drops bounded by floor_fall_rate
         if floor_updates is not None:
             fall = self.controls.floor_fall_rate

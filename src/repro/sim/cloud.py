@@ -195,11 +195,12 @@ class LaissezCloud(CloudBase):
 # ---------------------------------------------------------------------------
 class LaissezBatchCloud(LaissezCloud):
     # class-level backend toggles so scenario code can flip the whole
-    # fleet onto the Pallas clearing kernel (interpret on CPU; set
-    # interpret=False on real TPU hosts), plus sizing knobs so bigger
-    # scenarios can grow the bid table / tenant table / cascade width
+    # fleet onto the Pallas clearing kernel (interpret=None inherits
+    # the package default: interpret on CPU, compiled on real TPU
+    # hosts), plus sizing knobs so bigger scenarios can grow the bid
+    # table / tenant table / cascade width
     use_pallas = False
-    interpret = True
+    interpret: Optional[bool] = None
     capacity = 1 << 12
     n_tenants = 256
     k = 8

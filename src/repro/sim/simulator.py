@@ -189,7 +189,7 @@ class FleetScenarioConfig:
     b_max: int = 1024               # bid-batch capacity per epoch
     per_tenant_bids: int = 8
     use_pallas: bool = False
-    interpret: bool = True
+    interpret: Optional[bool] = None    # None = package default
     alone: str = "analytic"         # retention denominator:
     #   "analytic" — uncontended counterfactual, one vectorized run
     #   "engine"   — per-tenant alone runs through the engine (toy scale)

@@ -14,6 +14,7 @@ import pytest
 
 from repro.core.market import Market, OPERATOR, VolatilityControls
 from repro.core.topology import build_cluster
+from repro.market_jax import schema
 from repro.market_jax.bridge import BatchMarket
 
 TENANTS = [f"t{i}" for i in range(5)]
@@ -62,6 +63,11 @@ def replay(topo, controls, seed, n_events=220, check_every=1,
 
         if step % check_every:
             continue
+        # full state-contract check (docs/DESIGN.md §9) on the live
+        # batch state — every invariant must hold after every event
+        for rtype, eng in bm.engines.items():
+            schema.validate_state(bm.states[rtype], eng,
+                                  where=f"step {step} ({kind})")
         for leaf in leaves:
             assert ev.owner_of(leaf) == bm.owner_of(leaf), \
                 (step, kind, leaf, ev.owner_of(leaf), bm.owner_of(leaf))

@@ -359,3 +359,92 @@ def test_clear_sorted_slate_matches_bruteforce():
             assert len(elig) == len(got), (leaf, got, elig)
         if len(elig) > cands.shape[0]:
             assert trunc[leaf] == 1, (leaf, len(elig))
+
+
+# ---------------------------------------------------------------------------
+# interpret=None-inherits regression (lcheck LC001): every kernel op's
+# public entry must resolve the backend mode through the PACKAGE default
+# on each call — a hard bool default in the signature (the old
+# ``interpret: bool = True``) would silently pin the mode and override
+# ``set_default_interpret``.
+# ---------------------------------------------------------------------------
+class TestKernelInterpretInheritance:
+    def _spy(self, monkeypatch, module):
+        """Record what each public op passes to resolve_interpret and
+        what comes back (resolution is OUTSIDE the jit boundary, so
+        the spy observes every call, cached trace or not)."""
+        from repro.kernels import common
+        seen = []
+
+        def spy(interpret):
+            out = common.resolve_interpret(interpret)
+            seen.append((interpret, out))
+            return out
+
+        monkeypatch.setattr(f"{module}.resolve_interpret", spy)
+        return seen
+
+    def _call(self, op):
+        if op == "decode_attention":
+            q = jnp.zeros((1, 2, 2, 8), jnp.float32)
+            kv = jnp.zeros((1, 16, 2, 8), jnp.float32)
+            return lambda **kw: decode_attention(
+                q, kv, kv, jnp.int32(4), **kw)
+        if op == "route":
+            return lambda **kw: route(jnp.zeros((8, 4), jnp.float32),
+                                      k=2, **kw)
+        x = jnp.zeros((1, 8, 2, 4), jnp.float32)
+        dt = jnp.ones((1, 8, 2), jnp.float32)
+        A = -jnp.ones((2,), jnp.float32)
+        Bm = jnp.zeros((1, 8, 4), jnp.float32)
+        return lambda **kw: ssd_scan(x, dt, A, Bm, Bm, chunk=4, **kw)
+
+    @pytest.mark.parametrize("op,module", [
+        ("decode_attention", "repro.kernels.decode_attention.ops"),
+        ("route", "repro.kernels.moe_route.ops"),
+        ("ssd_scan", "repro.kernels.ssd_scan.ops"),
+    ])
+    def test_default_inherits_package_setting(self, monkeypatch, op,
+                                              module):
+        from repro.kernels import common
+        seen = self._spy(monkeypatch, module)
+        call = self._call(op)
+        call()                                   # None -> package default
+        call(interpret=False)                    # explicit wins
+        monkeypatch.setattr(common, "_DEFAULT_INTERPRET", True)
+        call()                                   # flipped default honored
+        assert [s[0] for s in seen] == [None, False, None]
+        assert seen[1][1] is False
+        assert seen[2][1] is True                # no stale pinned mode
+
+    def test_resolve_interpret_contract(self, monkeypatch):
+        from repro.kernels import common
+        monkeypatch.setattr(common, "_DEFAULT_INTERPRET", None)
+        # auto mode: interpreter everywhere except real TPU hosts
+        assert common.resolve_interpret(None) == \
+            (jax.default_backend() != "tpu")
+        assert common.resolve_interpret(True) is True
+        assert common.resolve_interpret(False) is False
+        common.set_default_interpret(False)
+        try:
+            assert common.resolve_interpret(None) is False
+            assert common.resolve_interpret(True) is True
+        finally:
+            common.set_default_interpret(None)
+
+    def test_kernel_entry_points_have_no_bool_interpret_default(self):
+        """The lint rule's contract, enforced directly on the live
+        signatures: no kernel entry point may hard-default interpret."""
+        import inspect
+        from repro.kernels.decode_attention.kernel import \
+            decode_attention_pallas
+        from repro.kernels.moe_route.kernel import route_pallas
+        from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+        from repro.kernels.market_clear.kernel import clear_pallas
+        for fn in (decode_attention, route, ssd_scan, clear,
+                   decode_attention_pallas, route_pallas,
+                   ssd_scan_pallas, clear_pallas):
+            p = inspect.signature(fn).parameters.get("interpret")
+            assert p is not None, fn.__name__
+            assert not isinstance(p.default, bool), \
+                f"{fn.__name__} hard-defaults interpret={p.default}"

@@ -1,0 +1,150 @@
+"""lcheck self-tests: every rule demonstrably fires on its fixture and
+stays silent on the current tree (docs/DESIGN.md §9).
+
+The firing tests are the negative controls the rule catalog requires:
+a refactor that silently stops LC003 from detecting the PR 2
+ring-cursor overwrite fails here, not in production.
+"""
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.lcheck.links import check_links          # noqa: E402
+from tools.lcheck.rules import (RULES, check_paths,  # noqa: E402
+                                check_source)
+
+FIXDIR = ROOT / "tools" / "lcheck" / "fixtures"
+
+
+# ---------------------------------------------------------------- firing
+class TestRuleFiring:
+    """Each LC rule fires on its fixture — and ONLY that rule."""
+
+    @pytest.mark.parametrize("rule,n_expected", [
+        ("LC001", 2),   # method + kw-only hard bool default
+        ("LC002", 3),   # np.asarray, .item(), float()
+        ("LC003", 2),   # price + tenant unguarded scatters
+        ("LC004", 2),   # jnp.zeros / jnp.array without dtype
+        ("LC005", 2),   # traced branch + unhashable static default
+    ])
+    def test_fixture_fires(self, rule, n_expected):
+        src = (FIXDIR / f"fixture_{rule.lower()}.py").read_text()
+        vs = check_source(src, f"fixture_{rule.lower()}.py")
+        assert {v.rule for v in vs} == {rule}, \
+            f"expected only {rule}, got {[str(v) for v in vs]}"
+        assert len(vs) == n_expected, [str(v) for v in vs]
+
+    def test_every_rule_has_a_fixture_or_link_test(self):
+        ast_rules = set(RULES) - {"LC006"}
+        have = {f"LC{p.stem[-3:]}".upper()
+                for p in FIXDIR.glob("fixture_lc*.py")}
+        assert have == ast_rules
+
+    def test_violation_str_mentions_rule_and_location(self):
+        vs = check_source("def f(interpret: bool = True): pass", "x.py")
+        assert len(vs) == 1
+        assert "x.py:1" in str(vs[0]) and "LC001" in str(vs[0])
+
+
+# ----------------------------------------------------------- suppression
+class TestSuppression:
+    def test_line_pragma(self):
+        src = ("def f(interpret: bool = True):"
+               "  # lcheck: disable=LC001\n    pass\n")
+        assert check_source(src, "x.py") == []
+
+    def test_line_pragma_other_rule_still_fires(self):
+        src = ("def f(interpret: bool = True):"
+               "  # lcheck: disable=LC003\n    pass\n")
+        assert [v.rule for v in check_source(src, "x.py")] == ["LC001"]
+
+    def test_file_pragma(self):
+        src = ("# lcheck: file-disable=LC001\n"
+               "def f(interpret: bool = True): pass\n"
+               "def g(interpret: bool = False): pass\n")
+        assert check_source(src, "x.py") == []
+
+    def test_select_filters(self):
+        src = (FIXDIR / "fixture_lc002.py").read_text()
+        assert check_source(src, "x.py", select={"LC004"}) == []
+
+
+# ------------------------------------------------------------ clean tree
+class TestCleanTree:
+    """The acceptance bar: lcheck exits 0 on the final tree."""
+
+    def test_src_and_benchmarks_clean(self):
+        vs = check_paths([str(ROOT / "src"), str(ROOT / "benchmarks")])
+        assert vs == [], [str(v) for v in vs]
+
+    def test_docs_links_clean(self):
+        vs = check_links(ROOT)
+        assert vs == [], [str(v) for v in vs]
+
+
+# ----------------------------------------------------------------- LC006
+class TestDocsLinks:
+    def _tree(self, tmp_path, readme, design="## §3 Stuff\n"):
+        (tmp_path / "docs").mkdir()
+        (tmp_path / "docs" / "DESIGN.md").write_text(design)
+        (tmp_path / "README.md").write_text(readme)
+        (tmp_path / "src").mkdir()
+        return tmp_path
+
+    def test_broken_relative_link_fires(self, tmp_path):
+        root = self._tree(tmp_path, "see [gone](docs/NOPE.md)\n")
+        vs = check_links(root)
+        assert len(vs) == 1 and vs[0].rule == "LC006"
+        assert "NOPE.md" in vs[0].message
+
+    def test_stale_section_citation_fires(self, tmp_path):
+        root = self._tree(tmp_path, "hello\n")
+        # split so this test file itself doesn't cite a §99 section
+        (root / "src" / "m.py").write_text(
+            "# see docs/DESIGN" + ".md §99 for the contract\n")
+        vs = check_links(root)
+        assert len(vs) == 1 and vs[0].rule == "LC006"
+        assert "§99" in vs[0].message
+
+    def test_valid_tree_passes(self, tmp_path):
+        root = self._tree(
+            tmp_path, "see [design](docs/DESIGN.md) and "
+                      "[web](https://example.com) and [anchor](#x)\n")
+        (root / "src" / "m.py").write_text(
+            "# see docs/DESIGN.md §3 for the contract\n")
+        assert check_links(root) == []
+
+
+# ------------------------------------------------------------------- CLI
+class TestCli:
+    def test_fixtures_fail_the_cli(self, capsys):
+        from tools.lcheck.__main__ import main
+        rc = main(["--no-links", "--no-contracts", str(FIXDIR)])
+        assert rc == 1
+        err = capsys.readouterr().err
+        for rule in sorted(set(RULES) - {"LC006"}):
+            assert rule in err
+
+    def test_unknown_rule_id_rejected(self, capsys):
+        from tools.lcheck.__main__ import main
+        assert main(["--select", "LC999", "x.py"]) == 2
+
+    def test_clean_tree_passes_ast_and_links(self, capsys):
+        from tools.lcheck.__main__ import main
+        rc = main(["--no-contracts", str(ROOT / "src"),
+                   str(ROOT / "benchmarks")])
+        assert rc == 0
+        assert "lcheck passed" in capsys.readouterr().out
+
+
+# -------------------------------------------------- eval_shape contracts
+class TestContracts:
+    def test_all_entry_point_contracts_hold(self):
+        """jax.eval_shape over every public jitted entry point (engine,
+        both ops.clear backends, fleet) against the declared schema."""
+        from tools.lcheck.contracts import check_contracts
+        assert check_contracts() == []

@@ -1,0 +1,198 @@
+"""Property tests for the declared engine state contract
+(``repro.market_jax.schema``, docs/DESIGN.md §9): after ANY sequence of
+public engine ops — place / cancel / cancel_all / step (with bids,
+floor updates, relinquishes, limit refreshes) — every declared
+invariant must hold, on BOTH clearing backends.
+
+Requires hypothesis (see requirements-dev.txt).  The deterministic
+self-tests of the checker (it fires on corrupted states) run
+unconditionally below the property block.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.market_jax import schema
+from repro.market_jax.engine import BatchEngine, build_tree, NEG
+
+# module-level engines so jitted graphs compile once across examples
+# (the jit cache is keyed on the engine instance)
+_TREE = build_tree(64)
+_ENGINES = {
+    "jnp": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4),
+    "pallas": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                          use_pallas=True),
+}
+
+
+def _random_op(eng, state, rng, t):
+    """One random public-op application; returns (state, t)."""
+    tree = eng.tree
+    kind = rng.choice(["place", "cancel", "cancel_all", "step"],
+                      p=[0.35, 0.1, 0.05, 0.5])
+    if kind == "place":
+        b = 16     # fixed batch => one jitted place trace per engine
+        levels = rng.integers(0, tree.n_levels, b).astype(np.int32)
+        nodes = np.array([rng.integers(0, tree.nodes_at(d))
+                          for d in levels], np.int32)
+        prices = rng.uniform(0.5, 9.0, b).astype(np.float32)
+        tenants = rng.integers(-1, eng.n_tenants, b).astype(np.int32)
+        limits = (prices * rng.uniform(1.0, 1.5, b)).astype(np.float32)
+        state = eng.place(state, jnp.array(prices), jnp.array(levels),
+                          jnp.array(nodes), jnp.array(tenants),
+                          jnp.array(limits))
+    elif kind == "cancel":
+        ids = rng.integers(0, eng.capacity, 8).astype(np.int32)
+        state = eng.cancel(state, jnp.array(ids))
+    elif kind == "cancel_all":
+        state = eng.cancel_all(state)
+    else:
+        t += float(rng.uniform(1.0, 900.0))
+        b = 8
+        new_bids = None
+        if rng.random() < 0.7:
+            levels = rng.integers(0, tree.n_levels, b).astype(np.int32)
+            new_bids = {
+                "price": jnp.array(
+                    rng.uniform(0.5, 9.0, b).astype(np.float32)),
+                "limit": jnp.array(
+                    rng.uniform(0.5, 14.0, b).astype(np.float32)),
+                "level": jnp.array(levels),
+                "node": jnp.array(
+                    [rng.integers(0, tree.nodes_at(d))
+                     for d in levels], dtype=jnp.int32),
+                "tenant": jnp.array(
+                    rng.integers(-1, eng.n_tenants, b), dtype=jnp.int32),
+            }
+        floor_updates = None
+        if rng.random() < 0.3:
+            floor_updates = tuple(
+                jnp.array(np.where(
+                    rng.random(tree.nodes_at(d)) < 0.2,
+                    rng.uniform(0.0, 6.0, tree.nodes_at(d)),
+                    -1.0).astype(np.float32))
+                for d in range(tree.n_levels))
+        relinquish = None
+        if rng.random() < 0.3:
+            relinquish = jnp.array(
+                rng.integers(-1, tree.n_leaves, 4), dtype=jnp.int32)
+        limits = None
+        if rng.random() < 0.3:
+            lim = rng.uniform(1.0, 20.0, tree.n_leaves)
+            lim = np.where(rng.random(tree.n_leaves) < 0.8, np.nan, lim)
+            limits = jnp.array(lim.astype(np.float32))
+        state, _, _ = eng.step(state, t, new_bids, floor_updates,
+                               relinquish, limits)
+    return state, t
+
+
+def _run_trace(eng, seed, n_ops=25):
+    rng = np.random.default_rng(seed)
+    state = eng.init_state()
+    schema.validate_state(state, eng, where="init")
+    t = 0.0
+    for i in range(n_ops):
+        state, t = _random_op(eng, state, rng, t)
+        schema.validate_state(state, eng, where=f"op {i}")
+
+
+# ------------------------------------------------------------- properties
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                    # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_invariants_hold_after_arbitrary_ops_jnp(seed):
+        _run_trace(_ENGINES["jnp"], seed)
+
+    @settings(max_examples=4, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_invariants_hold_after_arbitrary_ops_pallas(seed):
+        """Same property through the Pallas clearing kernel (interpret
+        mode inherits the package default — interpreter off-TPU)."""
+        _run_trace(_ENGINES["pallas"], seed, n_ops=12)
+else:
+    @pytest.mark.parametrize("backend,seed", [("jnp", 0), ("jnp", 7),
+                                              ("pallas", 0)])
+    def test_invariants_hold_after_arbitrary_ops(backend, seed):
+        """Fixed-seed fallback when hypothesis isn't installed — the
+        invariant property still gets exercised on both backends."""
+        _run_trace(_ENGINES[backend], seed,
+                   n_ops=25 if backend == "jnp" else 12)
+
+
+# -------------------------------------------- the checker checks itself
+class TestCheckerFires:
+    """Corrupted states must be REJECTED — a validator that never fires
+    proves nothing."""
+
+    def _fresh(self):
+        eng = _ENGINES["jnp"]
+        state, _, _ = eng.step(eng.init_state(), 10.0, None, None, None)
+        return eng, dict(state)
+
+    def test_clean_state_passes(self):
+        eng, state = self._fresh()
+        schema.validate_state(state, eng)
+
+    def test_static_catches_dtype_drift(self):
+        eng, state = self._fresh()
+        state["seq"] = state["seq"].astype(jnp.float32)
+        with pytest.raises(AssertionError, match="seq"):
+            schema.validate_state(state, eng)
+
+    def test_static_catches_missing_key(self):
+        eng, state = self._fresh()
+        del state["waves"]
+        with pytest.raises(AssertionError, match="waves"):
+            schema.validate_state(state, eng)
+
+    def test_static_catches_shape_drift(self):
+        eng, state = self._fresh()
+        state["bills"] = jnp.zeros((3,), jnp.float32)
+        with pytest.raises(AssertionError, match="bills"):
+            schema.validate_state(state, eng)
+
+    def test_runtime_catches_hole_convention(self):
+        eng, state = self._fresh()
+        # a "live" tenant on a dead (NEG-priced) slot
+        state["tenant"] = state["tenant"].at[0].set(3)
+        state["price"] = state["price"].at[0].set(NEG)
+        with pytest.raises(Exception, match="hole convention"):
+            schema.validate_state(state, eng)
+
+    def test_runtime_catches_broken_permutation(self):
+        eng, state = self._fresh()
+        state["order"] = state["order"].at[0].set(state["order"][1])
+        with pytest.raises(Exception, match="permutation"):
+            schema.validate_state(state, eng)
+
+    def test_runtime_catches_seq_overrun(self):
+        eng, state = self._fresh()
+        # a live entry stamped beyond the arrival counter
+        b = int(jnp.argmax(state["tenant"] >= 0))
+        if int(state["tenant"][b]) < 0:
+            pytest.skip("no live entries in fixture")
+        state["seq"] = state["seq"].at[b].set(state["next_seq"] + 5)
+        with pytest.raises(Exception, match="seq"):
+            schema.validate_state(state, eng)
+
+    def test_runtime_catches_unowned_limit(self):
+        eng, state = self._fresh()
+        state["owner"] = state["owner"].at[0].set(-1)
+        state["limit"] = state["limit"].at[0].set(3.0)
+        with pytest.raises(Exception, match="limit"):
+            schema.validate_state(state, eng)
+
+    def test_maybe_validate_is_env_gated(self, monkeypatch):
+        eng, state = self._fresh()
+        state["bills"] = jnp.zeros((3,), jnp.float32)   # corrupt
+        monkeypatch.delenv(schema.VALIDATE_ENV, raising=False)
+        schema.maybe_validate(state, eng)               # no-op
+        monkeypatch.setenv(schema.VALIDATE_ENV, "1")
+        with pytest.raises(AssertionError):
+            schema.maybe_validate(state, eng)

@@ -1,69 +1,28 @@
 #!/usr/bin/env python
-"""Docs link check (CI): README/DESIGN cross-references must not rot.
+"""Docs link check — thin shim over lcheck rule LC006.
 
-Two checks, repo-rooted (run from anywhere):
-
-1. every relative markdown link target in README.md and docs/*.md
-   exists on disk (http(s)/mailto/pure-anchor links are skipped);
-2. every ``docs/DESIGN.md §<tag>`` citation anywhere in the source
-   tree (src/, tests/, benchmarks/, docs/, README.md) names a section
-   heading that actually exists in docs/DESIGN.md — the sections are a
-   stable contract (see the DESIGN.md preamble), so a renumber without
-   a citation sweep fails CI here.
-
-Exit code 0 = clean, 1 = stale references (each one listed).
+The check moved into ``tools/lcheck/links.py`` so CI has a single
+entry point (``python -m tools.lcheck``); this wrapper keeps the old
+command (and any local muscle memory) working.  Exit code 0 = clean,
+1 = stale references (each one listed).
 """
 from __future__ import annotations
 
 import pathlib
-import re
 import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
-LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
-CITE_RE = re.compile(r"docs/DESIGN\.md[,;]?\s+(?:§|Appendix\s+)"
-                     r"([0-9A-Za-z-]+)")
-SECTION_RE = re.compile(r"^##\s+(?:§|Appendix\s+)([0-9A-Za-z-]+)",
-                        re.MULTILINE)
-SOURCE_GLOBS = ("src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
-                "tools/**/*.py", "docs/*.md", "README.md")
-
 
 def main() -> int:
-    failures = []
-    # 1) markdown link targets
-    md_files = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
-    for md in md_files:
-        if not md.exists():
-            continue
-        for target in LINK_RE.findall(md.read_text()):
-            if target.startswith(("http://", "https://", "mailto:", "#")):
-                continue
-            path = (md.parent / target.split("#", 1)[0]).resolve()
-            if not path.exists():
-                failures.append(f"{md.relative_to(ROOT)}: broken link "
-                                f"-> {target}")
-    # 2) DESIGN.md section citations
-    design = ROOT / "docs" / "DESIGN.md"
-    sections = set(SECTION_RE.findall(design.read_text())) \
-        if design.exists() else set()
-    for pattern in SOURCE_GLOBS:
-        for f in sorted(ROOT.glob(pattern)):
-            if f == design:      # the preamble defines the §N convention
-                continue
-            for tag in CITE_RE.findall(f.read_text(errors="replace")):
-                if tag not in sections:
-                    failures.append(
-                        f"{f.relative_to(ROOT)}: cites docs/DESIGN.md "
-                        f"§{tag} but DESIGN.md has sections "
-                        f"{sorted(sections)}")
+    sys.path.insert(0, str(ROOT))
+    from tools.lcheck.links import check_links
+    failures = check_links(ROOT)
     if failures:
-        print("\n".join(["DOCS LINK CHECK FAILED:"] + failures),
-              file=sys.stderr)
+        print("\n".join(["DOCS LINK CHECK FAILED:"]
+                        + [str(f) for f in failures]), file=sys.stderr)
         return 1
-    print(f"docs link check passed ({len(md_files)} md files, "
-          f"sections: {sorted(sections)})")
+    print("docs link check passed (via tools.lcheck LC006)")
     return 0
 
 

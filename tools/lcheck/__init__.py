@@ -1,0 +1,17 @@
+"""lcheck — repo-specific static analysis + engine state-contract
+verification (docs/DESIGN.md §9).
+
+Three layers, one entry point (``python -m tools.lcheck``):
+
+* AST lint rules LC001–LC005 (``tools.lcheck.rules``), each distilled
+  from a bug this repo actually shipped;
+* docs cross-reference check LC006 (``tools.lcheck.links``), absorbed
+  from the old ``tools/check_docs_links.py``;
+* state-contract verification (``tools.lcheck.contracts``):
+  ``jax.eval_shape`` over every public jitted entry point against the
+  declared schema in ``repro.market_jax.schema``.
+"""
+from tools.lcheck.rules import (RULES, Violation, check_paths,
+                                check_source)
+
+__all__ = ["RULES", "Violation", "check_paths", "check_source"]

@@ -1,0 +1,84 @@
+"""CLI: ``python -m tools.lcheck [paths...]``.
+
+Runs all three lcheck layers by default (AST rules over the given
+paths, the LC006 docs cross-reference check, and the eval_shape
+state-contract verification) and exits non-zero if anything fires.
+CI's lcheck job is exactly ``python -m tools.lcheck src benchmarks``.
+
+Flags:
+  --select LC001,LC003   run only these AST rules
+  --no-links             skip the LC006 docs check
+  --no-contracts         skip the eval_shape contract layer (e.g. when
+                         linting a tree without a working jax install)
+  --list-rules           print the rule catalog and exit
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.lcheck")
+    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+                    help="files/dirs for the AST rules "
+                         "(default: src benchmarks)")
+    ap.add_argument("--select", default=None,
+                    help="comma-separated rule ids (AST layer only)")
+    ap.add_argument("--no-links", action="store_true")
+    ap.add_argument("--no-contracts", action="store_true")
+    ap.add_argument("--list-rules", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(__file__).resolve().parents[2]
+    sys.path.insert(0, str(root / "src"))
+
+    from tools.lcheck.rules import RULES, check_paths
+    if args.list_rules:
+        for rid, desc in sorted(RULES.items()):
+            print(f"{rid}: {desc}")
+        return 0
+
+    select = set(args.select.split(",")) if args.select else None
+    unknown = (select or set()) - set(RULES)
+    if unknown:
+        print(f"unknown rule id(s): {sorted(unknown)}",
+              file=sys.stderr)
+        return 2
+
+    failures = []
+    paths = args.paths or ["src", "benchmarks"]
+    violations = check_paths(paths, select)
+    failures.extend(str(v) for v in violations)
+    n_ast = len(violations)
+
+    n_links = 0
+    if not args.no_links and (select is None or "LC006" in select):
+        from tools.lcheck.links import check_links
+        link_violations = check_links(root)
+        failures.extend(str(v) for v in link_violations)
+        n_links = len(link_violations)
+
+    n_contracts = 0
+    if not args.no_contracts and select is None:
+        from tools.lcheck.contracts import check_contracts
+        problems = check_contracts()
+        failures.extend(f"contract: {p}" for p in problems)
+        n_contracts = len(problems)
+
+    if failures:
+        print("\n".join(["LCHECK FAILED:"] + failures), file=sys.stderr)
+        return 1
+    layers = [f"ast[{','.join(sorted(select))}]" if select else "ast"]
+    if not args.no_links and (select is None or "LC006" in select):
+        layers.append("links")
+    if not args.no_contracts and select is None:
+        layers.append("contracts")
+    print(f"lcheck passed ({'+'.join(layers)}; paths={paths}; "
+          f"0 violations)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

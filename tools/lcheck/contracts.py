@@ -1,0 +1,254 @@
+"""lcheck layer 1 driver: state-contract verification via abstract eval.
+
+``jax.eval_shape`` traces every public jitted entry point of the batch
+engine (and the vectorized fleet) with abstract ``ShapeDtypeStruct``
+inputs — no device work, no kernel launches, sub-second — and checks
+that every returned engine state matches the declared schema
+(``repro.market_jax.schema``) key-for-key, shape-for-shape,
+dtype-for-dtype.  This is what catches the "step() silently widened
+``seq`` to int64" / "clear dropped the ``waves`` counter" class of
+regression at CI time without running a simulation.
+
+Covered entry points (the acceptance list in docs/DESIGN.md §9):
+
+* engine: ``step`` (minimal and full-kwargs variants), ``place``,
+  ``cancel``, ``cancel_all``, ``clear``, ``clear_topk``, ``_cascade``;
+* kernel: ``repro.kernels.market_clear.ops.clear`` with
+  ``use_pallas=False`` and ``use_pallas=True`` (the Pallas path has an
+  abstract eval rule, so parity of the output structs is checked
+  without a TPU);
+* fleet: ``advance``, ``desired_nodes``, ``policy``, ``after_step``.
+
+Run via ``python -m tools.lcheck --contracts`` (CI does).
+"""
+from __future__ import annotations
+
+import traceback
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = np.dtype(np.float32)
+I32 = np.dtype(np.int32)
+
+
+def _sds(shape, dtype) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _eval(problems: List[str], name: str, fn: Callable, *args, **kw):
+    try:
+        return jax.eval_shape(fn, *args, **kw)
+    except Exception as e:        # noqa: BLE001 — report, don't crash
+        tb = traceback.format_exc().strip().splitlines()[-1]
+        problems.append(f"{name}: abstract eval failed: {e!r} ({tb})")
+        return None
+
+
+def _expect(problems: List[str], name: str, got, shape, dtype) -> None:
+    if got is None:
+        return
+    if tuple(got.shape) != tuple(shape) or \
+            np.dtype(got.dtype) != np.dtype(dtype):
+        problems.append(
+            f"{name}: expected {tuple(shape)} {np.dtype(dtype).name}, "
+            f"got {tuple(got.shape)} {np.dtype(got.dtype).name}")
+
+
+# ---------------------------------------------------------------- engine
+def _engine_contracts(problems: List[str]) -> None:
+    from repro.market_jax import schema
+    from repro.market_jax.engine import BatchEngine, build_tree
+
+    eng = BatchEngine(build_tree(16), capacity=64, n_tenants=8, k=4)
+    nl, cap, nt = eng.tree.n_leaves, eng.capacity, eng.n_tenants
+    st = schema.expected_struct(eng)
+    t = _sds((), F32)
+
+    def _state_of(name: str, out) -> None:
+        """Schema-check a returned engine state (abstract or concrete)."""
+        if out is None:
+            return
+        problems.extend(f"{name}: {e}"
+                        for e in schema.check_state(out, eng,
+                                                    where=name))
+
+    # step — minimal (every optional arg None) and full-kwargs variants
+    out = _eval(problems, "engine.step[minimal]", eng.step, st, t)
+    if out is not None:
+        st2, transfers, bills = out
+        _state_of("engine.step[minimal]", st2)
+        _expect(problems, "engine.step bills", bills, (nt,), F32)
+        for key in ("moved", "old", "new"):
+            if key not in transfers:
+                problems.append(f"engine.step transfers: missing "
+                                f"'{key}'")
+    b = 8
+    new_bids = {"price": _sds((b,), F32), "limit": _sds((b,), F32),
+                "level": _sds((b,), I32), "node": _sds((b,), I32),
+                "tenant": _sds((b,), I32)}
+    floor_updates = tuple(_sds((eng.tree.nodes_at(d),), F32)
+                          for d in range(eng.tree.n_levels))
+    out = _eval(problems, "engine.step[full]", eng.step, st, t,
+                new_bids=new_bids, floor_updates=floor_updates,
+                relinquish=_sds((4,), I32), limits=_sds((nl,), F32))
+    if out is not None:
+        _state_of("engine.step[full]", out[0])
+
+    # place / cancel / cancel_all
+    _state_of("engine.place",
+              _eval(problems, "engine.place", eng.place, st,
+                    _sds((b,), F32), _sds((b,), I32), _sds((b,), I32),
+                    _sds((b,), I32), _sds((b,), F32)))
+    _state_of("engine.cancel",
+              _eval(problems, "engine.cancel", eng.cancel, st,
+                    _sds((4,), I32)))
+    _state_of("engine.cancel_all",
+              _eval(problems, "engine.cancel_all", eng.cancel_all, st))
+
+    # clearing entry points
+    out = _eval(problems, "engine.clear", eng.clear, st)
+    if out is not None:
+        rate, best_level, winner = out
+        _expect(problems, "engine.clear rate", rate, (nl,), F32)
+        _expect(problems, "engine.clear best_level", best_level,
+                (nl,), I32)
+        _expect(problems, "engine.clear winner", winner, (nl,), I32)
+    out = _eval(problems, "engine.clear_topk", eng.clear_topk, st)
+    if out is not None:
+        rate, best_level, cands, trunc = out
+        _expect(problems, "engine.clear_topk rate", rate, (nl,), F32)
+        _expect(problems, "engine.clear_topk slate", cands,
+                (eng.k + 1, nl), I32)
+        _expect(problems, "engine.clear_topk truncated", trunc,
+                (nl,), I32)
+
+    # the eviction cascade (traced inside step, but its state contract
+    # must hold at every fixpoint iteration, so it is checked directly)
+    _state_of("engine._cascade",
+              _eval(problems, "engine._cascade", eng._cascade, st, t,
+                    _sds((nl,), np.dtype(np.bool_))))
+
+    # ops.clear — both backends must agree on the normalized output
+    # struct (rate, best_level, cand_slots, truncated, evict); the
+    # Pallas path is exercised through its abstract-eval rule only.
+    from repro.kernels.market_clear import ops as clear_ops
+    args = (st["order"], st["sorted_gseg"], st["seg_start"],
+            st["price"], st["tenant"], st["seq"], st["floor"],
+            st["owner"], st["limit"])
+
+    def _clear_with(use_pallas: bool) -> Callable:
+        # static args (level_off/strides/k/backend flags) bound in a
+        # closure — eval_shape abstracts every *argument*, and jit
+        # statics must stay concrete python values
+        def fn(order, sg, ss, pr, tn, sq, fl, ow, li):
+            return clear_ops.clear(order, sg, ss, pr, tn, sq, fl,
+                                   eng.level_off, eng.tree.strides,
+                                   ow, li, eng.k,
+                                   use_pallas=use_pallas,
+                                   interpret=True)
+        return fn
+
+    ref = _eval(problems, "ops.clear[jnp]", _clear_with(False), *args)
+    pal = _eval(problems, "ops.clear[pallas]", _clear_with(True), *args)
+    if ref is not None and pal is not None:
+        rs = jax.tree_util.tree_map(
+            lambda x: (tuple(x.shape), np.dtype(x.dtype)), ref)
+        ps = jax.tree_util.tree_map(
+            lambda x: (tuple(x.shape), np.dtype(x.dtype)), pal)
+        if rs != ps:
+            problems.append(f"ops.clear: backend output structs "
+                            f"disagree: jnp={rs} pallas={ps}")
+        rate = ref[0]
+        _expect(problems, "ops.clear rate", rate, (nl,), F32)
+
+
+# ----------------------------------------------------------------- fleet
+def _fleet_contracts(problems: List[str]) -> None:
+    from repro.market_jax.engine import build_tree
+    from repro.sim.fleet import Fleet, FleetConfig
+
+    tree = build_tree(16)
+    n, T = 4, 8
+    cfg = FleetConfig(n=n, b_max=32)
+    fl = Fleet(cfg, tree)
+    nl = tree.n_leaves
+
+    params = {
+        "kind": _sds((n,), I32), "work": _sds((n,), F32),
+        "deadline_s": _sds((n,), F32),
+        "checkpoint_interval_s": _sds((n,), F32),
+        "reconfig_s": _sds((n,), F32), "max_nodes": _sds((n,), I32),
+        "cap_per_node": _sds((n,), F32),
+        "sla_value_per_h": _sds((n,), F32),
+        "value_per_gap": _sds((n,), F32), "arrival_s": _sds((n,), F32),
+        "overhead_mult": _sds((n,), F32), "rates": _sds((n, T), F32),
+    }
+    state = {k: _sds((n,), F32) for k in
+             ("progress", "served", "demanded", "rate_ewma",
+              "reconfig_until", "last_checkpoint", "last_t",
+              "last_scale_down", "done_at")}
+    now = _sds((), F32)
+    held = _sds((n,), I32)
+    owner = _sds((nl,), I32)
+    rate_leaf = _sds((nl,), F32)
+    floors = tuple(_sds((tree.nodes_at(d),), F32)
+                   for d in range(tree.n_levels))
+
+    def _fleet_state(name: str, out) -> None:
+        if out is None:
+            return
+        missing = set(state) - set(out)
+        extra = set(out) - set(state)
+        if missing or extra:
+            problems.append(f"{name}: fleet state keys drifted "
+                            f"(missing={sorted(missing)}, "
+                            f"extra={sorted(extra)})")
+            return
+        for k in state:
+            _expect(problems, f"{name} state[{k}]", out[k], (n,), F32)
+
+    _fleet_state("fleet.advance",
+                 _eval(problems, "fleet.advance", fl.advance, params,
+                       state, now, held))
+    want = _eval(problems, "fleet.desired_nodes", fl.desired_nodes,
+                 params, state, now)
+    _expect(problems, "fleet.desired_nodes", want, (n,), I32)
+
+    out = _eval(problems, "fleet.policy", fl.policy, params, state,
+                now, owner, rate_leaf, floors)
+    if out is not None:
+        limits, relinquish, sel, bids, st2, _info = out
+        _expect(problems, "fleet.policy limits", limits, (nl,), F32)
+        _expect(problems, "fleet.policy relinquish", relinquish,
+                (nl,), I32)
+        _expect(problems, "fleet.policy sel", sel, (nl,),
+                np.dtype(np.bool_))
+        for key, dt in (("price", F32), ("limit", F32), ("level", I32),
+                        ("node", I32), ("tenant", I32)):
+            if key not in bids:
+                problems.append(f"fleet.policy bids: missing '{key}'")
+                continue
+            _expect(problems, f"fleet.policy bids[{key}]", bids[key],
+                    (cfg.b_max,), dt)
+        _fleet_state("fleet.policy", st2)
+
+    out = _eval(problems, "fleet.after_step", fl.after_step, params,
+                state, now, owner, owner,
+                _sds((nl,), np.dtype(np.bool_)))
+    if out is not None:
+        st2, held2 = out
+        _fleet_state("fleet.after_step", st2)
+        _expect(problems, "fleet.after_step held", held2, (n,), I32)
+
+
+def check_contracts() -> List[str]:
+    """Abstractly trace every public jitted entry point and verify the
+    declared state contracts.  Returns a list of problems (empty =
+    clean)."""
+    problems: List[str] = []
+    _engine_contracts(problems)
+    _fleet_contracts(problems)
+    return problems

@@ -1,0 +1,11 @@
+"""lcheck negative-test fixture: LC001 must fire here (and nothing
+else).  Never imported — parsed by tests/test_lcheck.py only."""
+
+
+class Engine:
+    def clear(self, state, interpret: bool = True):
+        return state
+
+
+def clear_pass(state, *, interpret: bool = False):
+    return state

@@ -1,0 +1,21 @@
+"""lcheck negative-test fixture: LC002 must fire here (three host
+syncs inside jitted bodies).  Never imported — parsed only."""
+import functools
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_asarray(x):
+    return np.asarray(x) + 1
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def bad_item(self, x):
+    return x.item()
+
+
+@jax.jit
+def bad_builtin(x):
+    return float(x)

@@ -1,0 +1,18 @@
+"""lcheck negative-test fixture: LC003 must fire here (unguarded
+scatter into a bid-table column) but NOT on the guarded/sentinel
+writes below.  Never imported — parsed only."""
+
+NEG = -1e30
+
+
+def bad_place(state, idx, prices, tenants):
+    state["price"] = state["price"].at[idx].set(prices)      # fires
+    state["tenant"] = state["tenant"].at[idx].set(tenants)   # fires
+    return state
+
+
+def good_place(state, idx, prices):
+    state["price"] = state["price"].at[idx].set(prices, mode="drop")
+    state["price"] = state["price"].at[idx].set(NEG)         # kill
+    state["tenant"] = state["tenant"].at[idx].set(-1)        # kill
+    return state

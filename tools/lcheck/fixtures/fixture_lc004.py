@@ -1,0 +1,14 @@
+"""lcheck negative-test fixture: LC004 must fire here (dtype-less jnp
+constructors inside a jitted body) but NOT on the explicit-dtype
+calls.  Never imported — parsed only."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_ctor(n_bids):
+    z = jnp.zeros(8)                          # fires
+    w = jnp.array([0.5, 1.5])                 # fires
+    ok1 = jnp.zeros(8, jnp.float32)
+    ok2 = jnp.full((8,), -1, dtype=jnp.int32)
+    return z, w, ok1, ok2

@@ -1,0 +1,28 @@
+"""lcheck negative-test fixture: LC005 must fire here (python branch
+on a traced param; unhashable static-arg default) but NOT on the
+``is None`` gate or the static-arg branch.  Never imported — parsed
+only."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def bad_branch(x, k, opts=[1, 2]):   # unhashable default on traced
+    if x > 0:                        # fires: traced branch
+        return x
+    return -x
+
+
+@functools.partial(jax.jit, static_argnames=("flags",))
+def bad_static_default(x, flags=[True]):   # fires: unhashable static
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def good_branches(x, use_pallas, y=None):
+    if y is None:          # silent: optional-arg gate
+        y = x
+    if use_pallas:         # silent: static branch
+        return x + y
+    return x - y

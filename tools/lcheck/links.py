@@ -1,0 +1,72 @@
+"""lcheck LC006: docs cross-references must not rot.
+
+Absorbed from the old ``tools/check_docs_links.py`` (PR 5) so CI has a
+single entry point (``python -m tools.lcheck``).  Two checks, repo-
+rooted:
+
+1. every relative markdown link target in README.md and docs/*.md
+   exists on disk (http(s)/mailto/pure-anchor links are skipped);
+2. every ``docs/DESIGN.md §<tag>`` citation anywhere in the source
+   tree names a section heading that actually exists in
+   docs/DESIGN.md — the sections are a stable contract (see the
+   DESIGN.md preamble), so a renumber without a citation sweep fails
+   CI here.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+from typing import List, Optional
+
+from tools.lcheck.rules import Violation
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CITE_RE = re.compile(r"docs/DESIGN\.md[,;]?\s+(?:§|Appendix\s+)"
+                     r"([0-9A-Za-z-]+)")
+SECTION_RE = re.compile(r"^##\s+(?:§|Appendix\s+)([0-9A-Za-z-]+)",
+                        re.MULTILINE)
+SOURCE_GLOBS = ("src/**/*.py", "tests/**/*.py", "benchmarks/**/*.py",
+                "tools/**/*.py", "docs/*.md", "README.md")
+
+
+def _line_of(text: str, needle: str) -> int:
+    pos = text.find(needle)
+    return text.count("\n", 0, pos) + 1 if pos >= 0 else 1
+
+
+def check_links(root: Optional[pathlib.Path] = None) -> List[Violation]:
+    root = root or pathlib.Path(__file__).resolve().parents[2]
+    out: List[Violation] = []
+    # 1) markdown link targets
+    md_files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for md in md_files:
+        if not md.exists():
+            continue
+        text = md.read_text()
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = (md.parent / target.split("#", 1)[0]).resolve()
+            if not path.exists():
+                out.append(Violation(
+                    "LC006", str(md.relative_to(root)),
+                    _line_of(text, f"({target})"),
+                    f"broken relative link -> {target}"))
+    # 2) DESIGN.md section citations
+    design = root / "docs" / "DESIGN.md"
+    sections = set(SECTION_RE.findall(design.read_text())) \
+        if design.exists() else set()
+    for pattern in SOURCE_GLOBS:
+        for f in sorted(root.glob(pattern)):
+            if f == design:      # the preamble defines the §N convention
+                continue
+            text = f.read_text(errors="replace")
+            for m in CITE_RE.finditer(text):
+                tag = m.group(1)
+                if tag not in sections:
+                    out.append(Violation(
+                        "LC006", str(f.relative_to(root)),
+                        text.count("\n", 0, m.start()) + 1,
+                        f"cites docs/DESIGN.md §{tag} but DESIGN.md "
+                        f"has sections {sorted(sections)}"))
+    return out

@@ -1,0 +1,396 @@
+"""lcheck layer 2: AST lint rules distilled from this repo's actual bug
+classes.
+
+Every rule names the shipped bug it generalizes (docs/DESIGN.md §9):
+
+* **LC001** — ``interpret: bool = True``-style parameter defaults.  The
+  PR 4 class: ``BatchEngine.clear/clear_topk`` defaulted
+  ``interpret=True`` and silently overrode a constructor
+  ``interpret=False``, running compiled engines in the Pallas
+  interpreter on every explicit clearing call.  A backend toggle must
+  default ``Optional[bool] = None`` and *inherit* (constructor setting
+  or ``repro.kernels.common`` package default).
+* **LC002** — host synchronization inside a jitted body:
+  ``np.asarray``/``np.array``/``.item()``/``float()``/``int()``/
+  ``bool()`` on traced values force a device sync or concretization
+  error.  The bridge's host boundary is deliberately *outside* every
+  jit, so anything inside one is a bug.
+* **LC003** — scatter-writes into a bid-table column
+  (``price/blimit/level/node/tenant/seq``) without the ring-allocator
+  guard.  The PR 2 class: ``place()`` overwrote live resting orders
+  when the ring cursor wrapped.  Inserting writes must clamp
+  out-of-range destinations with ``mode="drop"`` (the engine's
+  overflow-drop convention); only dead-sentinel writes (``NEG`` /
+  ``-1`` kills) are exempt.
+* **LC004** — dtype-less jnp array constructors inside a jitted body:
+  under ``jax_enable_x64`` (or a weak-type promotion) a bare
+  ``jnp.zeros(n)``/``jnp.array([0.5])`` leaks float64/int64 into the
+  declared f32/i32 state and every downstream concat/where widens.
+  State dtypes are a schema contract — constructors must say them.
+* **LC005** — jit recompile/concretization hazards: python ``if``/
+  ``while`` branching on a *traced* parameter of a jitted function
+  (works only by accident of concretization, and silently recompiles
+  per value if the arg is later made static), and ``static_argnames``
+  entries with unhashable (list/dict/set) defaults or annotations.
+
+Scope heuristics (documented, deliberate): LC002/LC004/LC005 look
+inside functions *lexically decorated* with ``jax.jit`` /
+``functools.partial(jax.jit, ...)`` (including nested defs); helpers
+that are only *called* from a jit are out of AST reach.  Suppression:
+``# lcheck: disable=LC00X[,LC00Y]`` on the offending line, or
+``# lcheck: file-disable=LC00X`` anywhere in the file.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Set
+
+RULES: Dict[str, str] = {
+    "LC001": "backend-toggle parameter defaults a hard bool "
+             "(interpret: bool = ...); use Optional[bool] = None and "
+             "inherit the constructor/package setting",
+    "LC002": "host sync inside a jitted body (np.asarray / np.array / "
+             ".item() / float()/int()/bool() on traced values)",
+    "LC003": "unguarded scatter-write to a bid-table column (needs "
+             "mode=\"drop\" or a dead-sentinel value)",
+    "LC004": "dtype-less jnp array constructor inside a jitted body "
+             "(float64/weak-type promotion leaks into f32/i32 state)",
+    "LC005": "jit recompile/concretization hazard (python branch on a "
+             "traced param; unhashable static arg)",
+    "LC006": "stale docs cross-reference (broken relative md link or "
+             "docs/DESIGN.md § citation)",
+}
+
+BOOK_COLS = {"price", "blimit", "level", "node", "tenant", "seq"}
+JNP_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "array",
+                    "asarray", "arange", "linspace", "eye"}
+DTYPE_ATTRS = {"float32", "float64", "float16", "bfloat16", "int8",
+               "int16", "int32", "int64", "uint8", "uint16", "uint32",
+               "uint64", "bool_", "complex64", "complex128"}
+
+PRAGMA_RE = re.compile(r"lcheck:\s*disable=([A-Z0-9,]+)")
+FILE_PRAGMA_RE = re.compile(r"lcheck:\s*file-disable=([A-Z0-9,]+)")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: {self.rule} {self.message} "
+                f"[{RULES[self.rule]}]")
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """``jax.jit`` / bare ``jit`` as a decorator expression."""
+    return (isinstance(node, ast.Attribute) and node.attr == "jit") or \
+        (isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _const_names(node: ast.AST) -> List[object]:
+    """Flatten a tuple/constant AST into python values (best effort)."""
+    if isinstance(node, ast.Constant):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: List[object] = []
+        for e in node.elts:
+            out.extend(_const_names(e))
+        return out
+    return []
+
+
+def _jit_static_names(fn: ast.AST) -> Optional[Set[str]]:
+    """``None`` if ``fn`` is not jit-decorated, else the set of STATIC
+    parameter names (static_argnums resolved positionally)."""
+    a = fn.args
+    pos_names = [x.arg for x in (a.posonlyargs + a.args)]
+    for dec in fn.decorator_list:
+        if _is_jit_expr(dec):
+            return set()
+        if not isinstance(dec, ast.Call):
+            continue
+        # functools.partial(jax.jit, ...) / partial(jax.jit, ...) /
+        # jax.jit(...) call forms
+        target = None
+        callee = dec.func
+        is_partial = (isinstance(callee, ast.Attribute)
+                      and callee.attr == "partial") or \
+                     (isinstance(callee, ast.Name)
+                      and callee.id == "partial")
+        if is_partial and dec.args and _is_jit_expr(dec.args[0]):
+            target = dec
+        elif _is_jit_expr(callee):
+            target = dec
+        if target is None:
+            continue
+        static: Set[str] = set()
+        for kw in target.keywords:
+            vals = _const_names(kw.value)
+            if kw.arg == "static_argnums":
+                for v in vals:
+                    if isinstance(v, int) and v < len(pos_names):
+                        static.add(pos_names[v])
+            elif kw.arg == "static_argnames":
+                static.update(str(v) for v in vals)
+        return static
+    return None
+
+
+def _is_none_test(test: ast.AST) -> bool:
+    """``x is None`` / ``x is not None`` (the standard optional-arg
+    gate — static python structure, not a traced branch)."""
+    if not isinstance(test, ast.Compare):
+        return False
+    ops_ok = all(isinstance(o, (ast.Is, ast.IsNot)) for o in test.ops)
+    operands = [test.left, *test.comparators]
+    has_none = any(isinstance(o, ast.Constant) and o.value is None
+                   for o in operands)
+    return ops_ok and has_none
+
+
+def _is_sentinel_value(node: ast.AST) -> bool:
+    """A dead-slot sentinel write: ``NEG``, ``-1`` (or module-qualified
+    ``X.NEG``) — a *kill*, which the sorted-book invariant allows."""
+    if isinstance(node, ast.Name) and node.id == "NEG":
+        return True
+    if isinstance(node, ast.Attribute) and node.attr == "NEG":
+        return True
+    if isinstance(node, ast.UnaryOp) and isinstance(node.op, ast.USub) \
+            and isinstance(node.operand, ast.Constant):
+        return True
+    if isinstance(node, ast.Constant) and isinstance(node.value,
+                                                     (int, float)):
+        return True
+    return False
+
+
+def _has_dtype_arg(call: ast.Call) -> bool:
+    if any(kw.arg == "dtype" for kw in call.keywords):
+        return True
+    for arg in call.args:
+        if isinstance(arg, ast.Attribute) and arg.attr in DTYPE_ATTRS:
+            return True
+        if isinstance(arg, ast.Name) and arg.id in DTYPE_ATTRS:
+            return True
+    return False
+
+
+class _Checker(ast.NodeVisitor):
+    def __init__(self, path: str, lines: List[str],
+                 file_disabled: Set[str]) -> None:
+        self.path = path
+        self.lines = lines
+        self.file_disabled = file_disabled
+        self.out: List[Violation] = []
+        # stack of static-name sets; non-empty top == inside a jit
+        self._jit_stack: List[Optional[Set[str]]] = [None]
+
+    # ---------------------------------------------------------- helpers
+    def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        if rule in self.file_disabled:
+            return
+        line = getattr(node, "lineno", 1)
+        src = self.lines[line - 1] if line <= len(self.lines) else ""
+        m = PRAGMA_RE.search(src)
+        if m and rule in m.group(1).split(","):
+            return
+        self.out.append(Violation(rule, self.path, line, msg))
+
+    @property
+    def _jit_static(self) -> Optional[Set[str]]:
+        """Innermost enclosing jit's static names (None = not in jit)."""
+        for s in reversed(self._jit_stack):
+            if s is not None:
+                return s
+        return None
+
+    # -------------------------------------------------------- functions
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self._check_lc001(node)
+        static = _jit_static_names(node)
+        if static is not None:
+            self._check_lc005_static_args(node, static)
+            self._traced = self._traced_params(node, static)
+        self._jit_stack.append(static)
+        self.generic_visit(node)
+        self._jit_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    @staticmethod
+    def _traced_params(node: ast.AST, static: Set[str]) -> Set[str]:
+        a = node.args
+        names = {x.arg for x in
+                 (a.posonlyargs + a.args + a.kwonlyargs)}
+        return names - static - {"self", "cls"}
+
+    def _check_lc001(self, node: ast.AST) -> None:
+        a = node.args
+        pairs = list(zip((a.posonlyargs + a.args)[::-1],
+                         a.defaults[::-1]))
+        pairs += [(arg, d) for arg, d in
+                  zip(a.kwonlyargs, a.kw_defaults) if d is not None]
+        for arg, default in pairs:
+            if arg.arg == "interpret" \
+                    and isinstance(default, ast.Constant) \
+                    and isinstance(default.value, bool):
+                self._emit(
+                    "LC001", arg,
+                    f"parameter 'interpret' hard-defaults "
+                    f"{default.value} in {node.name}(); a callee "
+                    f"default can silently override the constructor/"
+                    f"package setting (the PR 4 bug)")
+
+    def _check_lc005_static_args(self, node: ast.AST,
+                                 static: Set[str]) -> None:
+        a = node.args
+        pairs = list(zip((a.posonlyargs + a.args)[::-1],
+                         a.defaults[::-1]))
+        pairs += [(arg, d) for arg, d in
+                  zip(a.kwonlyargs, a.kw_defaults) if d is not None]
+        for arg, default in pairs:
+            if arg.arg in static and isinstance(
+                    default, (ast.List, ast.Dict, ast.Set)):
+                self._emit(
+                    "LC005", arg,
+                    f"static arg '{arg.arg}' of jitted {node.name}() "
+                    f"defaults to an unhashable literal — every call "
+                    f"raises or recompiles")
+        for arg in (a.posonlyargs + a.args + a.kwonlyargs):
+            ann = arg.annotation
+            if arg.arg in static and isinstance(ann, ast.Subscript) \
+                    and isinstance(ann.value, ast.Name) \
+                    and ann.value.id in ("List", "Dict", "Set", "list",
+                                         "dict", "set"):
+                self._emit(
+                    "LC005", arg,
+                    f"static arg '{arg.arg}' of jitted {node.name}() "
+                    f"is annotated unhashable ({ann.value.id}) — jit "
+                    f"static args must hash")
+
+    # ------------------------------------------------------- statements
+    def _check_lc005_branch(self, node: ast.AST) -> None:
+        static = self._jit_static
+        if static is None or _is_none_test(node.test):
+            return
+        traced = getattr(self, "_traced", set())
+        names = {n.id for n in ast.walk(node.test)
+                 if isinstance(n, ast.Name)}
+        hits = sorted(names & traced)
+        if hits:
+            kind = "while" if isinstance(node, ast.While) else "if"
+            self._emit(
+                "LC005", node,
+                f"python `{kind}` on traced parameter(s) "
+                f"{', '.join(hits)} inside a jitted body — "
+                f"concretization error or silent per-value recompile; "
+                f"use lax.cond/jnp.where or declare the arg static")
+
+    visit_If = _check_lc005_branch
+    visit_While = _check_lc005_branch
+
+    # ------------------------------------------------------------ calls
+    def visit_Call(self, node: ast.Call) -> None:
+        in_jit = self._jit_static is not None
+        f = node.func
+        if in_jit:
+            # ---- LC002: host syncs ----
+            if isinstance(f, ast.Attribute):
+                base = f.value
+                if f.attr in ("asarray", "array") \
+                        and isinstance(base, ast.Name) \
+                        and base.id in ("np", "numpy"):
+                    self._emit("LC002", node,
+                               f"np.{f.attr}() inside a jitted body "
+                               f"forces a host sync / trace leak")
+                if f.attr == "item" and not node.args:
+                    self._emit("LC002", node,
+                               ".item() inside a jitted body forces a "
+                               "host sync")
+            if isinstance(f, ast.Name) and f.id in ("float", "int",
+                                                    "bool"):
+                if node.args and not isinstance(node.args[0],
+                                                ast.Constant):
+                    self._emit(
+                        "LC002", node,
+                        f"builtin {f.id}() on a (possibly traced) "
+                        f"value inside a jitted body — concretizes "
+                        f"the tracer")
+            # ---- LC004: dtype-less constructors ----
+            if isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id == "jnp" \
+                    and f.attr in JNP_CONSTRUCTORS \
+                    and not _has_dtype_arg(node):
+                boolish = (f.attr in ("array", "asarray") and node.args
+                           and isinstance(node.args[0], ast.Constant)
+                           and isinstance(node.args[0].value, bool))
+                if not boolish:
+                    self._emit(
+                        "LC004", node,
+                        f"jnp.{f.attr}() without an explicit dtype "
+                        f"inside a jitted body — under x64/weak-type "
+                        f"promotion this widens the declared f32/i32 "
+                        f"state")
+        # ---- LC003: unguarded bid-table scatter-writes (everywhere) --
+        if isinstance(f, ast.Attribute) \
+                and f.attr in ("set", "add", "max", "min") \
+                and isinstance(f.value, ast.Subscript) \
+                and isinstance(f.value.value, ast.Attribute) \
+                and f.value.value.attr == "at":
+            target = f.value.value.value     # X in X.at[idx].set(v)
+            if isinstance(target, ast.Subscript) \
+                    and isinstance(target.slice, ast.Constant) \
+                    and target.slice.value in BOOK_COLS:
+                guarded = any(kw.arg == "mode"
+                              and isinstance(kw.value, ast.Constant)
+                              and kw.value.value == "drop"
+                              for kw in node.keywords)
+                sentinel = (f.attr == "set" and node.args
+                            and _is_sentinel_value(node.args[0]))
+                if not guarded and not sentinel:
+                    self._emit(
+                        "LC003", node,
+                        f"scatter-{f.attr} into bid-table column "
+                        f"'{target.slice.value}' without mode=\"drop\" "
+                        f"— a wrapped ring cursor can overwrite live "
+                        f"resting orders (the PR 2 bug)")
+        self.generic_visit(node)
+
+
+def check_source(src: str, path: str = "<memory>",
+                 select: Optional[Set[str]] = None) -> List[Violation]:
+    """Run the AST rules over one source blob."""
+    file_disabled: Set[str] = set()
+    for m in FILE_PRAGMA_RE.finditer(src):
+        file_disabled.update(m.group(1).split(","))
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [Violation("LC005", path, e.lineno or 1,
+                          f"un-parseable python: {e.msg}")]
+    checker = _Checker(path, src.splitlines(), file_disabled)
+    checker.visit(tree)
+    out = checker.out
+    if select is not None:
+        out = [v for v in out if v.rule in select]
+    return out
+
+
+def check_paths(paths: Sequence[str],
+                select: Optional[Set[str]] = None) -> List[Violation]:
+    """Run the AST rules over files and directory trees."""
+    out: List[Violation] = []
+    for p in paths:
+        root = pathlib.Path(p)
+        files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for f in files:
+            out.extend(check_source(f.read_text(errors="replace"),
+                                    str(f), select))
+    return out
