@@ -26,13 +26,24 @@ self-median calibration would cancel out.  Rows that are absolutely
 faster than the baseline (raw ratio <= 1) never fail: machines differ
 in interpreter-vs-XLA speed character, and a calibrated "regression"
 on an absolutely-faster row is always that skew, not a code change.  The gate additionally
-enforces a machine-independent SHAPE invariant within the fresh file
-alone: ``full_step`` at k=8 must not be slower than at k=1 for the same
-pool size (the K-scaling inversion PR 3 removed — per-wave cost must
-not outgrow the wave-count savings).
+enforces machine-independent SHAPE invariants within the fresh file
+alone for the top-K cascade: ``full_step`` at k=8 must cut the wave
+count >= 2x vs k=1, must not be slower in wall time at small pools
+(n <= 4096), and the cold-start flood at k=8 must beat k=1 outright —
+the K-scaling regression class PR 3 removed.  Wall time at LARGE pools
+is exempt: with the incremental sorted book + empty-level merge skip
+(docs/DESIGN.md §10), waves over drained books are nearly free and
+many cheap k=1 waves can legitimately outrun few wide ones.
+
+A third in-file shape invariant covers the fused epoch megastep
+(docs/DESIGN.md §10): ``fig12/jax_batch/fused_epoch/n=<leaves>`` rows
+must exist, and where the matching ``unfused_epoch`` row is present
+the fused path must not be slower (1.15x headroom) — a refactor that
+quietly de-fuses the epoch loop fails here.
 
 When ``--fig06 BENCH_fig06.json`` is given, the gate also verifies the
-expected fleet-scale rows (``fig06/scale/backend=<bk>/n=<leaves>``, per
+expected fleet-scale rows (``fig06/scale/backend=<bk>/n=<leaves>`` AND
+``fig06/scale/fused_epoch/backend=<bk>/n=<leaves>``, per
 ``--expect-fig06-scale``) are PRESENT in the fresh fig06 file — a
 refactor that silently stops the 10k-node path from being benchmarked
 (a renamed row, a dropped scale block, a crashed-and-swallowed run)
@@ -54,6 +65,12 @@ import sys
 def load(path: str):
     with open(path) as f:
         return {row["name"]: float(row["us_per_call"])
+                for row in json.load(f)}
+
+
+def load_derived(path: str):
+    with open(path) as f:
+        return {row["name"]: str(row.get("derived", ""))
                 for row in json.load(f)}
 
 
@@ -122,24 +139,66 @@ def main() -> int:
             failures.append(f"{name} regressed {rel:.2f}x calibrated "
                             f"(> {args.threshold}x)")
 
-    # shape invariant: k=8 full_step must not lose to k=1 at the same n,
-    # ON EITHER BACKEND (the pre-PR-3 inversions were 1.4x+; 15%
-    # headroom absorbs runner noise without letting a real inversion
-    # through)
-    by_nk = {}
+    # shape invariant: the top-K cascade must keep DELIVERING — the
+    # pre-PR-3 class was k>1 paying K-fold per-wave work without
+    # consolidating waves.  Three machine-free sub-checks:
+    #   (a) full_step k=8 must cut the cumulative wave count vs k=1 at
+    #       the same (backend, n) by >= 2x (parsed from the row's
+    #       "<waves> waves total" detail) — the mechanism itself;
+    #   (b) at SMALL pools (n <= 4096, where the per-wave clear still
+    #       dominates and redundant per-round work would surface as
+    #       wall time) k=8 must not be slower than k=1, 15% headroom;
+    #   (c) the cold-start flood — the scenario top-K exists for,
+    #       whose always-live books defeat the drained-level skip —
+    #       k=8 must beat k=1 outright (15% headroom).
+    # Wall-time non-inversion is deliberately NOT enforced at large n:
+    # since the incremental sorted-book + empty-level merge skip
+    # (docs/DESIGN.md §10), waves over drained books are nearly free,
+    # so many cheap waves (k=1) can legitimately outrun few wide ones.
+    derived = load_derived(args.fresh)
+    by_nk, waves_nk = {}, {}
     for name, us in fresh.items():
         m = re.fullmatch(r"fig12/jax_batch/full_step"
                          r"(?:/backend=(\w+))?/n=(\d+)/k=(\d+)", name)
         if m:
-            by_nk[(m.group(1) or "jnp", int(m.group(2)),
-                   int(m.group(3)))] = us
+            key = (m.group(1) or "jnp", int(m.group(2)),
+                   int(m.group(3)))
+            by_nk[key] = us
+            w = re.search(r"(\d+) waves total", derived.get(name, ""))
+            if w:
+                waves_nk[key] = int(w.group(1))
     for (bk, n, k), us in sorted(by_nk.items()):
-        if k == 8 and (bk, n, 1) in by_nk \
-                and us > by_nk[(bk, n, 1)] * 1.15:
+        if k != 8 or (bk, n, 1) not in by_nk:
+            continue
+        if (bk, n, 8) in waves_nk and (bk, n, 1) in waves_nk:
+            w8, w1 = waves_nk[(bk, n, 8)], waves_nk[(bk, n, 1)]
+            if w8 * 2 > w1:
+                failures.append(
+                    f"top-K cascade not consolidating ({bk}): "
+                    f"full_step n={n} k=8 ran {w8} waves vs {w1} at "
+                    f"k=1 (< 2x reduction)")
+            else:
+                print(f"ok  full_step k8/k1 wave reduction ({bk}) "
+                      f"n={n}: {w1}/{w8} = {w1 / max(w8, 1):.1f}x")
+        if n <= 4096 and us > by_nk[(bk, n, 1)] * 1.15:
             failures.append(
                 f"K-scaling inversion ({bk}): full_step n={n} k=8 "
                 f"({us/1e6:.3f}s) slower than k=1 "
                 f"({by_nk[(bk, n, 1)]/1e6:.3f}s)")
+    flood_k = {}
+    for name, us in fresh.items():
+        m = re.fullmatch(r"fig12/jax_batch/flood(\d+)/n=(\d+)/k=(\d+)",
+                         name)
+        if m:
+            flood_k[(int(m.group(1)), int(m.group(2)),
+                     int(m.group(3)))] = us
+    for (mm, n, k), us in sorted(flood_k.items()):
+        if k == 8 and (mm, n, 1) in flood_k \
+                and us > flood_k[(mm, n, 1)] * 1.15:
+            failures.append(
+                f"K-scaling inversion: flood{mm} n={n} k=8 "
+                f"({us/1e6:.3f}s) slower than k=1 "
+                f"({flood_k[(mm, n, 1)]/1e6:.3f}s)")
 
     # shape invariant: the pallas clear_pass must exist and stay within
     # --max-pallas-ratio of the jnp clear_pass at the same pool size —
@@ -169,6 +228,34 @@ def main() -> int:
                     f"path (> {args.max_pallas_ratio:.0f}x): the "
                     f"kernel path has rotted")
 
+    # shape invariant: the fused donated megastep must exist and must
+    # not be slower than the unfused six-dispatch loop it replaces
+    # (docs/DESIGN.md §10).  Both rows come from the same run, so the
+    # ratio is machine-free; 15% headroom absorbs single-core runner
+    # noise without letting the fusion silently rot
+    fused_ep, unfused_ep = {}, {}
+    for name, us in fresh.items():
+        m = re.fullmatch(r"fig12/jax_batch/(fused|unfused)_epoch"
+                         r"/n=(\d+)", name)
+        if m:
+            (fused_ep if m.group(1) == "fused"
+             else unfused_ep)[int(m.group(2))] = us
+    if not fused_ep:
+        failures.append(
+            "no fig12/jax_batch/fused_epoch rows — the fused megastep "
+            "path silently stopped being benchmarked (re-run "
+            "fig12_scalability.py)")
+    for n in sorted(set(fused_ep) & set(unfused_ep)):
+        ratio = fused_ep[n] / unfused_ep[n]
+        tag = "FAIL" if ratio > 1.15 else "ok"
+        print(f"{tag}  fused/unfused epoch ratio n={n}: {ratio:.2f}x "
+              f"(fused {fused_ep[n]/1e6:.3f}s, unfused "
+              f"{unfused_ep[n]/1e6:.3f}s, bound 1.15x)")
+        if ratio > 1.15:
+            failures.append(
+                f"fused epoch n={n} is {ratio:.2f}x the unfused loop "
+                f"(> 1.15x): the megastep fusion has rotted")
+
     # fig06 scale-row presence: the 10k-path must keep being benchmarked
     if args.fig06:
         try:
@@ -179,16 +266,18 @@ def main() -> int:
                             f"fig06_contention.py before the gate")
         for spec in filter(None, args.expect_fig06_scale.split(",")):
             bk, _, n = spec.partition(":")
-            row = f"fig06/scale/backend={bk}/n={int(n)}"
-            if row not in fig06:
-                failures.append(
-                    f"expected fig06 scale row missing: {row} — the "
-                    f"fleet-scale path silently stopped being "
-                    f"benchmarked (rows present: "
-                    f"{sorted(r for r in fig06 if '/scale/' in r)})")
-            else:
-                print(f"ok  fig06 scale row present: {row} "
-                      f"({fig06[row]/1e6:.3f}s/epoch)")
+            rows = (f"fig06/scale/backend={bk}/n={int(n)}",
+                    f"fig06/scale/fused_epoch/backend={bk}/n={int(n)}")
+            for row in rows:
+                if row not in fig06:
+                    failures.append(
+                        f"expected fig06 scale row missing: {row} — "
+                        f"the fleet-scale path silently stopped being "
+                        f"benchmarked (rows present: "
+                        f"{sorted(r for r in fig06 if '/scale/' in r)})")
+                else:
+                    print(f"ok  fig06 scale row present: {row} "
+                          f"({fig06[row]/1e6:.3f}s/epoch)")
 
     if compared == 0:
         failures.append("no benchmark rows matched the baseline — "

@@ -110,28 +110,39 @@ def run_scale(quick: bool = False, backend: str = "both"):
         for bk in case_bks:
             if bk not in sel:
                 continue
-            fcfg = FleetScenarioConfig(
-                regime="heavy", n_leaves=n, n_training=tr,
-                n_inference=inf, n_batch=ba,
-                duration_s=epochs * 60.0, tick_s=60.0, seed=1,
-                k=16, b_max=256 if quick else 1024,
-                use_pallas=(bk == "pallas"), interpret=True,
-                alone="analytic")
-            t0 = time.perf_counter()
-            r = run_fleet_scenario(fcfg)
-            wall = time.perf_counter() - t0
-            # first epoch pays jit compilation; report the steady state
-            ep = np.array(r.epoch_s[1:] or r.epoch_s)
-            us = float(np.mean(ep)) * 1e6
-            out[(n, bk)] = r.mean_retention
-            emit(f"fig06/scale/backend={bk}/n={n}", us,
-                 f"mean_retention={r.mean_retention:.3f} "
-                 f"tenants={fcfg.n_tenants} epochs={len(r.epoch_s)} "
-                 f"epoch_s_median={np.median(ep):.3f} "
-                 f"epochs_per_s={1.0 / max(np.mean(ep), 1e-9):.2f} "
-                 f"orders={r.stats['orders']} "
-                 f"transfers={r.stats['transfers']} "
-                 f"total_s={wall:.1f}")
+            # each case runs twice: the legacy six-dispatch loop (row
+            # name unchanged, comparable across PRs) and the fused
+            # donated megastep (sim/epoch.py; docs/DESIGN.md §10) —
+            # the regression gate requires the fused rows and that
+            # fused is not slower than unfused
+            for fused in (False, True):
+                fcfg = FleetScenarioConfig(
+                    regime="heavy", n_leaves=n, n_training=tr,
+                    n_inference=inf, n_batch=ba,
+                    duration_s=epochs * 60.0, tick_s=60.0, seed=1,
+                    k=16, b_max=256 if quick else 1024,
+                    use_pallas=(bk == "pallas"), interpret=True,
+                    alone="analytic", fused=fused)
+                t0 = time.perf_counter()
+                r = run_fleet_scenario(fcfg)
+                wall = time.perf_counter() - t0
+                # first epoch pays jit compilation; report steady state
+                ep = np.array(r.epoch_s[1:] or r.epoch_s)
+                us = float(np.mean(ep)) * 1e6
+                tag = "fused_epoch/" if fused else ""
+                if fused:
+                    out[(n, bk)] = r.mean_retention
+                emit(f"fig06/scale/{tag}backend={bk}/n={n}", us,
+                     f"mean_retention={r.mean_retention:.3f} "
+                     f"tenants={fcfg.n_tenants} "
+                     f"epochs={len(r.epoch_s)} "
+                     f"epoch_s_p50={np.percentile(ep, 50):.3f} "
+                     f"epoch_s_p95={np.percentile(ep, 95):.3f} "
+                     f"epochs_per_s="
+                     f"{1.0 / max(np.mean(ep), 1e-9):.2f} "
+                     f"orders={r.stats['orders']} "
+                     f"transfers={r.stats['transfers']} "
+                     f"total_s={wall:.1f}")
     if not out:
         emit("fig06/scale/NO_CASES", 0.0,
              f"backend filter {sel} matched no scale case "

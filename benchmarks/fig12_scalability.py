@@ -223,6 +223,37 @@ def run(quick: bool = False, backend: str = "both"):
              f"{waves[0]} waves for {m} marketable bids "
              f"({m / (us / 1e6):.2e} matches/s)")
 
+    # fused donated epoch megastep vs the unfused six-dispatch fleet
+    # loop (sim/epoch.py; docs/DESIGN.md §10) on the 2048-leaf
+    # contention scenario.  check_fig12_regression.py REQUIRES the
+    # fused row and gates fused-vs-unfused (fused must not be slower).
+    if "jnp" in backends:
+        from repro.sim.simulator import (FleetScenarioConfig,
+                                         _drive_fleet,
+                                         _drive_fleet_fused,
+                                         _seed_floors, make_fleet)
+        n_fleet = 2048
+        epochs = 10 if quick else 20
+        for fused in (False, True):
+            fcfg = FleetScenarioConfig(
+                regime="heavy", n_leaves=n_fleet, n_training=96,
+                n_inference=96, n_batch=64,
+                duration_s=epochs * 60.0, tick_s=60.0, seed=1,
+                k=16, b_max=256 if quick else 1024, alone="none",
+                fused=fused)
+            topo, _, market, fleet, params = make_fleet(fcfg)
+            _seed_floors(market, topo)
+            drive = _drive_fleet_fused if fused else _drive_fleet
+            _, epoch_s, _ = drive(fleet, params, market, fcfg)
+            ep = np.array(epoch_s[1:] or epoch_s)   # drop jit compile
+            name = "fused_epoch" if fused else "unfused_epoch"
+            emit(f"fig12/jax_batch/{name}/n={n_fleet}",
+                 float(np.median(ep)) * 1e6,
+                 f"p50={np.percentile(ep, 50):.4f}s "
+                 f"p95={np.percentile(ep, 95):.4f}s "
+                 f"epochs={len(ep)} tenants={fcfg.n_tenants} "
+                 f"b_max={fcfg.b_max}")
+
     dump_json(BENCH_JSON, prefix="fig12")
 
 

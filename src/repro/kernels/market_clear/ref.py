@@ -333,7 +333,20 @@ def clear_sorted_from_aggs(aggs, level_floor: Sequence[jax.Array],
             // strides[d + 1]
         A = tuple(x[parent] for x in path)
         a2 = tuple(x[parent] for x in path2)
-        path, path2 = _merge2(A, a2, ranked(d), fallback(d), k)
+        # Merging a fully-dead level is the identity on (A, a2): dead
+        # entries (NEG price, -1 payloads) are never selected by
+        # _topk_select and lose every fall-back comparison, so the
+        # merged tuples carry the exact same values.  Skipping the
+        # merge under lax.cond keeps per-wave cost proportional to the
+        # number of POPULATED levels — the fleet workload bids only at
+        # the root, so every lower level is empty and the (n_leaves, k)
+        # leaf merge (the dominant term) is skipped entirely.
+        lvl_live = jnp.any(lvl_slice(pk, d)[:, 0] > NEG / 2)
+        path, path2 = jax.lax.cond(
+            lvl_live,
+            lambda ops: _merge2(ops[0], ops[1], ops[2], ops[3], k),
+            lambda ops: (ops[0], ops[1]),
+            (A, a2, ranked(d), fallback(d)))
 
     # ---- leaf stage: floor combine, owner exclusion, slate ----
     leaf = jnp.arange(n_leaves)

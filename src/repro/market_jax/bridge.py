@@ -172,10 +172,13 @@ class BatchMarket:
         schema.maybe_validate(st, eng, where=f"{rtype} state")
         self._fire(rtype, transfers, explicit)
 
-    def _fire(self, rtype: str, transfers, explicit: Set[int]) -> None:
+    def _fire(self, rtype: str, transfers, explicit) -> None:
         moved = np.asarray(transfers["moved"])
         if not moved.any():
             return
+        if not isinstance(explicit, (set, frozenset)):
+            # per-leaf bool mask (the fleet's graceful-release mask)
+            explicit = set(np.nonzero(np.asarray(explicit))[0].tolist())
         old = np.asarray(transfers["old"])
         new = np.asarray(transfers["new"])
         rates = self._host(rtype)["rate"]
@@ -226,13 +229,17 @@ class BatchMarket:
 
     def step_arrays(self, rtype: str, t: float, bids=None,
                     relinquish=None, limits=None,
-                    explicit: Set[int] = frozenset()):
+                    explicit=frozenset()):
         """Run ONE engine epoch at ``t`` with a whole event batch.
 
         bids: dict of (b,) arrays (``price``/``limit`` f32,
             ``level``/``node``/``tenant`` i32; tenant -1 = padding);
         relinquish: (m,) i32 local leaf ids (-1 padded);
-        limits: (n_leaves,) f32 retention-limit refresh (NaN = keep).
+        limits: (n_leaves,) f32 retention-limit refresh (NaN = keep);
+        explicit: the explicitly-released leaves, as a ``Set[int]`` of
+            local leaf ids OR an (n_leaves,) bool mask (host or device
+            array — the fleet passes its graceful-release ``sel`` mask
+            directly, no host set() rebuild).
 
         Fires ``on_transfer`` callbacks only when some are registered
         (the pure-array fleet path reads the returned transfer arrays
@@ -257,9 +264,12 @@ class BatchMarket:
             new = np.asarray(transfers["new"])
             taken = moved & (new >= 0)
             self.stats["transfers"] += int(taken.sum())
-            expl = np.zeros_like(moved)
-            if explicit:
-                expl[list(explicit)] = True
+            if isinstance(explicit, (set, frozenset)):
+                expl = np.zeros_like(moved)
+                if explicit:
+                    expl[list(explicit)] = True
+            else:
+                expl = np.asarray(explicit).astype(bool)
             self.stats["explicit_relinquish"] += int(
                 (moved & expl).sum())
             self.stats["implicit_relinquish"] += int(

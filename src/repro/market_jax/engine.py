@@ -52,10 +52,14 @@ of the bid table — ``state["order"]`` (slot permutation),
 ``state["seg_start"]`` (per-segment start offsets) — sorted by
 ``(segment asc, price desc, seq asc)`` where a segment is one
 (level, node) book, globally indexed ``level_off[level] + node``, and
-dead slots carry the sentinel segment ``n_seg_total``.  Exactly one
-lexsort runs per epoch (at the end of ``place``); every other mutation
-(cancel, OCO consumption inside cascade waves) only KILLS entries —
-never moves, re-prices or revives them — so between sorts each live
+dead slots carry the sentinel segment ``n_seg_total``.  ``place``
+maintains the view *incrementally* (docs/DESIGN.md §10): it sorts only
+the incoming ``(b_max,)`` batch and 2-way merges it into the live
+prefix, falling back to a full lexsort only when the dead fraction of
+the old span exceeds ``resort_dead_frac`` (``state["resorts"]`` counts
+those full sorts).  Every other mutation (cancel, OCO consumption
+inside cascade waves) only KILLS entries — never moves, re-prices or
+revives them — so between merges each live
 slot still sits inside its segment's ``[seg_start[g], seg_start[g+1])``
 range in (price desc, seq asc) order.  Killed entries are skipped via a
 liveness cumsum, making per-wave aggregate maintenance O(capacity) flat
@@ -115,7 +119,9 @@ class BatchEngine:
     def __init__(self, tree: TreeSpec, capacity: int = 1 << 16,
                  use_pallas: bool = False, n_tenants: int = 1024,
                  controls: Optional[VolatilityControls] = None,
-                 interpret: Optional[bool] = None, k: int = 8) -> None:
+                 interpret: Optional[bool] = None, k: int = 8,
+                 incremental_sort: bool = True,
+                 resort_dead_frac: float = 0.5) -> None:
         self.tree = tree
         self.capacity = capacity
         self.use_pallas = use_pallas
@@ -126,6 +132,14 @@ class BatchEngine:
         # inherits the resolved constructor setting (lcheck LC001)
         self.interpret = resolve_interpret(interpret)
         self.k = max(1, int(k))   # contested claims resolved per wave
+        # sorted-view maintenance policy: with incremental_sort, place()
+        # sorts only the incoming batch and 2-way merges it into the
+        # live view; the full-table lexsort runs only when the dead
+        # fraction of the live span exceeds resort_dead_frac (hole
+        # compaction amortized across epochs).  False = always lexsort
+        # (the pre-incremental behaviour; kept for differential tests).
+        self.incremental_sort = bool(incremental_sort)
+        self.resort_dead_frac = float(resort_dead_frac)
         # global segment layout: segment id of (level d, node i) is
         # level_off[d] + i; n_seg_total is the dead-slot sentinel
         off, acc = [], 0
@@ -166,6 +180,9 @@ class BatchEngine:
             # wave count (each while_loop iteration, incl. the final
             # fixpoint-check wave)
             "waves": jnp.zeros((), jnp.int32),
+            # sorted-view instrumentation: cumulative FULL lexsort count
+            # (incremental merges don't count — see place)
+            "resorts": jnp.zeros((), jnp.int32),
             # operator floors (+ per-node last-update time for the
             # floor_fall_rate bound); lists so callers can seed floors
             # by item assignment — step normalizes to tuples
@@ -188,10 +205,13 @@ class BatchEngine:
                          jnp.int32(self.n_seg_total))
 
     def _resort(self, state):
-        """The once-per-epoch lexsort: rebuild the sorted book view.
+        """The full-table lexsort: rebuild the sorted book view from
+        scratch and bump the ``resorts`` counter.
 
-        Called only where live entries APPEAR or change key (``place``);
-        kills (cancel / OCO consumption) keep the view valid."""
+        Called only where live entries APPEAR or change key (``place``
+        — and there only when the dead fraction crossed
+        ``resort_dead_frac``, or ``incremental_sort`` is off); kills
+        (cancel / OCO consumption) keep the view valid."""
         order, sg = R.sort_book(self._gseg(state), state["price"],
                                 state["seq"])
         state["order"] = order
@@ -199,7 +219,100 @@ class BatchEngine:
         state["seg_start"] = jnp.searchsorted(
             sg, jnp.arange(self.n_seg_total + 1, dtype=jnp.int32),
             side="left").astype(jnp.int32)
+        state["resorts"] = state["resorts"] + 1
         return state
+
+    def _merged_view(self, state, old_order, old_sg, old_live_s,
+                     bs_gseg, bs_slot, n_new):
+        """Incremental sorted-view maintenance: 2-way merge of the
+        (already sorted) live book and a sorted incoming batch.
+
+        ``(old_order, old_sg)`` is the pre-place view; ``old_live_s``
+        marks positions whose slot was live BEFORE this place (killed
+        and reused holes excluded).  ``(bs_gseg, bs_slot)`` is the
+        accepted batch sorted by (gseg asc, price desc, arrival asc)
+        with its first ``n_new`` entries live.  Because seq stamps are
+        monotone, every live resting order predates every batch entry,
+        so cross-side (segment, price) ties resolve old-first and the
+        merged position of each entry is computable by counting the
+        other side's strictly-preceding entries — two vectorized
+        lexicographic binary searches, no table-wide sort.  Holes are
+        compacted out as a side effect (the live prefix of the merged
+        view is dense), which is what keeps the view's dead fraction
+        from ratcheting between full lexsorts.
+
+        Returns (order, sorted_gseg, seg_start) upholding every
+        schema.py sorted-view invariant.
+        """
+        cap = self.capacity
+        b = bs_gseg.shape[0]
+        slot = jnp.arange(cap, dtype=jnp.int32)
+        price = state["price"]          # post-place table columns
+        tenant = state["tenant"]
+        # compact the surviving live entries to the front (stable —
+        # preserves the sorted order among live entries)
+        r_old = jnp.cumsum(old_live_s.astype(jnp.int32)) - 1
+        n_old = jnp.sum(old_live_s.astype(jnp.int32))
+        comp_idx = jnp.where(old_live_s, r_old, cap)
+        comp_order = jnp.zeros((cap,), jnp.int32).at[comp_idx].set(
+            old_order, mode="drop")
+        comp_gseg = jnp.full((cap,), self.n_seg_total, jnp.int32).at[
+            comp_idx].set(old_sg, mode="drop")
+        comp_price = jnp.full((cap,), NEG, jnp.float32).at[comp_idx].set(
+            price[old_order], mode="drop")
+        # reused holes carry NEW prices at their old (dead) positions —
+        # but old_live_s is False there, so the scatter drops them.
+        bs_price = price[bs_slot]
+
+        # merged rank of each side's entries: own-side rank + count of
+        # other-side entries ordered before it.  Equal (gseg, price)
+        # across sides is old-first (monotone seq stamps): an old
+        # entry precedes new[j] on strictly-greater keys OR ties.
+        # One vectorized lexicographic lower bound over the b batch
+        # entries gives cnt_old[j]; the reverse count needs NO search —
+        # new[j] precedes old rank i iff cnt_old[j] <= i, so the
+        # per-old-rank count is the inclusive cumsum of cnt_old's
+        # histogram (O(cap + b), vs a cap-wide bisection's log(cap)
+        # dependent gather rounds).
+        lo = jnp.zeros((b,), jnp.int32)
+        hi = jnp.full((b,), cap, jnp.int32)
+        for _ in range(int(cap).bit_length() + 1):
+            act = lo < hi
+            mid = jnp.clip((lo + hi) >> 1, 0, cap - 1)
+            kg, kp = comp_gseg[mid], comp_price[mid]
+            before = (kg < bs_gseg) | ((kg == bs_gseg)
+                                       & (kp >= bs_price))
+            lo = jnp.where(act & before, mid + 1, lo)
+            hi = jnp.where(act & ~before, mid, hi)
+        cnt_old = lo
+        j = jnp.arange(b, dtype=jnp.int32)
+        pos_new = j + cnt_old
+        valid_old = slot < n_old
+        hist = jnp.zeros((cap + 1,), jnp.int32).at[
+            jnp.where(j < n_new, cnt_old, cap + 1)].add(1, mode="drop")
+        cnt_new = jnp.cumsum(hist)[:cap]
+        pos_old = slot + cnt_new                      # rank i = position
+        n_total = n_old + n_new
+        # dead slots fill the tail in slot order
+        live_after = (price > NEG / 2) & (tenant >= 0)
+        dead = ~live_after
+        pos_dead = n_total + jnp.cumsum(dead.astype(jnp.int32)) - 1
+        order = jnp.zeros((cap,), jnp.int32)
+        order = order.at[jnp.where(valid_old, pos_old, cap)].set(
+            comp_order, mode="drop")
+        order = order.at[jnp.where(j < n_new, pos_new, cap)].set(
+            bs_slot, mode="drop")
+        order = order.at[jnp.where(dead, pos_dead, cap)].set(
+            slot, mode="drop")
+        sg = jnp.full((cap,), self.n_seg_total, jnp.int32)
+        sg = sg.at[jnp.where(valid_old, pos_old, cap)].set(
+            comp_gseg, mode="drop")
+        sg = sg.at[jnp.where(j < n_new, pos_new, cap)].set(
+            bs_gseg, mode="drop")
+        seg_start = jnp.searchsorted(
+            sg, jnp.arange(self.n_seg_total + 1, dtype=jnp.int32),
+            side="left").astype(jnp.int32)
+        return order, sg, seg_start
 
     # ------------------------------------------------------------------
     @functools.partial(jax.jit, static_argnums=0)
@@ -224,15 +337,24 @@ class BatchEngine:
         cap = self.capacity
         slot = jnp.arange(cap, dtype=jnp.int32)
         live_tab = (state["price"] > NEG / 2) & (state["tenant"] >= 0)
-        ring = (slot - state["head"]) % cap
-        # free slots first, in ring order from the cursor
-        order = jnp.argsort(jnp.where(live_tab, cap + ring, ring))
+        # free slots in ring order from the cursor, SORT-FREE: rank the
+        # free slots along the ring via one cumsum, then invert
+        # rank -> ring offset with one scatter
+        live_r = live_tab[(state["head"] + slot) % cap]
+        free_rank = jnp.cumsum((~live_r).astype(jnp.int32)) - 1
+        ring_of_rank = jnp.full((cap,), cap, jnp.int32).at[
+            jnp.where(~live_r, free_rank, cap)].set(slot, mode="drop")
         n_free = cap - jnp.sum(live_tab.astype(jnp.int32))
         live_in = tenants >= 0
         j = jnp.cumsum(live_in.astype(jnp.int32)) - 1   # rank among live
         ok = live_in & (j < n_free)
-        dest = order[jnp.clip(j, 0, cap - 1)]
+        dest_ring = ring_of_rank[jnp.clip(j, 0, cap - 1)]
+        dest = (state["head"] + jnp.clip(dest_ring, 0, cap - 1)) % cap
         idx = jnp.where(ok, dest, cap)
+        old_order = state["order"]
+        old_sg = state["sorted_gseg"]
+        old_span = state["seg_start"][self.n_seg_total]
+        old_live_s = live_tab[old_order]
         state = dict(state)
         state["price"] = state["price"].at[idx].set(prices, mode="drop")
         state["blimit"] = state["blimit"].at[idx].set(
@@ -247,21 +369,74 @@ class BatchEngine:
         n_used = jnp.sum(ok.astype(jnp.int32))
         state["dropped"] = state["dropped"] + \
             jnp.sum(live_in.astype(jnp.int32)) - n_used
-        last = jnp.max(jnp.where(ok, ring[jnp.clip(dest, 0, cap - 1)], -1))
         state["head"] = jnp.where(
-            n_used > 0, (state["head"] + last + 1) % cap, state["head"])
-        return self._resort(state)
+            n_used > 0,
+            (state["head"] + jnp.max(jnp.where(ok, dest_ring, -1)) + 1)
+            % cap, state["head"])
+        if not self.incremental_sort:
+            return self._resort(state)
+        # ---- sorted-view maintenance (docs/DESIGN.md §10) ----
+        # sort ONLY the incoming batch by (gseg asc, price desc,
+        # arrival asc) and 2-way merge it into the live view; fall back
+        # to the full lexsort when the view's dead fraction (holes from
+        # kills since the last full sort) crossed resort_dead_frac —
+        # compaction amortized across epochs.
+        off = jnp.array(self.level_off, jnp.int32)
+        nd = jnp.array([self.tree.nodes_at(d)
+                        for d in range(self.tree.n_levels)], jnp.int32)
+        lvl_b = jnp.clip(levels, 0, self.tree.n_levels - 1)
+        node_b = jnp.clip(nodes, 0, nd[lvl_b] - 1)
+        live_b = ok & (prices > NEG / 2)
+        gseg_b = jnp.where(live_b, off[lvl_b] + node_b,
+                           jnp.int32(self.n_seg_total))
+        bpos = jnp.arange(prices.shape[0], dtype=jnp.int32)
+        bs_gseg, _, _, bs_slot = lax.sort(
+            (gseg_b, jnp.negative(jnp.where(live_b, prices, NEG)),
+             bpos, jnp.where(live_b, dest, 0)), num_keys=3)
+        n_new = jnp.sum(live_b.astype(jnp.int32))
+        n_live_pre = jnp.sum(live_tab.astype(jnp.int32))
+        dead_frac = (old_span - n_live_pre).astype(jnp.float32) \
+            / jnp.maximum(old_span, 1).astype(jnp.float32)
+
+        def full(st):
+            order, sg = R.sort_book(self._gseg(st), st["price"],
+                                    st["seq"])
+            ss = jnp.searchsorted(
+                sg, jnp.arange(self.n_seg_total + 1, dtype=jnp.int32),
+                side="left").astype(jnp.int32)
+            return order, sg, ss, jnp.int32(1)
+
+        def incremental(st):
+            order, sg, ss = self._merged_view(
+                st, old_order, old_sg, old_live_s, bs_gseg, bs_slot,
+                n_new)
+            return order, sg, ss, jnp.int32(0)
+
+        state["order"], state["sorted_gseg"], state["seg_start"], \
+            did_full = lax.cond(dead_frac > self.resort_dead_frac,
+                                full, incremental, state)
+        state["resorts"] = state["resorts"] + did_full
+        return state
 
     @functools.partial(jax.jit, static_argnums=0)
     def cancel_all(self, state):
         """Kill EVERY resting order in one sweep — the vectorized
         fleet's fresh-book-each-epoch policy (mirroring the
         EconAdapter's cancel-stale-orders-every-step behaviour) without
-        materializing a slot-id list.  Kills keep the sorted book view
-        valid, so no re-sort happens here; the next ``step`` re-clears."""
+        materializing a slot-id list.  The sorted view is reset to the
+        canonical empty view (identical to ``init_state``'s): a fully
+        dead book has NO live span, so leaving the stale span in place
+        would read as 100% dead fraction and trigger a pointless full
+        lexsort at the next ``place`` — the reset keeps the
+        cancel-all-each-epoch fleet loop on the incremental-merge path.
+        The next ``step`` re-clears."""
         state = dict(state)
         state["price"] = jnp.full_like(state["price"], NEG)
         state["tenant"] = jnp.full_like(state["tenant"], -1)
+        state["order"] = jnp.arange(self.capacity, dtype=jnp.int32)
+        state["sorted_gseg"] = jnp.full(
+            (self.capacity,), self.n_seg_total, jnp.int32)
+        state["seg_start"] = jnp.zeros_like(state["seg_start"])
         return state
 
     @functools.partial(jax.jit, static_argnums=0)

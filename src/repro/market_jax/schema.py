@@ -116,6 +116,9 @@ SCHEMA: Dict[str, KeySpec] = {
     "t": KeySpec("f32", (), "engine clock, >= 0, monotone across steps"),
     "waves": KeySpec("i32", (),
                      "cumulative cascade wave count, >= 0"),
+    "resorts": KeySpec("i32", (),
+                       "cumulative FULL lexsort count (incremental "
+                       "view merges don't count), >= 0"),
 }
 
 # per-level keys: python lists (tuples inside jit) of n_levels arrays,
@@ -244,6 +247,7 @@ def _runtime_checks(engine, state) -> None:
                    "ring cursor head out of [0, capacity)")
     checkify.check(state["dropped"] >= 0, "dropped count negative")
     checkify.check(state["waves"] >= 0, "wave count negative")
+    checkify.check(state["resorts"] >= 0, "resort count negative")
     checkify.check(state["t"] >= 0, "engine clock negative")
     # ---- sorted book view validity ----
     order, sg = state["order"], state["sorted_gseg"]

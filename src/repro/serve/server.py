@@ -43,9 +43,23 @@ class Server:
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.cache = None
-        self.tokens = np.zeros((batch_slots, 1), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+        # decode state stays ON DEVICE across the whole generation:
+        # next-token ids feed back into the next decode step without a
+        # host round trip, and emitted tokens accumulate into _out_buf;
+        # the single device->host sync happens once per request, when
+        # it completes (_finish_slot)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._out_buf = jnp.zeros((batch_slots, max_len), jnp.int32)
+        self._n_out = np.zeros(batch_slots, np.int32)   # host counters
+
+        def decode_sample(p, c, t, pos, out_buf, n_out):
+            logits, c = M.decode_step(p, cfg, c, t, pos)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            out_buf = out_buf.at[
+                jnp.arange(batch_slots), n_out].set(nxt)
+            return nxt[:, None], c, out_buf
+
+        self._decode = jax.jit(decode_sample)
         self._prefill = jax.jit(
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len,
                                    scan_layers=False))
@@ -82,13 +96,29 @@ class Server:
         self.cache = new_cache
         self.slots[i] = req
         self.pos[i] = S
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.out.append(nxt)
-        self.tokens[i, 0] = nxt
+        # first sampled token stays on device too (argmax traced, no
+        # int() sync): seeded into the feedback tokens and out buffer
+        nxt = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        self.tokens = self.tokens.at[i, 0].set(nxt)
+        self._out_buf = self._out_buf.at[i, 0].set(nxt)
+        self._n_out[i] = 1
+
+    def _finish_slot(self, i: int) -> None:
+        """THE device->host sync point: one transfer per completed
+        request, copying its accumulated output tokens off-device."""
+        req = self.slots[i]
+        req.out.extend(
+            np.asarray(self._out_buf[i, :int(self._n_out[i])]).tolist())
+        req.done = True
+        self.slots[i] = None
+        self._n_out[i] = 0
 
     def step(self) -> int:
         """One server tick: refill slots, one decode step. Returns number
-        of active slots."""
+        of active slots.  Sampling runs on device (argmax fused into the
+        decode jit) and next-token ids feed back device-to-device — no
+        per-token host transfer; completion bookkeeping uses host-side
+        counters only."""
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
                 self._fill_slot(i, self.queue.popleft())
@@ -99,19 +129,17 @@ class Server:
         # simplicity we decode at each slot's own position sequentially
         # grouped by position value (typically uniform for equal prompts)
         pos_val = int(max(self.pos[i] for i in active))
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.tokens),
-            jnp.asarray(pos_val, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
-                         np.int32)
+        self.tokens, self.cache, self._out_buf = self._decode(
+            self.params, self.cache, self.tokens,
+            jnp.asarray(pos_val, jnp.int32), self._out_buf,
+            jnp.asarray(self._n_out))
         for i in active:
             req = self.slots[i]
-            req.out.append(int(nxt[i]))
             self.pos[i] += 1
-            self.tokens[i, 0] = int(nxt[i])
-            if len(req.out) >= req.max_new or self.pos[i] >= self.max_len - 1:
-                req.done = True
-                self.slots[i] = None
+            self._n_out[i] += 1
+            if int(self._n_out[i]) >= req.max_new \
+                    or self.pos[i] >= self.max_len - 1:
+                self._finish_slot(i)
         return len(active)
 
     def drain(self, max_ticks: int = 1000) -> List[Request]:

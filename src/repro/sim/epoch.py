@@ -1,0 +1,157 @@
+"""Fused donated epoch megastep: the fleet renegotiation inner loop as
+ONE jitted dispatch per epoch (docs/DESIGN.md §10).
+
+The unfused loop (``simulator._drive_fleet``) runs six separate jitted
+calls per epoch with host round trips between them — ``leaf_view``
+twice, an ``np.asarray(relinq)`` + Python ``set()`` rebuild for the
+explicit-relinquish stats, a ``block_until_ready`` every epoch — and no
+state buffer is donated, so XLA copies the engine + fleet state on
+every call.  ``EpochRunner.epoch`` fuses the whole pipeline
+
+    policy -> cancel_all -> place/clear/evict/transfer/bill
+           -> stats -> after_step -> advance
+
+into one trace with the engine state, fleet state and stats
+accumulators passed as DONATED arguments (``donate_argnums``): on
+backends that implement donation the epoch is in-place state -> state,
+and on CPU (no donation support) it still eliminates every per-epoch
+host sync and dispatch gap.  The transfer arrays are consumed in-jit —
+the per-epoch stats (orders placed, transfers, explicit/implicit
+relinquishes, clipped bids) become traced integer accumulators instead
+of ``np.asarray`` reductions on the host.
+
+Donation contract: after ``epoch(params, est, fst, stats, t)`` returns,
+the CALLER must treat the passed-in ``est``/``fst``/``stats`` pytrees
+as dead (their buffers may have been reused for the outputs) and
+rebind to the returned values.  ``drive`` does exactly that, and only
+re-publishes the final state back onto the ``BatchMarket`` facade
+(``market.states``/``market.now``/``market.stats``) once the run
+completes.
+
+Each phase is wrapped in ``jax.named_scope`` so profiler timelines
+attribute device time per phase (policy/cancel/step/stats/after/
+advance) even though the host sees a single dispatch.
+
+Bit-identity: the fused path calls the SAME jitted building blocks in
+the SAME order as the unfused loop, so owners, rates, bills and
+retention are bit-identical (pinned by tests/test_epoch.py on both
+backends).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.market_jax import schema
+
+STAT_KEYS = ("orders", "transfers", "explicit_relinquish",
+             "implicit_relinquish", "bids_clipped")
+
+
+class EpochRunner:
+    """One fused-epoch driver bound to a (market, fleet, rtype) triple.
+
+    Reuse one runner per fleet run: the jitted ``epoch`` trace is
+    cached per runner instance (it closes over the engine and fleet
+    statics).
+    """
+
+    def __init__(self, market, fleet, rtype: str = "H100") -> None:
+        self.market = market
+        self.fleet = fleet
+        self.rtype = rtype
+        self.eng = market.engines[rtype]
+
+    @functools.partial(jax.jit, static_argnums=0,
+                       donate_argnums=(2, 3, 4))
+    def epoch(self, params, eng_state, fleet_state, stats, t):
+        """One fused fleet epoch at time ``t`` (donated: eng_state,
+        fleet_state, stats).  Returns the advanced triple."""
+        eng, fleet = self.eng, self.fleet
+        with jax.named_scope("epoch_policy"):
+            owner_b = eng_state["owner"]
+            limits, relinq, sel, bids, fleet_state, info = fleet.policy(
+                params, fleet_state, t, owner_b, eng_state["rate"],
+                tuple(eng_state["floor"]))
+        with jax.named_scope("epoch_cancel_all"):
+            eng_state = eng.cancel_all(eng_state)
+        with jax.named_scope("epoch_step"):
+            eng_state, transfers, _bills = eng.step(
+                eng_state, t, bids, None, relinq, limits)
+        with jax.named_scope("epoch_stats"):
+            # the transfer arrays are consumed HERE, in-trace — the
+            # host-loop equivalent lives in BatchMarket.step_arrays
+            moved = transfers["moved"]
+            taken = moved & (transfers["new"] >= 0)
+            stats = dict(stats)
+            stats["orders"] = stats["orders"] + jnp.sum(
+                (bids["tenant"] >= 0).astype(jnp.int32))
+            stats["transfers"] = stats["transfers"] + jnp.sum(
+                taken.astype(jnp.int32))
+            stats["explicit_relinquish"] = stats["explicit_relinquish"] \
+                + jnp.sum((moved & sel).astype(jnp.int32))
+            stats["implicit_relinquish"] = stats["implicit_relinquish"] \
+                + jnp.sum((taken & ~sel
+                           & (transfers["old"] >= 0)).astype(jnp.int32))
+            stats["bids_clipped"] = stats["bids_clipped"] + \
+                jnp.asarray(info["bids_clipped"], jnp.int32)
+        with jax.named_scope("epoch_after_step"):
+            fleet_state, held = fleet.after_step(
+                params, fleet_state, t, owner_b, eng_state["owner"],
+                sel)
+        with jax.named_scope("epoch_advance"):
+            fleet_state = fleet.advance(params, fleet_state, t, held)
+        return eng_state, fleet_state, stats
+
+    def drive(self, params, fleet_state, duration_s: float,
+              tick_s: float, time_epochs: bool = True
+              ) -> Tuple[dict, List[float], Dict[str, int]]:
+        """Run fused epochs over [0, duration_s] at tick_s cadence.
+
+        Takes the engine state off the market facade, threads it
+        through donated ``epoch`` calls, and re-publishes the final
+        state + accumulated stats back onto the facade at the end.
+        ``time_epochs=False`` skips the per-epoch device sync entirely
+        (epochs enqueue asynchronously; one sync at the end) and
+        returns an empty timing list.
+        """
+        market, rtype = self.market, self.rtype
+        est = dict(market.states[rtype])
+        # donated pytrees must have a stable structure: normalize the
+        # floor lists (init_state) to the tuples step returns
+        est["floor"] = tuple(est["floor"])
+        est["floor_t"] = tuple(est["floor_t"])
+        stats = {k: jnp.zeros((), jnp.int32) for k in STAT_KEYS}
+        # donated buffers must not alias each other or any non-donated
+        # argument (XLA rejects ``f(a, donate(a))``), but jnp's
+        # constant cache makes freshly-built states share buffers (all
+        # the zero scalars are ONE buffer) — take defensive per-leaf
+        # copies once; every later iteration threads distinct
+        # executable outputs
+        est, fleet_state, stats = jax.tree_util.tree_map(
+            lambda a: jnp.asarray(a).copy(), (est, fleet_state, stats))
+        epoch_s: List[float] = []
+        t = 0.0
+        while t <= duration_s:
+            t0 = time.perf_counter()
+            est, fleet_state, stats = self.epoch(
+                params, est, fleet_state, stats, jnp.float32(t))
+            if time_epochs:
+                jax.block_until_ready(est["owner"])
+                epoch_s.append(time.perf_counter() - t0)
+            t += tick_s
+        jax.block_until_ready(est["owner"])
+        # re-publish onto the facade (one host sync for the run)
+        market.states[rtype] = est
+        market._np[rtype] = None
+        market.now = max(market.now, t - tick_s)
+        schema.maybe_validate(est, self.eng, where=f"{rtype} state")
+        host_stats = {k: int(stats[k]) for k in STAT_KEYS}
+        for k in ("orders", "transfers", "explicit_relinquish",
+                  "implicit_relinquish"):
+            market.stats[k] += host_stats[k]
+        return fleet_state, epoch_s, host_stats

@@ -194,6 +194,9 @@ class FleetScenarioConfig:
     #   "analytic" — uncontended counterfactual, one vectorized run
     #   "engine"   — per-tenant alone runs through the engine (toy scale)
     #   "none"     — skip (perf only)
+    fused: bool = True              # drive epochs through the fused
+    # donated megastep (sim/epoch.py); False = the legacy six-dispatch
+    # loop (kept for the bit-identity differential suite)
     controls: VolatilityControls = field(
         default_factory=lambda: VolatilityControls(max_bid_multiple=4.0,
                                                    floor_fall_rate=0.5))
@@ -253,34 +256,60 @@ def _seed_floors(market, topo) -> None:
 
 
 def _drive_fleet(fleet, params, market, fcfg: FleetScenarioConfig,
-                 rtype: str = "H100"):
-    """The multi-tenant fleet loop: per epoch, one jitted policy, one
-    jitted engine step, one jitted transfer/advance application."""
+                 rtype: str = "H100", time_epochs: bool = True):
+    """The UNFUSED multi-tenant fleet loop: per epoch, one jitted
+    policy, one jitted engine step, one jitted transfer/advance
+    application — six dispatches with host gaps between them.  Kept as
+    the bit-identity reference for the fused megastep
+    (``_drive_fleet_fused`` / sim/epoch.py); ``run_fleet_scenario``
+    uses the fused driver by default.
+
+    ``time_epochs=False`` skips the per-epoch device sync (epochs
+    still serialize on step_arrays' host-side stats, but the fleet
+    advance pipeline stays async) and returns an empty timing list.
+    """
     import jax
+    import jax.numpy as jnp
     state = fleet.init_state(params)
     epoch_s: List[float] = []
-    clipped = 0
-    t = 0.0
+    clipped = jnp.zeros((), jnp.int32)   # device accumulator — no
+    t = 0.0                              # per-epoch int() host sync
     while t <= fcfg.duration_s:
         t0 = time.perf_counter()
         owner_b, rate, floors = market.leaf_view(rtype)
         limits, relinq, sel, bids, state, info = fleet.policy(
             params, state, t, owner_b, rate, floors)
         market.cancel_all(rtype)
-        relinq_np = np.asarray(relinq)
+        # ``sel`` (the per-leaf graceful-release mask) IS the explicit
+        # set — passed as a device mask, not a rebuilt host set()
         market.step_arrays(rtype, t, bids=bids, relinquish=relinq,
-                           limits=limits,
-                           explicit=set(relinq_np[relinq_np >= 0]
-                                        .tolist()))
+                           limits=limits, explicit=sel)
         owner_a = market.leaf_view(rtype)[0]
         state, held = fleet.after_step(params, state, t, owner_b,
                                        owner_a, sel)
         state = fleet.advance(params, state, t, held)
-        jax.block_until_ready(state["progress"])
-        clipped += int(info["bids_clipped"])
-        epoch_s.append(time.perf_counter() - t0)
+        clipped = clipped + info["bids_clipped"]
+        if time_epochs:
+            jax.block_until_ready(state["progress"])
+            epoch_s.append(time.perf_counter() - t0)
         t += fcfg.tick_s
-    return state, epoch_s, clipped
+    jax.block_until_ready(state["progress"])
+    return state, epoch_s, int(clipped)
+
+
+def _drive_fleet_fused(fleet, params, market,
+                       fcfg: FleetScenarioConfig, rtype: str = "H100",
+                       time_epochs: bool = True):
+    """The fused-megastep fleet loop: ONE donated jitted dispatch per
+    epoch (sim/epoch.py) — bit-identical owners/rates/bills/retention
+    to ``_drive_fleet`` (pinned by tests/test_epoch.py)."""
+    from repro.sim.epoch import EpochRunner
+    runner = EpochRunner(market, fleet, rtype)
+    state = fleet.init_state(params)
+    state, epoch_s, stats = runner.drive(
+        params, state, fcfg.duration_s, fcfg.tick_s,
+        time_epochs=time_epochs)
+    return state, epoch_s, stats["bids_clipped"]
 
 
 def _alone_perf(fleet, params, market, topo,
@@ -307,7 +336,8 @@ def _alone_perf(fleet, params, market, topo,
         market.reset()
         _seed_floors(market, topo)
         p_i = params_alone(params, i)
-        state, _, _ = _drive_fleet(fleet, p_i, market, fcfg)
+        state, _, _ = _drive_fleet(fleet, p_i, market, fcfg,
+                                   time_epochs=False)
         out[i] = float(fleet.performance(p_i, state,
                                          fcfg.duration_s)[i])
     return out
@@ -318,7 +348,8 @@ def run_fleet_scenario(fcfg: FleetScenarioConfig) -> FleetRunResult:
     retention under contention, with per-epoch wall times."""
     topo, tenants, market, fleet, params = make_fleet(fcfg)
     _seed_floors(market, topo)
-    state, epoch_s, clipped = _drive_fleet(fleet, params, market, fcfg)
+    drive = _drive_fleet_fused if fcfg.fused else _drive_fleet
+    state, epoch_s, clipped = drive(fleet, params, market, fcfg)
     perf = np.asarray(fleet.performance(params, state, fcfg.duration_s))
     # snapshot BEFORE the alone runs: alone="engine" resets the market
     # per tenant, so reading stats afterwards would report the last

@@ -1,0 +1,191 @@
+"""Fused epoch megastep differential + incremental sorted-view checks
+(sim/epoch.py, docs/DESIGN.md §10).
+
+The fused donated ``EpochRunner.epoch`` must be bit-identical to the
+legacy six-dispatch ``_drive_fleet`` loop — owners, rates, bills,
+performance and the host-side market stats — on both clearing
+backends.  The incremental place-merge must produce the same market
+outcomes as the always-lexsort engine under kill-heavy op sequences,
+keep every schema invariant, and honour the ``resort_dead_frac``
+amortization policy (``state["resorts"]`` counts FULL lexsorts only).
+
+The hypothesis property sweep over random op traces lives in
+tests/test_epoch_props.py (same split as test_market_props.py).
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.market_jax import schema
+from repro.market_jax.engine import BatchEngine, build_tree
+from repro.sim.simulator import (FleetScenarioConfig, _drive_fleet,
+                                 _drive_fleet_fused, _seed_floors,
+                                 make_fleet)
+
+
+def _run_small(fused, use_pallas=False, n_leaves=256, duration=900.0,
+               mix=(6, 6, 4), b_max=128, k=8):
+    fcfg = FleetScenarioConfig(
+        regime="heavy", n_leaves=n_leaves, n_training=mix[0],
+        n_inference=mix[1], n_batch=mix[2], duration_s=duration,
+        tick_s=60.0, seed=3, k=k, b_max=b_max, per_tenant_bids=4,
+        use_pallas=use_pallas, alone="none", fused=fused)
+    topo, _, market, fleet, params = make_fleet(fcfg)
+    _seed_floors(market, topo)
+    drive = _drive_fleet_fused if fused else _drive_fleet
+    state, _, clipped = drive(fleet, params, market, fcfg,
+                              time_epochs=False)
+    est = market.states["H100"]
+    return ({key: np.asarray(est[key])
+             for key in ("owner", "rate", "bills")},
+            np.asarray(fleet.performance(params, state,
+                                         fcfg.duration_s)),
+            dict(market.stats), int(clipped))
+
+
+class TestFusedDifferential:
+    """One donated dispatch per epoch == the unfused reference loop."""
+
+    def _assert_identical(self, a, b):
+        est_a, perf_a, stats_a, clip_a = a
+        est_b, perf_b, stats_b, clip_b = b
+        for key in ("owner", "rate", "bills"):
+            np.testing.assert_array_equal(est_a[key], est_b[key],
+                                          err_msg=key)
+        np.testing.assert_array_equal(perf_a, perf_b)
+        assert stats_a == stats_b, (stats_a, stats_b)
+        assert clip_a == clip_b
+
+    def test_fused_matches_unfused_jnp(self):
+        self._assert_identical(_run_small(fused=True),
+                               _run_small(fused=False))
+
+    def test_fused_matches_unfused_pallas(self):
+        kw = dict(use_pallas=True, n_leaves=64, duration=240.0,
+                  mix=(3, 3, 2), b_max=64, k=4)
+        self._assert_identical(_run_small(fused=True, **kw),
+                               _run_small(fused=False, **kw))
+
+    def test_fused_driver_reports_stats(self):
+        _, perf, stats, _ = _run_small(fused=True)
+        assert stats["orders"] > 0 and stats["transfers"] > 0
+        assert np.all(np.isfinite(perf))
+
+
+# ---------------------------------------------------------------------
+# Incremental sorted-view maintenance (engine-level, deterministic)
+# ---------------------------------------------------------------------
+_TREE = build_tree(64)
+# module-level engines so jitted graphs compile once per variant
+_ENGINES = {
+    "legacy": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                          incremental_sort=False),
+    "inc": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4),
+    "never": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                         resort_dead_frac=1.0),
+}
+
+
+def _batch(rng, eng, b=16):
+    levels = rng.integers(0, eng.tree.n_levels, b).astype(np.int32)
+    nodes = np.array([rng.integers(0, eng.tree.nodes_at(d))
+                      for d in levels], np.int32)
+    prices = rng.uniform(0.5, 9.0, b).astype(np.float32)
+    tenants = rng.integers(-1, eng.n_tenants, b).astype(np.int32)
+    limits = (prices * rng.uniform(1.0, 1.5, b)).astype(np.float32)
+    return tuple(jnp.array(a)
+                 for a in (prices, levels, nodes, tenants, limits))
+
+
+def _apply(eng, state, op, payload):
+    if op == "place":
+        return eng.place(state, *payload)
+    if op == "cancel":
+        return eng.cancel(state, payload)
+    if op == "cancel_all":
+        return eng.cancel_all(state)
+    state, _, _ = eng.step(state, payload, None, None, None)
+    return state
+
+
+def _trace(rng, eng, n_ops=30):
+    """One shared random op trace (op kind, payload) per seed —
+    payloads are built against ``eng`` but apply to every variant
+    (same tree/capacity)."""
+    t, ops = 0.0, []
+    for _ in range(n_ops):
+        kind = rng.choice(["place", "cancel", "cancel_all", "step"],
+                          p=[0.45, 0.25, 0.05, 0.25])
+        if kind == "place":
+            ops.append((kind, _batch(rng, eng)))
+        elif kind == "cancel":
+            ops.append((kind, jnp.array(
+                rng.integers(0, eng.capacity, 24).astype(np.int32))))
+        elif kind == "cancel_all":
+            ops.append((kind, None))
+        else:
+            t += float(rng.uniform(1.0, 600.0))
+            ops.append((kind, t))
+    return ops
+
+
+class TestIncrementalSortedView:
+    def test_variants_bit_identical_and_valid(self):
+        """Kill-heavy random traces: every resort policy produces the
+        same owners/rates/bills, and the incremental views satisfy
+        every schema invariant after every op."""
+        for seed in (0, 1, 2):
+            rng = np.random.default_rng(seed)
+            ops = _trace(rng, _ENGINES["inc"])
+            states = {name: eng.init_state()
+                      for name, eng in _ENGINES.items()}
+            for i, (op, payload) in enumerate(ops):
+                for name, eng in _ENGINES.items():
+                    states[name] = _apply(eng, states[name], op,
+                                          payload)
+                for name in ("inc", "never"):
+                    schema.validate_state(
+                        states[name], _ENGINES[name],
+                        where=f"{name} seed={seed} op{i}:{op}")
+                ref = states["legacy"]
+                for name in ("inc", "never"):
+                    for key in ("owner", "rate", "bills", "price",
+                                "tenant", "dropped"):
+                        np.testing.assert_array_equal(
+                            np.asarray(states[name][key]),
+                            np.asarray(ref[key]),
+                            err_msg=f"{name}/{key} seed={seed} "
+                                    f"op{i}:{op}")
+
+    def test_cancel_all_place_cycle_stays_incremental(self):
+        """The fleet pattern — cancel_all + place every epoch — must
+        never pay a full lexsort (the canonical-empty reset)."""
+        eng = _ENGINES["inc"]
+        rng = np.random.default_rng(7)
+        state = eng.init_state()
+        for _ in range(6):
+            state = eng.cancel_all(state)
+            state = eng.place(state, *_batch(rng, eng))
+            state, _, _ = eng.step(state, float(rng.uniform(1, 600)),
+                                   None, None, None)
+        assert int(state["resorts"]) == 0
+        schema.validate_state(state, eng, where="cycle end")
+
+    def test_dead_frac_threshold_triggers_resort(self):
+        """Killing most of the standing book pushes the dead fraction
+        over ``resort_dead_frac`` — the next place must compact via a
+        counted full lexsort; the never-resort engine must not."""
+        rng = np.random.default_rng(11)
+        prices, levels, nodes, _, limits = _batch(
+            rng, _ENGINES["inc"], b=16)
+        tenants = jnp.array(
+            rng.integers(0, 12, 16).astype(np.int32))  # all valid
+        batch = (prices, levels, nodes, tenants, limits)
+        kill = jnp.arange(14, dtype=jnp.int32)   # 14/16 dead > 0.5
+        for name, expect in (("inc", 1), ("never", 0)):
+            eng = _ENGINES[name]
+            state = eng.place(eng.init_state(), *batch)
+            base = int(state["resorts"])
+            state = eng.cancel(state, kill)
+            state = eng.place(state, *batch)
+            assert int(state["resorts"]) - base == expect, name
+            schema.validate_state(state, eng, where=f"{name} resort")

@@ -1,0 +1,59 @@
+"""Property sweep for incremental sorted-view maintenance
+(docs/DESIGN.md §10): under ARBITRARY random place/cancel/cancel_all/
+step traces, the incremental merge + amortized compaction must keep
+every declared schema invariant and stay bit-identical (owners, rates,
+bills, book columns) to the always-lexsort engine — at every resort
+policy, including never-resort (pure merges, maximum dead-slot
+stress).
+
+Requires hypothesis (see requirements-dev.txt); the deterministic
+fused-epoch differential and seeded traces live in tests/test_epoch.py
+and always run.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.market_jax import schema
+from repro.market_jax.engine import BatchEngine, build_tree
+
+from test_epoch import _apply, _trace
+
+# module-level engines so jitted graphs compile once across examples
+_TREE = build_tree(64)
+_ENGINES = {
+    "legacy": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                          incremental_sort=False),
+    "inc": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4),
+    "eager": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                         resort_dead_frac=0.0),
+    "never": BatchEngine(_TREE, capacity=256, n_tenants=12, k=4,
+                         resort_dead_frac=1.0),
+}
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(5, 40))
+def test_incremental_view_invariants_random_traces(seed, n_ops):
+    rng = np.random.default_rng(seed)
+    ops = _trace(rng, _ENGINES["inc"], n_ops=n_ops)
+    states = {name: eng.init_state()
+              for name, eng in _ENGINES.items()}
+    for i, (op, payload) in enumerate(ops):
+        for name, eng in _ENGINES.items():
+            states[name] = _apply(eng, states[name], op, payload)
+        ref = states["legacy"]
+        for name in ("inc", "eager", "never"):
+            schema.validate_state(states[name], _ENGINES[name],
+                                  where=f"{name} seed={seed} "
+                                        f"op{i}:{op}")
+            for key in ("owner", "rate", "bills", "price", "tenant",
+                        "seq", "dropped", "head", "next_seq"):
+                np.testing.assert_array_equal(
+                    np.asarray(states[name][key]),
+                    np.asarray(ref[key]),
+                    err_msg=f"{name}/{key} seed={seed} op{i}:{op}")

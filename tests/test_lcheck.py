@@ -30,6 +30,7 @@ class TestRuleFiring:
         ("LC003", 2),   # price + tenant unguarded scatters
         ("LC004", 2),   # jnp.zeros / jnp.array without dtype
         ("LC005", 2),   # traced branch + unhashable static default
+        ("LC007", 3),   # np.asarray + .tolist() + set() in epoch loop
     ])
     def test_fixture_fires(self, rule, n_expected):
         src = (FIXDIR / f"fixture_{rule.lower()}.py").read_text()

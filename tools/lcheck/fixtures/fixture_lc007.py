@@ -1,0 +1,41 @@
+"""lcheck negative-test fixture: LC007 must fire here (three host
+consumptions of engine outputs inside per-epoch loop bodies).  Never
+imported — parsed only."""
+import numpy as np
+
+
+def bad_epoch_loop(market, fleet, params, state, ticks):
+    for t in range(ticks):
+        relinq = fleet.relinquish_ids(state)
+        transfers = market.step_arrays("H100", t, relinquish=relinq,
+                                       explicit=set(relinq.tolist()))
+        moved = np.asarray(transfers["moved"])
+        state = fleet.apply(state, moved)
+    return state
+
+
+def ok_sync_after_loop(eng, state, ticks):
+    # the sinks sit AFTER the loop — one sync per run is fine
+    for t in range(ticks):
+        state, transfers, bills = eng.step(state, t)
+    return np.asarray(state["owner"]), set(np.asarray(bills).tolist())
+
+
+def ok_no_engine_call(rows):
+    # sinks without an engine-driving call are not per-epoch syncs
+    out = []
+    for r in rows:
+        out.append(set(np.asarray(r).tolist()))
+    return out
+
+
+def ok_nested_def(cases, time_op):
+    # the engine call and the sink both live in a nested def (a timed
+    # closure's body) — not the loop's own per-epoch host code
+    for eng, state in cases:
+
+        def one_epoch():
+            _, transfers, _ = eng.step(state, 0.0)
+            return np.asarray(transfers["moved"]).sum()
+
+        time_op(one_epoch)

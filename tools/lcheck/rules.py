@@ -32,11 +32,24 @@ Every rule names the shipped bug it generalizes (docs/DESIGN.md §9):
   (works only by accident of concretization, and silently recompiles
   per value if the arg is later made static), and ``static_argnames``
   entries with unhashable (list/dict/set) defaults or annotations.
+* **LC007** — host consumption of jitted-engine outputs inside a
+  per-epoch loop body: ``np.asarray(...)`` / ``.tolist()`` /
+  ``set(...)`` in the same loop that drives the engine
+  (``.step(...)`` / ``.step_arrays(...)`` / ``.epoch(...)``).  The
+  pre-fused-megastep class: ``_drive_fleet`` rebuilt a host ``set()``
+  from ``np.asarray(relinq)`` every epoch, serializing the device
+  pipeline once per tick.  Per-epoch reductions belong in-trace
+  (sim/epoch.py accumulates them as traced counters); one host sync
+  at the END of the run is fine — and so is host code in a nested
+  ``def`` (a jitted callee's body), which the rule skips.
 
 Scope heuristics (documented, deliberate): LC002/LC004/LC005 look
 inside functions *lexically decorated* with ``jax.jit`` /
 ``functools.partial(jax.jit, ...)`` (including nested defs); helpers
-that are only *called* from a jit are out of AST reach.  Suppression:
+that are only *called* from a jit are out of AST reach.  LC007 looks
+at ``for``/``while`` bodies OUTSIDE jitted functions (inside one,
+LC002 already fires) and skips nested function/class definitions on
+both the trigger and the sink side.  Suppression:
 ``# lcheck: disable=LC00X[,LC00Y]`` on the offending line, or
 ``# lcheck: file-disable=LC00X`` anywhere in the file.
 """
@@ -62,7 +75,13 @@ RULES: Dict[str, str] = {
              "traced param; unhashable static arg)",
     "LC006": "stale docs cross-reference (broken relative md link or "
              "docs/DESIGN.md § citation)",
+    "LC007": "host consumption (np.asarray / .tolist() / set()) of "
+             "engine outputs inside a per-epoch loop body — "
+             "accumulate in-trace and sync once after the loop",
 }
+
+# method names that mark a loop as a per-epoch engine-driving loop
+EPOCH_CALLS = {"step", "step_arrays", "epoch"}
 
 BOOK_COLS = {"price", "blimit", "level", "node", "tenant", "seq"}
 JNP_CONSTRUCTORS = {"zeros", "ones", "full", "empty", "array",
@@ -292,8 +311,67 @@ class _Checker(ast.NodeVisitor):
                 f"concretization error or silent per-value recompile; "
                 f"use lax.cond/jnp.where or declare the arg static")
 
-    visit_If = _check_lc005_branch
-    visit_While = _check_lc005_branch
+    def visit_If(self, node: ast.If) -> None:
+        self._check_lc005_branch(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_lc005_branch(node)
+        self._check_lc007(node)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For) -> None:
+        self._check_lc007(node)
+        self.generic_visit(node)
+
+    visit_AsyncFor = visit_For
+
+    # --------------------------------------------- per-epoch loop bodies
+    @staticmethod
+    def _loop_region(node: ast.AST):
+        """Yield the loop body's nodes, skipping nested function/class
+        definitions (their bodies run elsewhere — a jitted callee's
+        host code is not per-epoch host code)."""
+        stack = list(node.body) + list(getattr(node, "orelse", []))
+        skip = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+                ast.ClassDef)
+        while stack:
+            n = stack.pop()
+            if isinstance(n, skip):
+                continue
+            yield n
+            stack.extend(ast.iter_child_nodes(n))
+
+    def _check_lc007(self, node: ast.AST) -> None:
+        if self._jit_static is not None:
+            return                       # inside a jit: LC002 territory
+        region = list(self._loop_region(node))
+        drives = any(
+            isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute)
+            and n.func.attr in EPOCH_CALLS for n in region)
+        if not drives:
+            return
+        for n in region:
+            if not isinstance(n, ast.Call):
+                continue
+            f = n.func
+            if isinstance(f, ast.Attribute) \
+                    and f.attr in ("asarray", "array") \
+                    and isinstance(f.value, ast.Name) \
+                    and f.value.id in ("np", "numpy"):
+                self._emit("LC007", n,
+                           f"np.{f.attr}() inside a per-epoch engine "
+                           f"loop — a device sync every epoch")
+            elif isinstance(f, ast.Attribute) and f.attr == "tolist" \
+                    and not n.args:
+                self._emit("LC007", n,
+                           ".tolist() inside a per-epoch engine loop "
+                           "— a device sync every epoch")
+            elif isinstance(f, ast.Name) and f.id == "set" and n.args:
+                self._emit("LC007", n,
+                           "host set() rebuild inside a per-epoch "
+                           "engine loop — pass the device mask "
+                           "through instead")
 
     # ------------------------------------------------------------ calls
     def visit_Call(self, node: ast.Call) -> None:
