@@ -49,10 +49,28 @@ refactor that silently stops the 10k-node path from being benchmarked
 (a renamed row, a dropped scale block, a crashed-and-swallowed run)
 fails here instead of shipping an empty artifact.
 
+When ``--fig-faults BENCH_fig_faults.json`` is given, three more
+machine-free checks cover the failure suite (docs/DESIGN.md §11):
+
+* row presence — every ``--expect-fig-faults`` backend:n pair must
+  have its ``nofault``, ``storm``, and ``recovery`` rows;
+* idle-cost — the ``nofault`` epoch p50 must stay within
+  ``--max-nofault-ratio`` of the matching ``fig06/scale/fused_epoch``
+  epoch p50 (identical workload config minus the health layer being
+  armed), so the always-on health threading cannot silently tax the
+  fused megastep;
+* recovery bound — warm ``recovery_s_p50`` must stay within
+  ``--max-recovery-ratio`` x (``replay_epochs`` x the nofault epoch
+  p50 carried in the row as ``epoch_p50_us``): restoring a snapshot
+  and replaying the WAL tail must never cost much more than just
+  running those epochs, or recovery has rotted into a full re-run.
+
 Usage:
     python benchmarks/check_fig12_regression.py BASELINE FRESH \
         [--threshold 1.5] [--prefixes fig12/jax_batch/full_step,...] \
-        [--fig06 BENCH_fig06.json] [--expect-fig06-scale jnp:2048]
+        [--fig06 BENCH_fig06.json] [--expect-fig06-scale jnp:2048] \
+        [--fig-faults BENCH_fig_faults.json] \
+        [--expect-fig-faults jnp:2048]
 """
 from __future__ import annotations
 
@@ -95,6 +113,20 @@ def main() -> int:
     ap.add_argument("--expect-fig06-scale", default="jnp:2048",
                     help="comma-separated backend:n_leaves pairs that "
                          "must exist as fig06/scale rows")
+    ap.add_argument("--fig-faults", default=None,
+                    help="fresh BENCH_fig_faults.json to gate (omit to "
+                         "skip the failure-suite checks)")
+    ap.add_argument("--expect-fig-faults", default="jnp:2048",
+                    help="comma-separated backend:n_leaves pairs that "
+                         "must have nofault/storm/recovery rows")
+    ap.add_argument("--max-nofault-ratio", type=float, default=1.25,
+                    help="max nofault epoch p50 over the matching "
+                         "fig06/scale/fused_epoch p50 — the idle cost "
+                         "of the always-on health threading")
+    ap.add_argument("--max-recovery-ratio", type=float, default=2.0,
+                    help="max recovery_s_p50 over replay_epochs x "
+                         "epoch p50 — recovery must not cost much more "
+                         "than re-running the replayed epochs")
     args = ap.parse_args()
     base = load(args.baseline)
     fresh = load(args.fresh)
@@ -278,6 +310,71 @@ def main() -> int:
                 else:
                     print(f"ok  fig06 scale row present: {row} "
                           f"({fig06[row]/1e6:.3f}s/epoch)")
+
+    # failure-suite gates (docs/DESIGN.md §11): row presence, idle
+    # health-threading cost, and the recovery-vs-replay bound.  All
+    # ratios compare rows produced by the same run (or the fig06 run
+    # in the same job), so they are machine-free like the shape checks
+    if args.fig_faults:
+        def dval(d, key):
+            m = re.search(rf"{key}=([0-9.eE+-]+)", d)
+            return float(m.group(1)) if m else None
+        try:
+            ff_d = load_derived(args.fig_faults)
+        except FileNotFoundError:
+            ff_d = {}
+            failures.append(f"fig_faults file missing: "
+                            f"{args.fig_faults} — run fig_faults.py "
+                            f"before the gate")
+        try:
+            f06_d = load_derived(args.fig06) if args.fig06 else {}
+        except FileNotFoundError:
+            f06_d = {}
+        for spec in filter(None, args.expect_fig_faults.split(",")):
+            bk, _, n = spec.partition(":")
+            suffix = f"backend={bk}/n={int(n)}"
+            for fam in ("nofault", "storm", "recovery"):
+                row = f"fig_faults/{fam}/{suffix}"
+                if row not in ff_d:
+                    failures.append(
+                        f"expected fig_faults row missing: {row} — "
+                        f"the failure suite silently stopped being "
+                        f"benchmarked (rows present: "
+                        f"{sorted(ff_d)})")
+            nf = dval(ff_d.get(f"fig_faults/nofault/{suffix}", ""),
+                      "epoch_s_p50")
+            f06 = dval(f06_d.get(f"fig06/scale/fused_epoch/{suffix}",
+                                 ""), "epoch_s_p50")
+            if nf is not None and f06 is not None:
+                ratio = nf / f06
+                tag = ("FAIL" if ratio > args.max_nofault_ratio
+                       else "ok")
+                print(f"{tag}  nofault/fused_epoch p50 ratio "
+                      f"{suffix}: {ratio:.2f}x (nofault {nf:.3f}s, "
+                      f"fig06 fused {f06:.3f}s, bound "
+                      f"{args.max_nofault_ratio:.2f}x)")
+                if ratio > args.max_nofault_ratio:
+                    failures.append(
+                        f"health threading taxes the idle megastep: "
+                        f"fig_faults nofault {suffix} epoch p50 is "
+                        f"{ratio:.2f}x the fig06 fused_epoch row "
+                        f"(> {args.max_nofault_ratio:.2f}x)")
+            rec_d = ff_d.get(f"fig_faults/recovery/{suffix}", "")
+            rec = dval(rec_d, "recovery_s_p50")
+            replay = dval(rec_d, "replay_epochs")
+            ep = dval(rec_d, "epoch_p50_us")
+            if rec is not None and replay and ep:
+                bound = args.max_recovery_ratio * replay * ep / 1e6
+                tag = "FAIL" if rec > bound else "ok"
+                print(f"{tag}  recovery p50 {suffix}: {rec:.3f}s vs "
+                      f"bound {bound:.3f}s ({args.max_recovery_ratio}"
+                      f"x {replay:.0f} epochs x {ep / 1e6:.3f}s)")
+                if rec > bound:
+                    failures.append(
+                        f"recovery {suffix} p50 {rec:.3f}s exceeds "
+                        f"{bound:.3f}s — snapshot restore + WAL "
+                        f"replay costs more than re-running the "
+                        f"replayed epochs x {args.max_recovery_ratio}")
 
     if compared == 0:
         failures.append("no benchmark rows matched the baseline — "

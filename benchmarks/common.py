@@ -3,7 +3,9 @@ and machine-readable JSON dumps (perf trajectory tracking across PRs)."""
 from __future__ import annotations
 
 import json
+import os
 import statistics
+import tempfile
 import time
 from typing import Callable, Dict, List, Optional
 
@@ -16,17 +18,39 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(row, flush=True)
 
 
+def atomic_write_json(path: str, obj) -> None:
+    """Crash-safe JSON writer: dump to a temp file in the TARGET
+    directory (same filesystem, so the rename is atomic), fsync, then
+    ``os.replace`` — a process killed mid-dump can never truncate a
+    BENCH_*.json the regression gate reads (lcheck rule LC008)."""
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=".tmp_bench_",
+                               suffix=".json")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(obj, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+
+
 def dump_json(path: str, prefix: str = "") -> int:
-    """Write every emitted row whose name starts with ``prefix`` as a
-    JSON list of {name, us_per_call, derived}. Returns the row count."""
+    """Atomically write every emitted row whose name starts with
+    ``prefix`` as a JSON list of {name, us_per_call, derived}.
+    Returns the row count."""
     rows = []
     for row in ROWS:
         name, us, derived = row.split(",", 2)
         if name.startswith(prefix):
             rows.append({"name": name, "us_per_call": float(us),
                          "derived": derived})
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=1)
+    atomic_write_json(path, rows)
     print(f"# wrote {len(rows)} rows to {path}", flush=True)
     return len(rows)
 

@@ -1,0 +1,175 @@
+"""Fault-tolerance benchmark: retention under failure storms + crash
+recovery wall-time (docs/DESIGN.md §11).
+
+Three row families, dumped atomically to ``BENCH_fig_faults.json``:
+
+* ``fig_faults/nofault/backend={bk}/n={n}`` — the fused fleet epoch
+  with no fault schedule, but paying the always-on health threading
+  (schema field + mask in clear).  This is the
+  "fault layer costs nothing when idle" guard: the regression gate
+  compares its epoch p50 against the corresponding
+  ``fig06/scale/fused_epoch`` row (same machine, same run conventions)
+  and fails if the health-threading regressed the megastep.
+* ``fig_faults/storm/backend={bk}/n={n}`` — the same scenario under a
+  seeded rack-failure storm + one zone supply shock: mean retention,
+  forced-eviction (``revoked_by_fault``) count, epoch p50.
+* ``fig_faults/recovery/backend={bk}/n={n}`` — median wall-time for a
+  crash-consistent resume (sim/recovery.py): the run is killed at the
+  final epoch, recovery restores the last snapshot and replays the WAL
+  tail.  ``derived`` carries ``epoch_p50_us`` (the nofault epoch cost)
+  so the gate can bound recovery as a machine-free multiple of epoch
+  cost.
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dump_json, emit
+from repro.market_jax.engine import build_tree
+from repro.sim.faults import (FaultEvent, FaultInjector,
+                              rack_failure_storm, zone_supply_shock)
+from repro.sim.recovery import CrashSafeRunner, SimulatedCrash, _ticks
+from repro.sim.simulator import (FleetScenarioConfig,
+                                 _seed_floors, make_fleet,
+                                 run_fleet_scenario)
+
+BENCH_JSON = "BENCH_fig_faults.json"
+
+# cases: (n_leaves, (train, infer, batch), epochs, backends)
+CASES = [
+    (2048, (96, 96, 64), 20, ("jnp", "pallas")),
+    (10_000, (384, 384, 232), 15, ("jnp",)),
+]
+QUICK_CASES = [(2048, (96, 96, 64), 12, ("jnp",))]
+
+SNAPSHOT_EVERY = 5          # recovery replays up to 4 WAL epochs
+RECOVERY_REPEATS = 3
+
+
+def _fcfg(n, mix, epochs, bk, quick, faults=None):
+    return FleetScenarioConfig(
+        regime="heavy", n_leaves=n, n_training=mix[0],
+        n_inference=mix[1], n_batch=mix[2],
+        duration_s=epochs * 60.0, tick_s=60.0, seed=1, k=16,
+        b_max=256 if quick else 1024, use_pallas=(bk == "pallas"),
+        interpret=True, alone="analytic", fused=True, faults=faults)
+
+
+def _storm(n, epochs):
+    dur = epochs * 60.0
+    return (rack_failure_storm(build_tree(n), 120.0, dur * 0.6, 180.0,
+                               240.0, racks_per_burst=2, seed=7)
+            + zone_supply_shock(dur * 0.3, dur * 0.7, zone=0))
+
+
+def _scenario_row(tag, fcfg, bk, n):
+    t0 = time.perf_counter()
+    r = run_fleet_scenario(fcfg)
+    wall = time.perf_counter() - t0
+    ep = np.array(r.epoch_s[1:] or r.epoch_s)
+    emit(f"fig_faults/{tag}/backend={bk}/n={n}",
+         float(np.mean(ep)) * 1e6,
+         f"mean_retention={r.mean_retention:.3f} "
+         f"tenants={fcfg.n_tenants} epochs={len(r.epoch_s)} "
+         f"epoch_s_p50={np.percentile(ep, 50):.3f} "
+         f"revoked_by_fault={r.stats['revoked_by_fault']} "
+         f"transfers={r.stats['transfers']} total_s={wall:.1f}")
+    return float(np.percentile(ep, 50))
+
+
+def _recovery_row(n, mix, epochs, bk, quick, epoch_p50_s):
+    """Kill a crash-safe run at its final epoch, then time resume():
+    snapshot restore + WAL replay of the post-snapshot tail.  Each
+    repeat resumes from a pristine copy of the post-crash workdir —
+    resume itself writes fresh snapshots, so reusing one dir would
+    leave later repeats nothing to replay."""
+    fcfg = _fcfg(n, mix, epochs, bk, quick)
+    events = _storm(n, epochs)
+    ticks = _ticks(fcfg.duration_s, fcfg.tick_s)
+    last = len(ticks) - 1
+    kill = [FaultEvent(ticks[-1], "crash", phase="post_step")]
+    root = tempfile.mkdtemp(prefix="fig_faults_rec_")
+    try:
+        pristine = f"{root}/pristine"
+        topo, _, market, fleet, params = make_fleet(fcfg)
+        _seed_floors(market, topo)
+        runner = CrashSafeRunner(market, fleet, "H100", pristine,
+                                 snapshot_every=SNAPSHOT_EVERY,
+                                 injector=FaultInjector(events + kill))
+        try:
+            runner.run(params, fcfg.duration_s, fcfg.tick_s)
+            raise AssertionError("scheduled crash did not fire")
+        except SimulatedCrash:
+            pass
+        # crash at post_step of the last epoch fires before that
+        # epoch's snapshot: replay distance back to the last multiple
+        # of SNAPSHOT_EVERY strictly below it
+        replay = last % SNAPSHOT_EVERY or SNAPSHOT_EVERY
+        # one market/fleet across repeats: resume() overwrites their
+        # state from the snapshot, and the engine's jitted methods are
+        # cached per-object — repeat 0 pays XLA compile (reported as
+        # recovery_s_cold), the p50 over the warm repeats measures
+        # restore + WAL replay, which is what the gate bounds
+        topo, _, market, fleet, params = make_fleet(fcfg)
+        _seed_floors(market, topo)
+        times = []
+        for i in range(RECOVERY_REPEATS + 1):
+            rep = f"{root}/rep{i}"
+            shutil.copytree(pristine, rep)
+            r2 = CrashSafeRunner(market, fleet, "H100", rep,
+                                 snapshot_every=SNAPSHOT_EVERY,
+                                 injector=FaultInjector(events))
+            t0 = time.perf_counter()
+            r2.resume(params, fcfg.duration_s, fcfg.tick_s)
+            times.append(time.perf_counter() - t0)
+            shutil.rmtree(rep, ignore_errors=True)
+        cold, warm = times[0], times[1:]
+        p50 = float(np.median(warm))
+        emit(f"fig_faults/recovery/backend={bk}/n={n}", p50 * 1e6,
+             f"recovery_s_p50={p50:.3f} recovery_s_cold={cold:.3f} "
+             f"replay_epochs={replay} "
+             f"snapshot_every={SNAPSHOT_EVERY} "
+             f"repeats={RECOVERY_REPEATS} "
+             f"epoch_p50_us={epoch_p50_s * 1e6:.1f}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def run(quick: bool = False, backend: str = "both"):
+    sel = ("jnp", "pallas") if backend == "both" else (backend,)
+    cases = QUICK_CASES if quick else CASES
+    ran = False
+    for n, mix, epochs, case_bks in cases:
+        for bk in case_bks:
+            if bk not in sel:
+                continue
+            ran = True
+            # no schedule → no injector is even built; the row still
+            # pays the always-on health threading (schema field + mask
+            # in clear), which is exactly the cost under test
+            p50 = _scenario_row(
+                "nofault", _fcfg(n, mix, epochs, bk, quick), bk, n)
+            _scenario_row(
+                "storm",
+                _fcfg(n, mix, epochs, bk, quick,
+                      faults=_storm(n, epochs)), bk, n)
+            _recovery_row(n, mix, epochs, bk, quick, p50)
+    if not ran:
+        emit("fig_faults/NO_CASES", 0.0,
+             f"backend filter {sel} matched no case — nothing ran")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="single reduced 2048-leaf jnp case")
+    ap.add_argument("--backend", choices=("jnp", "pallas", "both"),
+                    default="both")
+    ns = ap.parse_args()
+    run(quick=ns.quick, backend=ns.backend)
+    dump_json(BENCH_JSON, prefix="fig_faults")

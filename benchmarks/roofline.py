@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import json
 import pathlib
+import sys
 import time
 from typing import Dict, List, Optional
 
@@ -29,8 +30,11 @@ def load_cells(mesh: str = "single") -> List[Dict]:
     for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
         try:
             out.append(json.loads(p.read_text()))
-        except Exception:
-            pass
+        except (OSError, json.JSONDecodeError) as e:
+            # dryrun writes atomically (launch/dryrun.py _write_rec),
+            # so a bad cell is worth a loud skip, not a silent one
+            print(f"# roofline: skipping unreadable {p.name}: {e}",
+                  file=sys.stderr)
     return out
 
 
@@ -60,7 +64,7 @@ def roofline_row(rec: Dict) -> Optional[Dict]:
         kb = kernelized_bytes(cfg, SHAPES[rec["shape"]], dp, 16)
         kmem_s = kb / HBM_BW
     except Exception:
-        pass
+        kmem_s = None       # optional refinement; base roofline stands
     terms = {"compute": compute_s, "memory": memory_s,
              "collective": coll_s}
     dom = max(terms, key=terms.get)

@@ -37,11 +37,11 @@ from repro.kernels.market_clear.kernel import clear_pallas
 def clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
           level_floor, level_off: Tuple[int, ...],
           strides: Tuple[int, ...], owner, limit, k: int, *,
-          use_pallas: bool = False, interpret: Optional[bool] = None,
-          block: int = 512):
+          health=None, use_pallas: bool = False,
+          interpret: Optional[bool] = None, block: int = 512):
     return _clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
                   level_floor, level_off, strides, owner, limit, k,
-                  use_pallas=use_pallas,
+                  health=health, use_pallas=use_pallas,
                   interpret=resolve_interpret(interpret), block=block)
 
 
@@ -50,13 +50,22 @@ def clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
 def _clear(order, sorted_gseg, seg_start, prices, tenants, seqs,
            level_floor, level_off: Tuple[int, ...],
            strides: Tuple[int, ...], owner, limit, k: int, *,
-           use_pallas: bool, interpret: bool, block: int):
+           health, use_pallas: bool, interpret: bool, block: int):
     n_seg = seg_start.shape[0] - 1
     aggs = R._prefix_aggregates(order, sorted_gseg, seg_start, prices,
                                 tenants, seqs, n_seg, k)
     if use_pallas:
-        return clear_pallas(*aggs, tuple(level_floor), level_off,
-                            strides, owner, limit, block=block,
-                            interpret=interpret)
-    return R.clear_sorted_from_aggs(aggs, tuple(level_floor), level_off,
-                                    strides, owner, limit, k)
+        out = clear_pallas(*aggs, tuple(level_floor), level_off,
+                           strides, owner, limit, block=block,
+                           interpret=interpret)
+    else:
+        out = R.clear_sorted_from_aggs(aggs, tuple(level_floor),
+                                       level_off, strides, owner,
+                                       limit, k)
+    if health is not None:
+        # One shared mask AFTER backend dispatch: non-up leaves get
+        # all-hole slates, floor-only rates, and floor-pressure-only
+        # evicts — identical on both backends by construction.
+        out = R.apply_health_mask(health, *out, tuple(level_floor),
+                                  strides, owner, limit)
+    return out

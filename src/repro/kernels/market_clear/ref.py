@@ -66,6 +66,48 @@ NEG = -1e30
 EPSF = 1e-6
 BIGS = 1 << 30              # slot/seq sentinel above any real value
 
+# per-leaf health lattice (docs/DESIGN.md §11): UP clears normally;
+# DRAINING accepts no new owners but honors existing retention limits;
+# DOWN additionally force-evicts its owner (BatchEngine.step)
+HEALTH_UP = 0
+HEALTH_DRAINING = 1
+HEALTH_DOWN = 2
+
+
+def apply_health_mask(health, rate, best_level, cand_slots, truncated,
+                      evict, level_floor, strides, owner, limit):
+    """Post-clearing health mask — applied ONCE, after backend dispatch
+    (``ops.clear``), so the jnp oracle and the Pallas kernel stay
+    bit-identical by construction.
+
+    Non-``UP`` leaves (draining or down) accept no new owners: their
+    candidate slates become all-holes and ``truncated`` clears (an
+    empty masked slate is CONCLUSIVE — the cascade must fall back to
+    the operator, not wait for a re-clear).  Their charged rate drops
+    to the path floor alone (no phantom bid pressure from a book they
+    can't trade in), which is also what makes "no charge past the
+    failure tick" exact for down leaves once the owner is gone.
+    ``evict`` is recomputed against the floor-only rate, so a draining
+    leaf's owner is evicted only by operator floor pressure exceeding
+    its retention limit — existing limits are honored, exactly the
+    paper's operator-revocation-via-floors mechanism.
+    """
+    n_leaves = owner.shape[0]
+    leaf = jnp.arange(n_leaves, dtype=jnp.int32)
+    floor = jnp.zeros((n_leaves,), jnp.float32)
+    for d, s in enumerate(strides):
+        floor = jnp.maximum(floor, level_floor[d][leaf // s])
+    not_up = health != HEALTH_UP
+    cand_slots = jnp.where(not_up[:, None], -1, cand_slots)
+    truncated = jnp.where(not_up, 0, truncated)
+    rate = jnp.where(not_up, jnp.maximum(floor, 0.0), rate)
+    best_level = jnp.where(not_up, -1, best_level)
+    evict = jnp.where(
+        not_up,
+        ((owner >= 0) & (rate > limit + EPSF)).astype(jnp.int32),
+        evict)
+    return rate, best_level, cand_slots, truncated, evict
+
 
 def sort_book(gseg: jax.Array, prices: jax.Array, seqs: jax.Array
               ) -> Tuple[jax.Array, jax.Array]:

@@ -37,6 +37,17 @@ _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"\b(pred|[sufbc]\d+|bf16)\[([\d,]*)\]")
 
 
+def _write_rec(out_path: pathlib.Path, rec: Dict[str, Any]) -> None:
+    """Atomic cell-record write: a sweep killed mid-dump must not leave
+    a truncated json for ``roofline.load_cells`` to choke on."""
+    tmp = out_path.with_name(f".tmp_{out_path.name}")
+    with open(tmp, "w") as f:
+        f.write(json.dumps(rec, indent=1))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, out_path)
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     for d in dims.split(","):
@@ -168,7 +179,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         rec["reason"] = ("long-context decode requires sub-quadratic "
                         "attention; this arch is pure full-attention "
                         "(see docs/DESIGN.md §Arch-applicability)")
-        out_path.write_text(json.dumps(rec, indent=1))
+        _write_rec(out_path, rec)
         return rec
     try:
         from repro.launch.cells import reduced_depth
@@ -257,7 +268,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         rec["traceback"] = traceback.format_exc()[-4000:]
         print(f"[{arch} {shape_name} {mesh_kind}] FAILED: {e}",
               file=sys.stderr, flush=True)
-    out_path.write_text(json.dumps(rec, indent=1))
+    _write_rec(out_path, rec)
     return rec
 
 

@@ -93,7 +93,8 @@ class BatchMarket:
         self.bills: Dict[str, float] = {}
         self.on_transfer: List[Callable] = []
         self.stats = {"orders": 0, "transfers": 0, "implicit_relinquish": 0,
-                      "explicit_relinquish": 0, "cancels": 0}
+                      "explicit_relinquish": 0, "cancels": 0,
+                      "revoked_by_fault": 0}
         for rtype, root in topo.roots.items():
             self._build_tree(rtype, root, capacity, use_pallas)
 
@@ -156,7 +157,7 @@ class BatchMarket:
             st = self.states[rtype]
             h = {k: np.asarray(st[k]) for k in
                  ("price", "blimit", "level", "node", "tenant", "seq",
-                  "owner", "limit", "rate", "bills")}
+                  "owner", "limit", "rate", "bills", "health")}
             h["floor"] = [np.asarray(f) for f in st["floor"]]
             self._np[rtype] = h
         return h
@@ -181,6 +182,8 @@ class BatchMarket:
             explicit = set(np.nonzero(np.asarray(explicit))[0].tolist())
         old = np.asarray(transfers["old"])
         new = np.asarray(transfers["new"])
+        rev = transfers.get("revoked_by_fault")
+        rev = np.zeros_like(moved) if rev is None else np.asarray(rev)
         rates = self._host(rtype)["rate"]
         leaves = self._leaf_global[rtype]
         for i in np.nonzero(moved)[0]:
@@ -191,6 +194,9 @@ class BatchMarket:
                 self.stats["transfers"] += 1
                 if reason == "limit":
                     self.stats["implicit_relinquish"] += 1
+            elif rev[i]:
+                reason = "fault"
+                self.stats["revoked_by_fault"] += 1
             else:
                 reason = "explicit" if i in explicit else "reclaim"
             for cb in self.on_transfer:
@@ -225,6 +231,23 @@ class BatchMarket:
         policy; the next step re-clears)."""
         eng = self.engines[rtype]
         self.states[rtype] = eng.cancel_all(self.states[rtype])
+        self._np[rtype] = None
+
+    def set_health(self, node: int, value: int) -> None:
+        """Set failure-domain health at any topology node (leaf, host,
+        rack, zone): every engine leaf under it gets ``value``
+        (``engine.HEALTH_UP/DRAINING/DOWN``) in one scatter.  Owners on
+        newly-down leaves are force-evicted by the NEXT step, billed up
+        to that step's tick (transfer reason ``"fault"``)."""
+        if node in self._leaf_local:
+            rtype, idx = self._leaf_local[node]
+            d = 0
+        else:
+            rtype, d, idx = self._node_map[node]
+        eng = self.engines[rtype]
+        self.states[rtype] = eng.set_health(
+            self.states[rtype], jnp.array([d], jnp.int32),
+            jnp.array([idx], jnp.int32), jnp.array([value], jnp.int32))
         self._np[rtype] = None
 
     def step_arrays(self, rtype: str, t: float, bids=None,
@@ -275,6 +298,8 @@ class BatchMarket:
             self.stats["implicit_relinquish"] += int(
                 (taken & ~expl
                  & (np.asarray(transfers["old"]) >= 0)).sum())
+            self.stats["revoked_by_fault"] += int(
+                np.asarray(transfers["revoked_by_fault"]).sum())
         return transfers
 
     def reset(self) -> None:

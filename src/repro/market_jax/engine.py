@@ -98,6 +98,9 @@ from repro.kernels.market_clear import ops as clear_ops
 
 NEG = R.NEG
 EPSF = R.EPSF
+HEALTH_UP = R.HEALTH_UP
+HEALTH_DRAINING = R.HEALTH_DRAINING
+HEALTH_DOWN = R.HEALTH_DOWN
 
 
 @dataclass(frozen=True)
@@ -173,6 +176,10 @@ class BatchEngine:
             "limit": jnp.full((t.n_leaves,), jnp.inf, jnp.float32),
             "acq_t": jnp.zeros((t.n_leaves,), jnp.float32),
             "rate": jnp.zeros((t.n_leaves,), jnp.float32),
+            # per-leaf failure-domain health (docs/DESIGN.md §11):
+            # 0 up, 1 draining (no new owners, retention honored),
+            # 2 down (excluded from slates, owner force-evicted)
+            "health": jnp.zeros((t.n_leaves,), jnp.int32),
             # billing
             "bills": jnp.zeros((self.n_tenants,), jnp.float32),
             "t": jnp.zeros((), jnp.float32),
@@ -450,6 +457,42 @@ class BatchEngine:
         state["tenant"] = state["tenant"].at[bid_ids].set(-1)
         return state
 
+    @functools.partial(jax.jit, static_argnums=0)
+    def set_health(self, state, levels, nodes, values):
+        """Batched failure-domain health update — ONE scatter over each
+        domain's leaf range.  ``levels``/``nodes``/``values`` are (m,)
+        int32: the failure domain is node ``nodes[i]`` at tree level
+        ``levels[i]`` (0 = leaf … n_levels-1 = root) and every leaf
+        under it gets ``values[i]`` (HEALTH_UP/DRAINING/DOWN).
+        ``values[i] < 0`` is padding.  Events must be ordered: when two
+        domains overlap, the LATER entry wins — so applying a sorted
+        event batch is equivalent to applying the events one at a time,
+        which is what makes recovery's fast-forward re-apply idempotent.
+
+        Eviction of owners on newly-down leaves happens in the next
+        ``step`` (billed up to that step's tick), not here — this is a
+        pure metadata scatter and stays valid mid-epoch.
+        """
+        m = levels.shape[0]      # static under jit: batch width
+        if m == 0:
+            return state
+        tree = self.tree
+        leaf = jnp.arange(tree.n_leaves, dtype=jnp.int32)
+        strides = jnp.array(tree.strides, jnp.int32)
+        live = values >= 0
+        lvl = jnp.clip(levels, 0, tree.n_levels - 1)
+        anc = leaf[None, :] // strides[lvl][:, None]     # (m, n_leaves)
+        cover = live[:, None] & (anc == nodes[:, None])
+        idx = jnp.arange(m, dtype=jnp.int32)
+        last = jnp.max(jnp.where(cover, idx[:, None], -1), axis=0)
+        health = jnp.where(
+            last >= 0,
+            values[jnp.clip(last, 0, m - 1)],
+            state["health"]).astype(jnp.int32)
+        state = dict(state)
+        state["health"] = health
+        return state
+
     # ------------------------------------------------------------------
     def _clear_arrays(self, state, interpret: Optional[bool] = None):
         """Clearing pass (jnp oracle or Pallas kernel — ONE shared
@@ -465,7 +508,7 @@ class BatchEngine:
             state["price"], state["tenant"], state["seq"],
             tuple(state["floor"]), self.level_off, self.tree.strides,
             state["owner"], state["limit"], self.k,
-            use_pallas=self.use_pallas,
+            health=state["health"], use_pallas=self.use_pallas,
             interpret=self.interpret if interpret is None else interpret)
 
     @functools.partial(jax.jit, static_argnums=(0, 2))
@@ -715,6 +758,16 @@ class BatchEngine:
             jnp.where(owner0 >= 0, state["rate"] * dt_h, 0.0),
             mode="drop")
         state["t"] = t
+        # 1b) failure-domain revocation: owners on DOWN leaves are
+        #     force-evicted now — AFTER the accrual above, so the owner
+        #     is billed up to the failure tick and not a second past it.
+        #     Down leaves then stay idle (apply_health_mask blanks their
+        #     slates), draining leaves keep owners but accept no new
+        #     ones; repairs just flip health back and the next clear
+        #     re-admits the leaf.
+        fault_evict = (state["health"] == HEALTH_DOWN) & (owner0 >= 0)
+        state["owner"] = jnp.where(fault_evict, -1, state["owner"])
+        state["limit"] = jnp.where(fault_evict, jnp.inf, state["limit"])
         no_release = jnp.zeros((tree.n_leaves,), jnp.bool_)
         # 2) deferred min-holding evictions matured by time passage fire
         #    BEFORE this step's events (matching Market.advance_to)
@@ -765,7 +818,8 @@ class BatchEngine:
             release = hits > 0
         state = self._cascade(state, t, release)
         transfers = {"moved": owner0 != state["owner"], "old": owner0,
-                     "new": state["owner"]}
+                     "new": state["owner"],
+                     "revoked_by_fault": fault_evict}
         return state, transfers, state["bills"]
 
 

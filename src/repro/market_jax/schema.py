@@ -109,6 +109,11 @@ SCHEMA: Dict[str, KeySpec] = {
     "rate": KeySpec("f32", ("n_leaves",),
                     "charged rate cached from the last clearing pass; "
                     "finite, >= 0"),
+    "health": KeySpec("i32", ("n_leaves",),
+                      "failure-domain health: 0 up, 1 draining (no new "
+                      "owners, retention honored), 2 down (excluded "
+                      "from slates, owner force-evicted by step); no "
+                      "owner on a down leaf post-step"),
     # ---- billing / clock / instrumentation ----
     "bills": KeySpec("f32", ("n_tenants",),
                      "cumulative per-tenant bill = integral rate dt; "
@@ -298,6 +303,12 @@ def _runtime_checks(engine, state) -> None:
                    "(reclaims must reset limit to +inf)")
     checkify.check(jnp.all(state["acq_t"] <= state["t"] + eps),
                    "acquisition time in the future")
+    health = state["health"]
+    checkify.check(jnp.all((health >= 0) & (health <= 2)),
+                   "health outside the up/draining/down lattice [0, 2]")
+    checkify.check(jnp.all((health != 2) | (owner < 0)),
+                   "owner on a down leaf (step must force-evict before "
+                   "any owner can persist on health == down)")
     checkify.check(
         jnp.all(jnp.isfinite(state["rate"]) & (state["rate"] >= 0)),
         "charged rate non-finite or negative")

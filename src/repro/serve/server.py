@@ -11,8 +11,9 @@ queue latency is the utility gap the tenant bids from.
 from __future__ import annotations
 
 import collections
+import time
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,6 +24,46 @@ from repro.models import model as M
 from repro.models import layers as L
 
 
+class ServeError(Exception):
+    """Base of the typed ingest errors; ``kind`` is the wire tag."""
+    kind = "serve_error"
+
+
+class QueueFull(ServeError):
+    kind = "queue_full"
+
+
+class RequestTimeout(ServeError):
+    kind = "timeout"
+
+
+class RetriesExhausted(ServeError):
+    kind = "retries_exhausted"
+
+    def __init__(self, msg: str, attempts: int,
+                 backoffs: List[float]) -> None:
+        super().__init__(msg)
+        self.attempts = attempts
+        self.backoffs = backoffs
+
+
+@dataclass
+class IngestConfig:
+    """Admission-control knobs for `Server.submit` (docs/DESIGN.md §11):
+    bounded queue with a typed reject, idempotency-key dedup over a
+    sliding window, client-side bounded retry with exponential backoff
+    + jitter, and a tick-based total-age timeout."""
+    max_queue: int = 64             # 0 = unbounded
+    dedup_window: int = 256         # idempotency keys remembered
+    max_retries: int = 4
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    jitter_frac: float = 0.2        # +/- fraction of the backoff
+    timeout_ticks: int = 0          # 0 = no timeout; else max server
+    # ticks from submit to completion before the request fails with
+    # RequestTimeout (queued or mid-decode alike)
+
+
 @dataclass
 class Request:
     rid: int
@@ -30,19 +71,30 @@ class Request:
     max_new: int = 16
     out: List[int] = field(default_factory=list)
     done: bool = False
+    error: Optional[ServeError] = None
+    _submit_tick: int = -1
 
 
 class Server:
     def __init__(self, cfg: ArchConfig, params: Any, *, max_len: int = 256,
-                 batch_slots: int = 4) -> None:
+                 batch_slots: int = 4,
+                 ingest: Optional[IngestConfig] = None) -> None:
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.B = batch_slots
+        self.ingest = ingest or IngestConfig()
         self.queue: Deque[Request] = collections.deque()
         self.slots: List[Optional[Request]] = [None] * batch_slots
         self.pos = np.zeros(batch_slots, np.int32)
         self.cache = None
+        self.tick_no = 0
+        # idempotency key -> Request, insertion-ordered for window
+        # eviction; a remembered key resolves to the ORIGINAL request
+        # (possibly already completed) instead of enqueueing a twin
+        self._dedup: "collections.OrderedDict[str, Request]" = \
+            collections.OrderedDict()
+        self._done_log: List[Request] = []
         # decode state stays ON DEVICE across the whole generation:
         # next-token ids feed back into the next decode step without a
         # host round trip, and emitted tokens accumulate into _out_buf;
@@ -64,8 +116,56 @@ class Server:
             lambda p, b: M.prefill(p, cfg, b, max_len=max_len,
                                    scan_layers=False))
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request,
+               idempotency_key: Optional[str] = None) -> Request:
+        """Admit a request.  A repeated ``idempotency_key`` inside the
+        dedup window returns the original request (completed or not)
+        without enqueueing; a full queue raises the typed `QueueFull`."""
+        if idempotency_key is not None:
+            prior = self._dedup.get(idempotency_key)
+            if prior is not None:
+                return prior
+        if self.ingest.max_queue and \
+                len(self.queue) >= self.ingest.max_queue:
+            raise QueueFull(
+                f"queue at capacity {self.ingest.max_queue}")
+        req._submit_tick = self.tick_no
         self.queue.append(req)
+        if idempotency_key is not None:
+            self._dedup[idempotency_key] = req
+            while len(self._dedup) > self.ingest.dedup_window:
+                self._dedup.popitem(last=False)
+        return req
+
+    def submit_with_retry(self, req: Request,
+                          idempotency_key: Optional[str] = None,
+                          rng: Optional[np.random.Generator] = None,
+                          sleep: Callable[[float], None] = time.sleep
+                          ) -> Request:
+        """Bounded retry around `submit`: on `QueueFull`, back off
+        exponentially (base * 2^attempt, capped) with +/- jitter, then
+        retry — at most ``max_retries`` times before the typed
+        `RetriesExhausted`.  ``sleep`` is a hook so simulations can run
+        server ticks (draining the queue) instead of wall-clock waits;
+        ``rng`` defaults to a generator seeded from the rid, keeping
+        the jitter sequence reproducible per request."""
+        ig = self.ingest
+        rng = rng or np.random.default_rng(req.rid)
+        backoffs: List[float] = []
+        for attempt in range(ig.max_retries + 1):
+            try:
+                return self.submit(req, idempotency_key)
+            except QueueFull as e:
+                if attempt == ig.max_retries:
+                    raise RetriesExhausted(
+                        f"gave up after {attempt} retries: {e}",
+                        attempts=attempt, backoffs=backoffs) from e
+                b = min(ig.backoff_cap_s,
+                        ig.backoff_base_s * (2.0 ** attempt))
+                b *= 1.0 + ig.jitter_frac * (2.0 * rng.random() - 1.0)
+                backoffs.append(b)
+                sleep(b)
+        raise AssertionError("unreachable")
 
     # ------------------------------------------------------------------
     def _blank_cache(self):
@@ -112,6 +212,32 @@ class Server:
         req.done = True
         self.slots[i] = None
         self._n_out[i] = 0
+        self._done_log.append(req)
+
+    def _expire(self) -> None:
+        """Fail every request older than ``timeout_ticks`` with the
+        typed `RequestTimeout` — queued requests are dropped outright,
+        in-flight ones keep their partial output."""
+        tt = self.ingest.timeout_ticks
+        if not tt:
+            return
+        live = collections.deque()
+        for req in self.queue:
+            if self.tick_no - req._submit_tick >= tt:
+                req.error = RequestTimeout(
+                    f"req {req.rid}: queued past {tt} ticks")
+                req.done = True
+                self._done_log.append(req)
+            else:
+                live.append(req)
+        self.queue = live
+        for i in range(self.B):
+            req = self.slots[i]
+            if req is not None and \
+                    self.tick_no - req._submit_tick >= tt:
+                self._finish_slot(i)      # keeps partial tokens
+                req.error = RequestTimeout(
+                    f"req {req.rid}: exceeded {tt} ticks mid-decode")
 
     def step(self) -> int:
         """One server tick: refill slots, one decode step. Returns number
@@ -119,6 +245,8 @@ class Server:
         decode jit) and next-token ids feed back device-to-device — no
         per-token host transfer; completion bookkeeping uses host-side
         counters only."""
+        self.tick_no += 1
+        self._expire()
         for i in range(self.B):
             if self.slots[i] is None and self.queue:
                 self._fill_slot(i, self.queue.popleft())
@@ -143,9 +271,11 @@ class Server:
         return len(active)
 
     def drain(self, max_ticks: int = 1000) -> List[Request]:
-        done: List[Request] = []
+        """Step until idle; returns the requests that finished during
+        this drain (including ones failed by the timeout)."""
+        n0 = len(self._done_log)
         ticks = 0
         while (self.queue or any(self.slots)) and ticks < max_ticks:
             self.step()
             ticks += 1
-        return done
+        return self._done_log[n0:]

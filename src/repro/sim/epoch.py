@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from repro.market_jax import schema
 
 STAT_KEYS = ("orders", "transfers", "explicit_relinquish",
-             "implicit_relinquish", "bids_clipped")
+             "implicit_relinquish", "bids_clipped", "revoked_by_fault")
 
 
 class EpochRunner:
@@ -99,6 +99,8 @@ class EpochRunner:
                            & (transfers["old"] >= 0)).astype(jnp.int32))
             stats["bids_clipped"] = stats["bids_clipped"] + \
                 jnp.asarray(info["bids_clipped"], jnp.int32)
+            stats["revoked_by_fault"] = stats["revoked_by_fault"] + \
+                jnp.sum(transfers["revoked_by_fault"].astype(jnp.int32))
         with jax.named_scope("epoch_after_step"):
             fleet_state, held = fleet.after_step(
                 params, fleet_state, t, owner_b, eng_state["owner"],
@@ -108,7 +110,7 @@ class EpochRunner:
         return eng_state, fleet_state, stats
 
     def drive(self, params, fleet_state, duration_s: float,
-              tick_s: float, time_epochs: bool = True
+              tick_s: float, time_epochs: bool = True, injector=None
               ) -> Tuple[dict, List[float], Dict[str, int]]:
         """Run fused epochs over [0, duration_s] at tick_s cadence.
 
@@ -118,6 +120,12 @@ class EpochRunner:
         ``time_epochs=False`` skips the per-epoch device sync entirely
         (epochs enqueue asynchronously; one sync at the end) and
         returns an empty timing list.
+
+        ``injector`` (optional ``sim.faults.FaultInjector``) applies
+        any health events due at each tick BEFORE that tick's epoch —
+        a host-side due-check that costs zero dispatches on fault-free
+        ticks, so a no-fault schedule keeps the one-dispatch-per-epoch
+        megastep intact.
         """
         market, rtype = self.market, self.rtype
         est = dict(market.states[rtype])
@@ -138,6 +146,8 @@ class EpochRunner:
         t = 0.0
         while t <= duration_s:
             t0 = time.perf_counter()
+            if injector is not None:
+                est = injector.apply_health(self.eng, est, t)
             est, fleet_state, stats = self.epoch(
                 params, est, fleet_state, stats, jnp.float32(t))
             if time_epochs:
@@ -152,6 +162,6 @@ class EpochRunner:
         schema.maybe_validate(est, self.eng, where=f"{rtype} state")
         host_stats = {k: int(stats[k]) for k in STAT_KEYS}
         for k in ("orders", "transfers", "explicit_relinquish",
-                  "implicit_relinquish"):
+                  "implicit_relinquish", "revoked_by_fault"):
             market.stats[k] += host_stats[k]
         return fleet_state, epoch_s, host_stats

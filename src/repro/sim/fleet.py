@@ -375,6 +375,24 @@ class Fleet:
                 "relinquished": jnp.sum(sel.astype(jnp.int32))}
         return limits, relinq, sel, bids, s, info
 
+    @functools.partial(jax.jit, static_argnums=0)
+    def apply_policy_log(self, state, now, owner, sel):
+        """WAL-replay twin of ``policy``'s ONLY fleet-state mutation
+        (the hysteresis stamp): reconstructs ``last_scale_down`` from
+        the logged graceful-release mask ``sel`` and the pre-step
+        ``owner`` — same formula, so recovery replay (sim/recovery.py)
+        that substitutes logged policy output for a live ``policy``
+        call stays bit-identical."""
+        n = self.cfg.n
+        s = dict(state)
+        now = jnp.asarray(now, jnp.float32)
+        owner_c = jnp.clip(owner, 0, n - 1)
+        rel_cnt = jnp.zeros((n,), jnp.int32).at[owner_c].add(
+            sel.astype(jnp.int32))
+        s["last_scale_down"] = jnp.where(rel_cnt > 0, now,
+                                         s["last_scale_down"])
+        return s
+
     # -------------------------------------------------------- transfers
     @functools.partial(jax.jit, static_argnums=0)
     def after_step(self, params, state, now, owner_before, owner_after,

@@ -1,0 +1,357 @@
+"""Crash-consistent fleet execution: snapshots + bid-batch WAL + replay
+(docs/DESIGN.md §11).
+
+``CrashSafeRunner`` runs the SAME per-epoch pipeline as the fused
+megastep (policy -> cancel_all -> step -> stats -> after_step ->
+advance; sim/epoch.py pins the building blocks bit-identical), adding
+two durable artifacts around it:
+
+* a per-epoch **write-ahead log** of the policy output (bids, limits,
+  relinquish, sel, bids_clipped) — appended and fsynced BEFORE the
+  engine step consumes it;
+* periodic **snapshots** of the whole run state (engine state, fleet
+  state, stats accumulators) through the existing atomic
+  ``CheckpointManager`` (tmp + ``os.replace``).
+
+Recovery contract: a process killed at ANY phase boundary restores the
+latest snapshot and replays strictly-later WAL records through
+``_replay_epoch`` — the logged policy output is substituted for a live
+``policy`` call (``Fleet.apply_policy_log`` reconstructs the one
+fleet-state mutation policy performs), then the identical
+cancel_all/step/stats/after_step/advance pipeline runs — and continues
+live from the first unlogged epoch.  Owners, rates, bills, retention
+and stats come out bit-identical to the uninterrupted run (the chaos
+differential in tests/test_recovery.py kills at every phase of
+randomized epochs on both backends and asserts exactly that).
+
+WAL format (append-only, framed)::
+
+    MAGIC b"LCW1" | u32 payload_len | u32 crc32(payload) | payload
+
+where payload is an ``np.savez`` archive of the record's arrays.  The
+reader walks frames from the start and discards a torn or corrupt tail
+(a crash mid-append — simulated by the ``mid_wal`` kill-point — loses
+at most the record being written, never earlier ones); ``resume``
+truncates the file back to the last valid frame before appending.
+
+Crash-kill events come from the ``FaultInjector`` schedule
+(``kind="crash"``); the raised :class:`SimulatedCrash` carries the
+event so a chaos harness can drop already-fired kills from the schedule
+it hands the next (resumed) process — crash events are external stimuli,
+not durable state, and must not re-fire on replay.
+"""
+from __future__ import annotations
+
+import io
+import os
+import struct
+import zlib
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.market_jax import schema
+from repro.sim.epoch import STAT_KEYS
+
+MAGIC = b"LCW1"
+_HEADER = struct.Struct("<4sII")      # magic, payload_len, crc32
+
+#: kill-point boundaries, in intra-epoch order (the crash-point matrix
+#: in docs/DESIGN.md §11): before the WAL append, mid-append (torn
+#: frame), after the fsynced append, after the engine step + fleet
+#: update, after the snapshot.
+PHASES = ("pre_wal", "mid_wal", "post_wal", "post_step",
+          "post_snapshot")
+
+_WAL_KEYS = ("price", "limit", "level", "node", "tenant")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised at a scheduled kill-point AFTER all durable effects of
+    the phases already passed are flushed — everything the runner did
+    before this is exactly what a ``kill -9`` would leave on disk."""
+
+    def __init__(self, event):
+        super().__init__(f"simulated crash at t={event.t} "
+                         f"phase={event.phase}")
+        self.event = event
+
+
+class WriteAheadLog:
+    """Append-only framed record log with fsync durability."""
+
+    def __init__(self, path: str) -> None:
+        self.path = path
+
+    def append(self, record: Dict[str, np.ndarray], *,
+               torn_frac: Optional[float] = None) -> None:
+        """Frame, append and fsync one record.  ``torn_frac`` simulates
+        a crash mid-append: only that fraction of the frame reaches the
+        file (still fsynced, so the torn tail is what a real mid-write
+        power cut leaves behind)."""
+        buf = io.BytesIO()
+        np.savez(buf, **record)
+        payload = buf.getvalue()
+        frame = _HEADER.pack(MAGIC, len(payload),
+                             zlib.crc32(payload)) + payload
+        if torn_frac is not None:
+            frame = frame[:max(1, int(len(frame) * torn_frac))]
+        with open(self.path, "ab") as f:
+            f.write(frame)
+            f.flush()
+            os.fsync(f.fileno())
+
+    def read_all(self) -> Tuple[List[Dict[str, np.ndarray]], int]:
+        """Walk frames from the start; return ``(records, valid_len)``
+        where ``valid_len`` is the byte offset of the first torn or
+        corrupt frame (== file size when the log is clean)."""
+        records: List[Dict[str, np.ndarray]] = []
+        if not os.path.exists(self.path):
+            return records, 0
+        with open(self.path, "rb") as f:
+            data = f.read()
+        off = 0
+        while off + _HEADER.size <= len(data):
+            magic, n, crc = _HEADER.unpack_from(data, off)
+            end = off + _HEADER.size + n
+            if magic != MAGIC or end > len(data):
+                break
+            payload = data[off + _HEADER.size:end]
+            if zlib.crc32(payload) != crc:
+                break
+            with np.load(io.BytesIO(payload)) as z:
+                records.append({k: z[k] for k in z.files})
+            off = end
+        return records, off
+
+    def truncate_to(self, valid_len: int) -> None:
+        if os.path.exists(self.path):
+            with open(self.path, "r+b") as f:
+                f.truncate(valid_len)
+                f.flush()
+                os.fsync(f.fileno())
+
+
+def _ticks(duration_s: float, tick_s: float) -> List[float]:
+    """The drive loops' tick sequence, reproduced by the SAME float
+    accumulation (``t += tick_s``) so replayed epochs see bit-equal
+    timestamps."""
+    out, t = [], 0.0
+    while t <= duration_s:
+        out.append(t)
+        t += tick_s
+    return out
+
+
+class CrashSafeRunner:
+    """Durable fleet driver over one ``(market, fleet, rtype)`` triple.
+
+    ``run`` starts from the market facade's current state; ``resume``
+    restores the newest snapshot under ``workdir``, replays the WAL
+    tail, and continues live.  Both publish the final state back onto
+    the facade (``market.states``/``market.now``/``market.stats``) like
+    ``EpochRunner.drive`` and return ``(fleet_state, host_stats)``.
+    """
+
+    def __init__(self, market, fleet, rtype: str, workdir: str,
+                 snapshot_every: int = 1, injector=None) -> None:
+        self.market = market
+        self.fleet = fleet
+        self.rtype = rtype
+        self.eng = market.engines[rtype]
+        self.workdir = workdir
+        self.snapshot_every = max(1, int(snapshot_every))
+        self.injector = injector
+        os.makedirs(workdir, exist_ok=True)
+        # keep enough snapshots that the one we restore always has a
+        # complete WAL suffix behind it
+        self.ckpt = CheckpointManager(os.path.join(workdir, "snaps"),
+                                      keep=4)
+        self.wal = WriteAheadLog(os.path.join(workdir, "bids.wal"))
+
+    # ---------------------------------------------------------- plumbing
+    def _engine_state(self) -> dict:
+        est = dict(self.market.states[self.rtype])
+        est["floor"] = tuple(est["floor"])
+        est["floor_t"] = tuple(est["floor_t"])
+        return est
+
+    def _template(self, params) -> dict:
+        return {"eng": self._canon(self.eng.init_state()),
+                "fleet": self.fleet.init_state(params),
+                "stats": {k: jnp.zeros((), jnp.int32)
+                          for k in STAT_KEYS}}
+
+    @staticmethod
+    def _canon(est: dict) -> dict:
+        est = dict(est)
+        est["floor"] = tuple(est["floor"])
+        est["floor_t"] = tuple(est["floor_t"])
+        return est
+
+    def _publish(self, est, t_last: float, stats) -> Dict[str, int]:
+        market, rtype = self.market, self.rtype
+        jax.block_until_ready(est["owner"])
+        market.states[rtype] = est
+        market._np[rtype] = None
+        market.now = max(market.now, t_last)
+        schema.maybe_validate(est, self.eng, where=f"{rtype} state")
+        host = {k: int(stats[k]) for k in STAT_KEYS}
+        for k in ("orders", "transfers", "explicit_relinquish",
+                  "implicit_relinquish", "revoked_by_fault"):
+            market.stats[k] += host[k]
+        return host
+
+    def _accum_stats(self, stats, bids, transfers, sel, bids_clipped):
+        # the fused megastep's in-trace formulas, eagerly (sim/epoch.py)
+        moved = transfers["moved"]
+        taken = moved & (transfers["new"] >= 0)
+        stats = dict(stats)
+        stats["orders"] = stats["orders"] + jnp.sum(
+            (bids["tenant"] >= 0).astype(jnp.int32))
+        stats["transfers"] = stats["transfers"] + jnp.sum(
+            taken.astype(jnp.int32))
+        stats["explicit_relinquish"] = stats["explicit_relinquish"] \
+            + jnp.sum((moved & sel).astype(jnp.int32))
+        stats["implicit_relinquish"] = stats["implicit_relinquish"] \
+            + jnp.sum((taken & ~sel
+                       & (transfers["old"] >= 0)).astype(jnp.int32))
+        stats["bids_clipped"] = stats["bids_clipped"] + \
+            jnp.asarray(bids_clipped, jnp.int32)
+        stats["revoked_by_fault"] = stats["revoked_by_fault"] + \
+            jnp.sum(transfers["revoked_by_fault"].astype(jnp.int32))
+        return stats
+
+    def _wal_record(self, epoch: int, t: float, bids, limits, relinq,
+                    sel, bids_clipped) -> Dict[str, np.ndarray]:
+        rec = {"epoch": np.int64(epoch), "t": np.float64(t),
+               "limits": np.asarray(limits),
+               "relinq": np.asarray(relinq), "sel": np.asarray(sel),
+               "bids_clipped": np.asarray(bids_clipped)}
+        for k in _WAL_KEYS:
+            rec[f"bid_{k}"] = np.asarray(bids[k])
+        return rec
+
+    def _maybe_crash(self, t: float, phase: str):
+        if self.injector is None:
+            return None
+        ev = self.injector.due_crash(t, phase)
+        if ev is not None:
+            assert ev.phase in PHASES, ev.phase
+        return ev
+
+    # -------------------------------------------------------------- run
+    def run(self, params, duration_s: float, tick_s: float,
+            fleet_state=None) -> Tuple[dict, Dict[str, int]]:
+        # fresh run => fresh durable state: stale snapshots / WAL
+        # frames from an earlier run in the same workdir would shadow
+        # this run's on a later resume
+        if os.path.exists(self.wal.path):
+            os.unlink(self.wal.path)
+        for s in self.ckpt.all_steps():
+            os.unlink(self.ckpt._path(s))
+        est = self._engine_state()
+        if fleet_state is None:
+            fleet_state = self.fleet.init_state(params)
+        stats = {k: jnp.zeros((), jnp.int32) for k in STAT_KEYS}
+        return self._drive(params, est, fleet_state, stats,
+                           _ticks(duration_s, tick_s), start_epoch=0,
+                           records=None)
+
+    def resume(self, params, duration_s: float, tick_s: float
+               ) -> Tuple[dict, Dict[str, int]]:
+        """Restore the newest snapshot, replay the WAL tail, continue
+        live — the recovery path a restarted process takes.  With no
+        snapshot on disk yet (death before the first one), the run
+        restarts from the market facade's CURRENT state — the restarted
+        process rebuilds its initial market (seeded floors etc.) from
+        deployment config exactly as the dead one did, so the caller
+        must hand this runner a facade in that same initial state."""
+        ticks = _ticks(duration_s, tick_s)
+        records, valid_len = self.wal.read_all()
+        self.wal.truncate_to(valid_len)      # drop any torn tail frame
+        snap = self.ckpt.latest_step()
+        if snap is None:
+            est = self._engine_state()
+            fleet_state = self.fleet.init_state(params)
+            stats = {k: jnp.zeros((), jnp.int32) for k in STAT_KEYS}
+            start = 0
+        else:
+            tree = self.ckpt.restore(snap, self._template(params))
+            est, fleet_state = tree["eng"], tree["fleet"]
+            stats = tree["stats"]
+            start = snap + 1
+        if self.injector is not None:
+            t_snap = ticks[start - 1] if start > 0 else -1.0
+            self.injector.rewind_to(t_snap)
+        by_epoch = {int(r["epoch"]): r for r in records}
+        return self._drive(params, est, fleet_state, stats, ticks,
+                           start_epoch=start, records=by_epoch)
+
+    # ------------------------------------------------------------ epochs
+    def _drive(self, params, est, fleet_state, stats,
+               ticks: List[float], start_epoch: int,
+               records: Optional[Dict[int, dict]]
+               ) -> Tuple[dict, Dict[str, int]]:
+        eng, fleet = self.eng, self.fleet
+        for e in range(start_epoch, len(ticks)):
+            t = ticks[e]
+            if self.injector is not None:
+                est = self.injector.apply_health(eng, est, t)
+            rec = records.get(e) if records is not None else None
+            owner_b = est["owner"]
+            if rec is not None:
+                # -------- replay: logged policy output stands in for
+                # a live policy call (WAL written => the policy ran)
+                bids = {k: jnp.asarray(rec[f"bid_{k}"])
+                        for k in _WAL_KEYS}
+                limits = jnp.asarray(rec["limits"])
+                relinq = jnp.asarray(rec["relinq"])
+                sel = jnp.asarray(rec["sel"])
+                clipped = rec["bids_clipped"]
+                fleet_state = fleet.apply_policy_log(
+                    fleet_state, jnp.float32(t), owner_b, sel)
+            else:
+                limits, relinq, sel, bids, fleet_state, info = \
+                    fleet.policy(params, fleet_state, jnp.float32(t),
+                                 owner_b, est["rate"],
+                                 tuple(est["floor"]))
+                clipped = info["bids_clipped"]
+                ev = self._maybe_crash(t, "pre_wal")
+                if ev is not None:
+                    raise SimulatedCrash(ev)
+                ev = self._maybe_crash(t, "mid_wal")
+                self.wal.append(
+                    self._wal_record(e, t, bids, limits, relinq, sel,
+                                     clipped),
+                    torn_frac=0.5 if ev is not None else None)
+                if ev is not None:
+                    raise SimulatedCrash(ev)
+                ev = self._maybe_crash(t, "post_wal")
+                if ev is not None:
+                    raise SimulatedCrash(ev)
+            est = eng.cancel_all(est)
+            est, transfers, _bills = eng.step(
+                est, jnp.float32(t), bids, None, relinq, limits)
+            stats = self._accum_stats(stats, bids, transfers, sel,
+                                      clipped)
+            fleet_state, held = fleet.after_step(
+                params, fleet_state, jnp.float32(t), owner_b,
+                est["owner"], sel)
+            fleet_state = fleet.advance(params, fleet_state,
+                                        jnp.float32(t), held)
+            ev = self._maybe_crash(t, "post_step")
+            if ev is not None:
+                raise SimulatedCrash(ev)
+            if e % self.snapshot_every == 0:
+                jax.block_until_ready(est["owner"])
+                self.ckpt.save(e, {"eng": est, "fleet": fleet_state,
+                                   "stats": stats})
+            ev = self._maybe_crash(t, "post_snapshot")
+            if ev is not None:
+                raise SimulatedCrash(ev)
+        host = self._publish(est, ticks[-1] if ticks else 0.0, stats)
+        return fleet_state, host

@@ -197,6 +197,9 @@ class FleetScenarioConfig:
     fused: bool = True              # drive epochs through the fused
     # donated megastep (sim/epoch.py); False = the legacy six-dispatch
     # loop (kept for the bit-identity differential suite)
+    faults: Optional[list] = None   # fault schedule: a list of
+    # sim.faults.FaultEvent records; a fresh FaultInjector is built per
+    # drive (so alone runs and reruns replay the identical schedule)
     controls: VolatilityControls = field(
         default_factory=lambda: VolatilityControls(max_bid_multiple=4.0,
                                                    floor_fall_rate=0.5))
@@ -270,12 +273,15 @@ def _drive_fleet(fleet, params, market, fcfg: FleetScenarioConfig,
     """
     import jax
     import jax.numpy as jnp
+    injector = _make_injector(fcfg)
     state = fleet.init_state(params)
     epoch_s: List[float] = []
     clipped = jnp.zeros((), jnp.int32)   # device accumulator — no
     t = 0.0                              # per-epoch int() host sync
     while t <= fcfg.duration_s:
         t0 = time.perf_counter()
+        if injector is not None:
+            injector.apply_market(market, rtype, t)
         owner_b, rate, floors = market.leaf_view(rtype)
         limits, relinq, sel, bids, state, info = fleet.policy(
             params, state, t, owner_b, rate, floors)
@@ -308,8 +314,17 @@ def _drive_fleet_fused(fleet, params, market,
     state = fleet.init_state(params)
     state, epoch_s, stats = runner.drive(
         params, state, fcfg.duration_s, fcfg.tick_s,
-        time_epochs=time_epochs)
+        time_epochs=time_epochs, injector=_make_injector(fcfg))
     return state, epoch_s, stats["bids_clipped"]
+
+
+def _make_injector(fcfg: FleetScenarioConfig):
+    """A FRESH injector per drive — consumption pointers are run-local,
+    so alone runs / reruns replay the identical schedule."""
+    if not fcfg.faults:
+        return None
+    from repro.sim.faults import FaultInjector
+    return FaultInjector(fcfg.faults)
 
 
 def _alone_perf(fleet, params, market, topo,

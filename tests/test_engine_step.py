@@ -371,11 +371,12 @@ class TestInterpretInheritance:
         seen = []
         real = clear_ops.clear
 
-        def spy(*args, use_pallas=False, interpret=True, block=512):
+        def spy(*args, use_pallas=False, interpret=True, block=512,
+                **kw):
             seen.append(bool(interpret))
             # delegate in interpret mode so the spy runs on CPU hosts
             return real(*args, use_pallas=use_pallas, interpret=True,
-                        block=block)
+                        block=block, **kw)
 
         monkeypatch.setattr(
             "repro.kernels.market_clear.ops.clear", spy)

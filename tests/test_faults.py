@@ -1,0 +1,256 @@
+"""Failure-domain health semantics + fault injection (docs/DESIGN.md
+§11): down leaves are excluded from slates and force-evict their owner
+billed only up to the failure tick, draining leaves accept no new
+owners but honor existing retention, repairs re-admit, the domain
+scatter covers whole subtrees with later-event-wins, and fault storms
+drive the fleet scenario identically on the fused and unfused drivers
+and both clearing backends.
+
+(The hypothesis property sweep over random fail/repair cycles lives in
+tests/test_fault_props.py.)
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.market_jax.engine import (BatchEngine, TreeSpec, HEALTH_UP,
+                                     HEALTH_DRAINING, HEALTH_DOWN)
+from repro.sim.faults import (FaultEvent, FaultInjector,
+                              rack_failure_storm, zone_supply_shock,
+                              drain_schedule)
+
+
+def tiny_engine(n_leaves=4, root_floor=1.0, **kw):
+    tree = TreeSpec(n_leaves, (1, 2, n_leaves))
+    eng = BatchEngine(tree, capacity=64, n_tenants=8, **kw)
+    st = eng.init_state()
+    st["floor"][-1] = st["floor"][-1].at[0].set(root_floor)
+    return eng, st
+
+
+def bids(price, limit, level, node, tenant):
+    return {"price": jnp.array([price], jnp.float32),
+            "limit": jnp.array([limit], jnp.float32),
+            "level": jnp.array([level], jnp.int32),
+            "node": jnp.array([node], jnp.int32),
+            "tenant": jnp.array([tenant], jnp.int32)}
+
+
+def set_leaf_health(eng, st, leaf, value):
+    return eng.set_health(st, jnp.array([0], jnp.int32),
+                          jnp.array([leaf], jnp.int32),
+                          jnp.array([value], jnp.int32))
+
+
+def owners(st):
+    return np.asarray(st["owner"]).tolist()
+
+
+class TestDownLeaf:
+    def test_fault_eviction_bills_to_failure_tick_only(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        assert owners(st)[0] == 0
+        st = set_leaf_health(eng, st, 0, HEALTH_DOWN)
+        # owner evicted at t=3600, billed exactly 1 h at the 1.0 floor
+        st, tr, bills = eng.step(st, 3600.0)
+        assert owners(st)[0] == -1
+        assert bool(np.asarray(tr["revoked_by_fault"])[0])
+        assert bool(np.asarray(tr["moved"])[0])
+        assert float(bills[0]) == pytest.approx(1.0)
+        # ... and NOT a second past it: another hour accrues nothing
+        st, tr, bills = eng.step(st, 7200.0)
+        assert float(bills[0]) == pytest.approx(1.0)
+        assert not np.asarray(tr["revoked_by_fault"]).any()
+
+    def test_down_leaf_excluded_from_matching(self):
+        eng, st = tiny_engine()
+        st = set_leaf_health(eng, st, 0, HEALTH_DOWN)
+        # a root-scoped bid must land on a healthy leaf, never leaf 0
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        got = owners(st)
+        assert got[0] == -1 and got.count(0) == 1
+
+    def test_down_leaf_rate_falls_to_floor(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        for _ in range(3):
+            st, _, _ = eng.step(st, 0.0, bids(2.0, 99.0, 2, 0, 2))
+        st, _, _ = eng.step(st, 0.0, bids(4.0, 4.0, 2, 0, 1))
+        assert float(st["rate"][0]) == pytest.approx(4.0)
+        st = set_leaf_health(eng, st, 0, HEALTH_DOWN)
+        st, _, _ = eng.step(st, 10.0)
+        # resting pressure no longer prices a leaf that can't trade
+        assert float(st["rate"][0]) == pytest.approx(1.0)
+
+    def test_repair_readmits_leaf(self):
+        eng, st = tiny_engine(n_leaves=2)
+        st = set_leaf_health(eng, st, 0, HEALTH_DOWN)
+        st = set_leaf_health(eng, st, 1, HEALTH_DOWN)
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        assert owners(st) == [-1, -1]           # nothing to match
+        st = set_leaf_health(eng, st, 0, HEALTH_UP)
+        st, _, _ = eng.step(st, 10.0, bids(3.0, 5.0, 2, 0, 0))
+        assert owners(st) == [0, -1]
+
+
+class TestDrainingLeaf:
+    def test_draining_accepts_no_new_owner(self):
+        eng, st = tiny_engine()
+        st = eng.set_health(
+            st, jnp.zeros((4,), jnp.int32),
+            jnp.arange(4, dtype=jnp.int32),
+            jnp.full((4,), HEALTH_DRAINING, jnp.int32))
+        st, tr, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        assert owners(st) == [-1, -1, -1, -1]
+        assert not np.asarray(tr["moved"]).any()
+
+    def test_draining_keeps_owner_and_honors_retention(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        st = set_leaf_health(eng, st, 0, HEALTH_DRAINING)
+        # a higher competitor can't displace or re-price the owner
+        st, tr, _ = eng.step(st, 3600.0, bids(6.0, 9.0, 2, 0, 1))
+        assert owners(st)[0] == 0
+        assert float(st["rate"][0]) == pytest.approx(1.0)
+        assert not np.asarray(tr["revoked_by_fault"]).any()
+
+    def test_draining_owner_evicted_by_floor_pressure(self):
+        eng, st = tiny_engine()
+        st, _, _ = eng.step(st, 0.0, bids(3.0, 5.0, 2, 0, 0))
+        st = set_leaf_health(eng, st, 0, HEALTH_DRAINING)
+        # operator floor above the retention limit still revokes —
+        # draining honors limits, it doesn't grant immortality
+        floors = [jnp.full((eng.tree.nodes_at(d),), -1.0, jnp.float32)
+                  for d in range(eng.tree.n_levels)]
+        floors[-1] = jnp.array([6.0], jnp.float32)
+        st, tr, _ = eng.step(st, 3600.0, None, tuple(floors))
+        assert owners(st)[0] == -1
+        assert bool(np.asarray(tr["moved"])[0])
+        assert not np.asarray(tr["revoked_by_fault"]).any()
+
+
+class TestDomainScatter:
+    def test_subtree_scatter_and_later_wins(self):
+        eng, st = tiny_engine(n_leaves=4)     # strides (1, 2, 4)
+        # fail host 1 (leaves 2,3), then bring leaf 3 back up — the
+        # later event wins on the overlap, in ONE batch
+        st = eng.set_health(
+            st, jnp.array([1, 0], jnp.int32),
+            jnp.array([1, 3], jnp.int32),
+            jnp.array([HEALTH_DOWN, HEALTH_UP], jnp.int32))
+        assert np.asarray(st["health"]).tolist() == \
+            [HEALTH_UP, HEALTH_UP, HEALTH_DOWN, HEALTH_UP]
+
+    def test_padding_rows_ignored(self):
+        eng, st = tiny_engine(n_leaves=4)
+        st = eng.set_health(
+            st, jnp.array([0, 0], jnp.int32),
+            jnp.array([1, 2], jnp.int32),
+            jnp.array([HEALTH_DOWN, -1], jnp.int32))
+        assert np.asarray(st["health"]).tolist() == \
+            [HEALTH_UP, HEALTH_DOWN, HEALTH_UP, HEALTH_UP]
+
+
+class TestFaultInjector:
+    def test_applies_due_events_once_in_order(self):
+        eng, st = tiny_engine(n_leaves=4)
+        inj = FaultInjector([FaultEvent(10.0, "fail", 0, 1),
+                             FaultEvent(20.0, "repair", 0, 1),
+                             FaultEvent(20.0, "drain", 0, 2)])
+        st = inj.apply_health(eng, st, 0.0)       # nothing due
+        assert np.asarray(st["health"]).sum() == 0
+        st = inj.apply_health(eng, st, 10.0)
+        assert np.asarray(st["health"]).tolist()[1] == HEALTH_DOWN
+        st = inj.apply_health(eng, st, 25.0)      # both t=20 events
+        assert np.asarray(st["health"]).tolist() == \
+            [HEALTH_UP, HEALTH_UP, HEALTH_DRAINING, HEALTH_UP]
+        # consumed: re-applying at a later tick is a no-op
+        st2 = inj.apply_health(eng, st, 99.0)
+        assert st2 is st
+
+    def test_rewind_to_replays_strict_suffix(self):
+        inj = FaultInjector([FaultEvent(10.0, "fail", 0, 1),
+                             FaultEvent(20.0, "repair", 0, 1),
+                             FaultEvent(30.0, "crash"),
+                             FaultEvent(40.0, "fail", 0, 2)])
+        inj.due_health(100.0)
+        inj.due_crash(100.0)
+        inj.rewind_to(20.0)
+        assert [e.t for e in inj.due_health(100.0)] == [40.0]
+        # strictly-later crashes stay pending (the chaos harness drops
+        # already-fired kills from the schedule it hands a resumed
+        # process); crashes at or before the snapshot tick are spent
+        ev = inj.due_crash(100.0)
+        assert ev is not None and ev.t == 30.0
+        inj.rewind_to(30.0)
+        assert inj.due_crash(100.0) is None
+
+    def test_crash_phase_filtering(self):
+        inj = FaultInjector([FaultEvent(10.0, "crash",
+                                        phase="post_step")])
+        assert inj.due_crash(10.0, "pre_wal") is None
+        ev = inj.due_crash(10.0, "post_step")
+        assert ev is not None and ev.phase == "post_step"
+        assert inj.due_crash(10.0, "post_step") is None
+
+    def test_builders_deterministic(self):
+        from repro.market_jax.engine import build_tree
+        tree = build_tree(256)
+        a = rack_failure_storm(tree, 60.0, 600.0, 120.0, 180.0,
+                               racks_per_burst=2, seed=5)
+        b = rack_failure_storm(tree, 60.0, 600.0, 120.0, 180.0,
+                               racks_per_burst=2, seed=5)
+        assert a == b and len(a) > 0
+        assert len(zone_supply_shock(100.0, 500.0, zone=1)) == 2
+        assert len(drain_schedule([(2, 0), (2, 1)], 60.0, 300.0)) == 4
+
+
+# ---------------------------------------------------------------------
+# fleet-scenario integration: fault storms through the drivers
+# ---------------------------------------------------------------------
+def _run_fleet(fused, use_pallas=False, n_leaves=64):
+    from repro.sim.simulator import (FleetScenarioConfig, _drive_fleet,
+                                     _drive_fleet_fused, _seed_floors,
+                                     make_fleet)
+    from repro.market_jax.engine import build_tree
+    faults = (rack_failure_storm(build_tree(n_leaves), 120.0, 600.0,
+                                 240.0, 180.0, seed=9)
+              + zone_supply_shock(300.0, 480.0, zone=0))
+    fcfg = FleetScenarioConfig(
+        regime="heavy", n_leaves=n_leaves, n_training=3, n_inference=3,
+        n_batch=2, duration_s=900.0, tick_s=60.0, seed=3, k=4,
+        b_max=64, per_tenant_bids=4, use_pallas=use_pallas,
+        alone="none", fused=fused, faults=faults)
+    topo, _, market, fleet, params = make_fleet(fcfg)
+    _seed_floors(market, topo)
+    drive = _drive_fleet_fused if fused else _drive_fleet
+    state, _, _ = drive(fleet, params, market, fcfg, time_epochs=False)
+    est = market.states["H100"]
+    return ({k: np.asarray(est[k]) for k in
+             ("owner", "rate", "bills", "health")},
+            np.asarray(fleet.performance(params, state,
+                                         fcfg.duration_s)),
+            dict(market.stats))
+
+
+class TestFleetUnderFaults:
+    def test_fused_matches_unfused_under_fault_storm(self):
+        est_a, perf_a, stats_a = _run_fleet(fused=True)
+        est_b, perf_b, stats_b = _run_fleet(fused=False)
+        for k in est_a:
+            np.testing.assert_array_equal(est_a[k], est_b[k],
+                                          err_msg=k)
+        np.testing.assert_array_equal(perf_a, perf_b)
+        assert stats_a == stats_b
+        assert stats_a["revoked_by_fault"] > 0
+
+    def test_backends_agree_under_fault_storm(self):
+        est_a, perf_a, stats_a = _run_fleet(fused=True)
+        est_b, perf_b, stats_b = _run_fleet(fused=True,
+                                            use_pallas=True)
+        for k in est_a:
+            np.testing.assert_array_equal(est_a[k], est_b[k],
+                                          err_msg=k)
+        np.testing.assert_array_equal(perf_a, perf_b)
+        assert stats_a == stats_b

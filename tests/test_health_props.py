@@ -1,0 +1,158 @@
+"""Property tests for failure-domain health (docs/DESIGN.md §11):
+random interleavings of domain-scatter health events and market steps
+must keep the health invariants on BOTH clearing backends —
+
+* the batched ``set_health`` scatter equals a sequential numpy oracle
+  (later-entry-wins on overlap, padding ignored);
+* no owner ever sits on a down leaf, and ``revoked_by_fault`` marks
+  exactly the owners caught by a failure;
+* a draining leaf is monotonically emptying: its owner can leave but
+  never be replaced;
+* supply is conserved across fail/repair: a repaired domain re-admits
+  the same demand it held before the failure.
+
+Requires hypothesis (see requirements-dev.txt); the deterministic
+fault tests live in tests/test_faults.py and always run.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.market_jax.engine import (HEALTH_DOWN, HEALTH_DRAINING,
+                                     HEALTH_UP, BatchEngine, build_tree)
+
+N = 64
+_TREE = build_tree(N)
+# module-level so the jitted step graphs compile once across examples
+# (the jit cache is keyed on the engine instance)
+_ENGINES = {
+    "jnp": BatchEngine(_TREE, capacity=256, n_tenants=8, k=4),
+    "pallas": BatchEngine(_TREE, capacity=256, n_tenants=8, k=4,
+                          use_pallas=True, interpret=True),
+}
+_LEAF = np.arange(N)
+
+
+def _init(eng):
+    state = eng.init_state()
+    state["floor"][-1] = state["floor"][-1].at[0].set(1.0)
+    return state
+
+
+def _rand_events(rng, m):
+    """(levels, nodes, values) numpy batch; value -1 = padding."""
+    levels = rng.integers(0, _TREE.n_levels, m).astype(np.int32)
+    nodes = np.array([rng.integers(0, _TREE.nodes_at(d))
+                      for d in levels], np.int32)
+    values = rng.choice([HEALTH_UP, HEALTH_DRAINING, HEALTH_DOWN, -1],
+                        m).astype(np.int32)
+    return levels, nodes, values
+
+
+def _oracle_apply(health, levels, nodes, values):
+    for lvl, nd, v in zip(levels, nodes, values):
+        if v >= 0:
+            health[_LEAF // _TREE.strides[lvl] == nd] = v
+    return health
+
+
+def _rand_bids(rng, n):
+    return {"price": jnp.array(rng.uniform(1.5, 9.0, n), jnp.float32),
+            "limit": jnp.array(rng.uniform(2.0, 12.0, n), jnp.float32),
+            "level": jnp.array(rng.integers(0, _TREE.n_levels, n),
+                               jnp.int32),
+            "node": jnp.zeros((n,), jnp.int32),
+            "tenant": jnp.array(rng.integers(0, 6, n), jnp.int32)}
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       backend=st.sampled_from(["jnp", "pallas"]))
+def test_health_invariants_random_walk(seed, backend):
+    rng = np.random.default_rng(seed)
+    eng = _ENGINES[backend]
+    state = _init(eng)
+    oracle = np.zeros(N, np.int32)
+    prev_owner = np.full(N, -1, np.int32)
+    t = 0.0
+    for _ in range(6):
+        levels, nodes, values = _rand_events(rng, int(rng.integers(1, 5)))
+        oracle = _oracle_apply(oracle, levels, nodes, values)
+        state = eng.set_health(state, jnp.array(levels),
+                               jnp.array(nodes), jnp.array(values))
+        # batched scatter == sequential oracle (later-wins, padding)
+        np.testing.assert_array_equal(np.asarray(state["health"]),
+                                      oracle)
+        t += float(rng.uniform(30.0, 600.0))
+        state, transfers, _ = eng.step(
+            state, t, _rand_bids(rng, int(rng.integers(1, 16))))
+        owner = np.asarray(state["owner"])
+        # no owner on a down leaf — ever
+        assert (owner[oracle == HEALTH_DOWN] == -1).all()
+        # revoked_by_fault == exactly the owners caught by a failure
+        np.testing.assert_array_equal(
+            np.asarray(transfers["revoked_by_fault"]),
+            (prev_owner >= 0) & (oracle == HEALTH_DOWN))
+        # draining leaves empty monotonically: keep owner or lose it
+        drain = oracle == HEALTH_DRAINING
+        assert np.all((owner[drain] == prev_owner[drain])
+                      | (owner[drain] == -1))
+        prev_owner = owner
+
+
+def _demand(n, price=3.0):
+    """n root-scope orders (OCO: each wins at most one leaf)."""
+    return {"price": jnp.full((n,), price, jnp.float32),
+            "limit": jnp.full((n,), 9.0, jnp.float32),
+            "level": jnp.full((n,), _TREE.n_levels - 1, jnp.int32),
+            "node": jnp.zeros((n,), jnp.int32),
+            "tenant": jnp.array([i % 6 for i in range(n)], jnp.int32)}
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       backend=st.sampled_from(["jnp", "pallas"]))
+def test_supply_conserved_across_fail_repair(seed, backend):
+    """Fail a rack (half the fleet), then repair it.  While down, the
+    evictions cover exactly the rack's occupants, the rest of the fleet
+    is untouched, and NEW demand is admitted entirely outside the rack.
+    After repair, demand too large for the non-rack supply alone must
+    be fully admitted again — pigeonhole-forcing wins back inside the
+    repaired domain (supply genuinely restored, not just unmasked)."""
+    rng = np.random.default_rng(seed)
+    eng = _ENGINES[backend]
+    state = _init(eng)
+    state, _, _ = eng.step(state, 60.0, _demand(6))
+    owner0 = np.asarray(state["owner"])
+    assert int((owner0 >= 0).sum()) == 6       # OCO: one leaf per bid
+    lvl = 2                                    # rack: 32 of 64 leaves
+    node = int(rng.integers(0, _TREE.nodes_at(lvl)))
+    dom = _LEAF // _TREE.strides[lvl] == node
+    one = lambda v: (jnp.array([lvl], jnp.int32),
+                     jnp.array([node], jnp.int32),
+                     jnp.array([v], jnp.int32))
+    state = eng.set_health(state, *one(HEALTH_DOWN))
+    state, transfers, _ = eng.step(state, 120.0, _demand(6))
+    owner1 = np.asarray(state["owner"])
+    rev = np.asarray(transfers["revoked_by_fault"])
+    # evictions cover exactly the failed rack's occupants...
+    np.testing.assert_array_equal(rev, (owner0 >= 0) & dom)
+    assert (owner1[dom] == -1).all()
+    # ...surviving owners outside it are untouched...
+    kept = (owner0 >= 0) & ~dom
+    np.testing.assert_array_equal(owner1[kept], owner0[kept])
+    # ...and the new demand was admitted entirely on healthy supply
+    occ1 = int((owner1 >= 0).sum())
+    assert occ1 == 6 - int(rev.sum()) + 6
+    state = eng.set_health(state, *one(HEALTH_UP))
+    state, _, _ = eng.step(state, 180.0, _demand(30))
+    owner2 = np.asarray(state["owner"])
+    # 30 more orders cannot fit in the 32 non-rack leaves alongside
+    # occ1 sitting owners: full admission proves the rack is back
+    assert int((owner2 >= 0).sum()) == occ1 + 30
+    assert (owner2[dom] >= 0).any()
+    assert (np.asarray(state["health"]) == HEALTH_UP).all()

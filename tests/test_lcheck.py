@@ -31,6 +31,8 @@ class TestRuleFiring:
         ("LC004", 2),   # jnp.zeros / jnp.array without dtype
         ("LC005", 2),   # traced branch + unhashable static default
         ("LC007", 3),   # np.asarray + .tolist() + set() in epoch loop
+        ("LC008", 5),   # json.dump + np.savez + write_text(dumps) +
+                        # bare except + except Exception: pass
     ])
     def test_fixture_fires(self, rule, n_expected):
         src = (FIXDIR / f"fixture_{rule.lower()}.py").read_text()
@@ -67,6 +69,12 @@ class TestSuppression:
         src = ("# lcheck: file-disable=LC001\n"
                "def f(interpret: bool = True): pass\n"
                "def g(interpret: bool = False): pass\n")
+        assert check_source(src, "x.py") == []
+
+    def test_line_pragma_lc008(self):
+        src = ("import json\n"
+               "def f(p, r):\n"
+               "    json.dump(r, p)  # lcheck: disable=LC008\n")
         assert check_source(src, "x.py") == []
 
     def test_select_filters(self):

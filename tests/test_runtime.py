@@ -142,5 +142,95 @@ class TestServer:
                         max_new=4) for r in range(3)]
         for r in reqs:
             srv.submit(r)
-        srv.drain()
+        done = srv.drain()
         assert all(len(r.out) >= 4 for r in reqs)
+        assert sorted(r.rid for r in done) == [0, 1, 2]
+
+
+class TestIngest:
+    """Admission-control robustness: idempotency dedup, typed queue
+    rejection with bounded backoff-retry, tick-based timeouts."""
+
+    def _srv(self, **ing):
+        from repro.serve.server import IngestConfig, Server
+        cfg = tiny_cfg()
+        params = init_params(cfg, jax.random.key(0))
+        return Server(cfg, params, max_len=48, batch_slots=1,
+                      ingest=IngestConfig(**ing))
+
+    def _req(self, rid, max_new=2):
+        from repro.serve.server import Request
+        return Request(rid=rid, max_new=max_new,
+                       prompt=np.arange(8, dtype=np.int32) + rid)
+
+    def test_idempotency_key_dedup(self):
+        srv = self._srv()
+        a = srv.submit(self._req(0), idempotency_key="k0")
+        dup = srv.submit(self._req(99), idempotency_key="k0")
+        assert dup is a and len(srv.queue) == 1
+        srv.drain()
+        # a completed key still resolves to the original, with output
+        again = srv.submit(self._req(99), idempotency_key="k0")
+        assert again is a and again.done and len(again.out) >= 2
+        assert len(srv.queue) == 0
+
+    def test_dedup_window_evicts_oldest(self):
+        srv = self._srv(dedup_window=2, max_queue=0)
+        first = srv.submit(self._req(0), idempotency_key="k0")
+        srv.submit(self._req(1), idempotency_key="k1")
+        srv.submit(self._req(2), idempotency_key="k2")   # evicts k0
+        fresh = srv.submit(self._req(3), idempotency_key="k0")
+        assert fresh is not first and len(srv.queue) == 4
+
+    def test_queue_full_typed_error(self):
+        from repro.serve.server import QueueFull, ServeError
+        srv = self._srv(max_queue=2)
+        srv.submit(self._req(0))
+        srv.submit(self._req(1))
+        with pytest.raises(QueueFull) as exc:
+            srv.submit(self._req(2))
+        assert isinstance(exc.value, ServeError)
+        assert exc.value.kind == "queue_full"
+
+    def test_retry_succeeds_when_queue_drains(self):
+        srv = self._srv(max_queue=1)
+        srv.submit(self._req(0))
+        waited = []
+
+        def drain_a_bit(s):
+            waited.append(s)
+            srv.step()                  # frees queue space
+
+        got = srv.submit_with_retry(self._req(1), sleep=drain_a_bit)
+        assert got.rid == 1 and len(waited) >= 1
+
+    def test_retries_exhausted_backoff_schedule(self):
+        from repro.serve.server import RetriesExhausted
+        srv = self._srv(max_queue=1, max_retries=3,
+                        backoff_base_s=0.1, backoff_cap_s=0.25,
+                        jitter_frac=0.2)
+        srv.submit(self._req(0))
+        waited = []
+        with pytest.raises(RetriesExhausted) as exc:
+            srv.submit_with_retry(self._req(1), sleep=waited.append)
+        err = exc.value
+        assert err.kind == "retries_exhausted"
+        assert err.attempts == 3 and err.backoffs == waited
+        # exponential-then-capped, each within +/-20% jitter
+        for b, nominal in zip(waited, (0.1, 0.2, 0.25)):
+            assert nominal * 0.8 <= b <= nominal * 1.2
+
+    def test_timeout_returns_typed_error(self):
+        from repro.serve.server import RequestTimeout
+        # rid 0 holds the single slot through tick 3 (prefill at tick 1
+        # + 3 more decodes); rid 1 would refill at tick 4 — exactly when
+        # its age hits timeout_ticks, so it expires in the queue first
+        srv = self._srv(timeout_ticks=4)
+        served = srv.submit(self._req(0, max_new=4))
+        starved = srv.submit(self._req(1, max_new=4))  # 1 slot: queued
+        done = srv.drain()
+        assert served.done and served.error is None
+        assert starved.done and isinstance(starved.error,
+                                           RequestTimeout)
+        assert starved.error.kind == "timeout"
+        assert {r.rid for r in done} == {0, 1}

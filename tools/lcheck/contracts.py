@@ -107,6 +107,9 @@ def _engine_contracts(problems: List[str]) -> None:
                     _sds((4,), I32)))
     _state_of("engine.cancel_all",
               _eval(problems, "engine.cancel_all", eng.cancel_all, st))
+    _state_of("engine.set_health",
+              _eval(problems, "engine.set_health", eng.set_health, st,
+                    _sds((4,), I32), _sds((4,), I32), _sds((4,), I32)))
 
     # clearing entry points
     out = _eval(problems, "engine.clear", eng.clear, st)
@@ -137,16 +140,16 @@ def _engine_contracts(problems: List[str]) -> None:
     from repro.kernels.market_clear import ops as clear_ops
     args = (st["order"], st["sorted_gseg"], st["seg_start"],
             st["price"], st["tenant"], st["seq"], st["floor"],
-            st["owner"], st["limit"])
+            st["owner"], st["limit"], st["health"])
 
     def _clear_with(use_pallas: bool) -> Callable:
         # static args (level_off/strides/k/backend flags) bound in a
         # closure — eval_shape abstracts every *argument*, and jit
         # statics must stay concrete python values
-        def fn(order, sg, ss, pr, tn, sq, fl, ow, li):
+        def fn(order, sg, ss, pr, tn, sq, fl, ow, li, hl):
             return clear_ops.clear(order, sg, ss, pr, tn, sq, fl,
                                    eng.level_off, eng.tree.strides,
-                                   ow, li, eng.k,
+                                   ow, li, eng.k, health=hl,
                                    use_pallas=use_pallas,
                                    interpret=True)
         return fn

@@ -1,0 +1,61 @@
+"""LC008 fixture: non-atomic durable writes + silent broad-except
+swallows.  Expected: 5 violations (json.dump, np.savez, write_text of
+json.dumps, bare except, except Exception: pass) — the atomic and
+narrow-except functions below must stay clean."""
+import json
+import os
+import pathlib
+
+import numpy as np
+
+
+def dump_report(path, rec):
+    with open(path, "w") as f:
+        json.dump(rec, f)                     # LC008: non-atomic
+
+
+def dump_arrays(path, arrs):
+    np.savez(path, **arrs)                    # LC008: non-atomic
+
+
+def dump_pathlib(path, rec):
+    pathlib.Path(path).write_text(json.dumps(rec))   # LC008
+
+
+def swallow(xs):
+    try:
+        return xs[0]
+    except Exception:                         # LC008: silent swallow
+        pass
+
+
+def swallow_bare(xs):
+    try:
+        return xs[0]
+    except:                                   # noqa: E722  LC008: bare
+        pass
+
+
+# ---- clean controls -------------------------------------------------
+def dump_atomic(path, rec):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f)                     # exempt: os.replace below
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def skip_narrow(p):
+    try:
+        return json.loads(p.read_text())
+    except (OSError, json.JSONDecodeError):   # narrow type: fine
+        return None
+
+
+def cleanup_reraise(path, rec):
+    try:
+        dump_atomic(path, rec)
+    except BaseException:                     # re-raises: fine
+        os.unlink(path + ".tmp")
+        raise

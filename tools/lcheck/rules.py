@@ -43,6 +43,19 @@ Every rule names the shipped bug it generalizes (docs/DESIGN.md §9):
   at the END of the run is fine — and so is host code in a nested
   ``def`` (a jitted callee's body), which the rule skips.
 
+* **LC008** — durability hazards, in two flavors.  (a) A non-atomic
+  durable write: ``json.dump`` / ``np.save``/``savez`` /
+  ``write_text(json.dumps(...))`` in a function that never calls
+  ``os.replace`` (atomic rename) or ``os.fsync`` (append-only WAL
+  discipline) — a process killed mid-dump truncates the artifact the
+  next reader loads (the BENCH_*.json / experiments/dryrun class; the
+  sanctioned pattern is ``benchmarks.common.atomic_write_json``).
+  (b) The swallow that then hides the damage: a bare ``except:``
+  without a re-raise, or ``except Exception/BaseException:`` whose
+  body is only ``pass`` — the truncated artifact vanishes silently
+  instead of failing loudly.  Narrow exception types and handlers
+  with real bodies are fine.
+
 Scope heuristics (documented, deliberate): LC002/LC004/LC005 look
 inside functions *lexically decorated* with ``jax.jit`` /
 ``functools.partial(jax.jit, ...)`` (including nested defs); helpers
@@ -78,7 +91,13 @@ RULES: Dict[str, str] = {
     "LC007": "host consumption (np.asarray / .tolist() / set()) of "
              "engine outputs inside a per-epoch loop body — "
              "accumulate in-trace and sync once after the loop",
+    "LC008": "durability hazard: non-atomic json/npz write (no "
+             "os.replace/os.fsync in the function) or a silent "
+             "broad-except swallow",
 }
+
+# calls that durably serialize to disk (LC008 flavor a)
+DURABLE_WRITERS = {"dump", "save", "savez", "savez_compressed"}
 
 # method names that mark a loop as a per-epoch engine-driving loop
 EPOCH_CALLS = {"step", "step_arrays", "epoch"}
@@ -189,6 +208,19 @@ def _is_sentinel_value(node: ast.AST) -> bool:
     return False
 
 
+def _calls_atomic_io(fn: ast.AST) -> bool:
+    """Does this function body call ``os.replace`` or ``os.fsync``?
+    (The two sanctioned durability disciplines: atomic tmp+rename, or
+    framed append + fsync as in the WAL.)"""
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Attribute) \
+                and n.func.attr in ("replace", "fsync") \
+                and isinstance(n.func.value, ast.Name) \
+                and n.func.value.id == "os":
+            return True
+    return False
+
+
 def _has_dtype_arg(call: ast.Call) -> bool:
     if any(kw.arg == "dtype" for kw in call.keywords):
         return True
@@ -209,6 +241,10 @@ class _Checker(ast.NodeVisitor):
         self.out: List[Violation] = []
         # stack of static-name sets; non-empty top == inside a jit
         self._jit_stack: List[Optional[Set[str]]] = [None]
+        # True frames: enclosing function uses the atomic-write
+        # discipline (os.replace rename or os.fsync WAL append), which
+        # exempts its durable writes from LC008
+        self._atomic_stack: List[bool] = [False]
 
     # ---------------------------------------------------------- helpers
     def _emit(self, rule: str, node: ast.AST, msg: str) -> None:
@@ -237,7 +273,9 @@ class _Checker(ast.NodeVisitor):
             self._check_lc005_static_args(node, static)
             self._traced = self._traced_params(node, static)
         self._jit_stack.append(static)
+        self._atomic_stack.append(_calls_atomic_io(node))
         self.generic_visit(node)
+        self._atomic_stack.pop()
         self._jit_stack.pop()
 
     visit_AsyncFunctionDef = visit_FunctionDef
@@ -439,6 +477,57 @@ class _Checker(ast.NodeVisitor):
                         f"'{target.slice.value}' without mode=\"drop\" "
                         f"— a wrapped ring cursor can overwrite live "
                         f"resting orders (the PR 2 bug)")
+        # ---- LC008a: non-atomic durable writes (everywhere) ----------
+        if not any(self._atomic_stack):
+            if isinstance(f, ast.Attribute) \
+                    and isinstance(f.value, ast.Name):
+                mod, attr = f.value.id, f.attr
+                if (mod == "json" and attr == "dump") or \
+                        (mod in ("np", "numpy")
+                         and attr in DURABLE_WRITERS - {"dump"}):
+                    self._emit(
+                        "LC008", node,
+                        f"{mod}.{attr}() outside an os.replace/"
+                        f"os.fsync function — a crash mid-dump "
+                        f"truncates the artifact; use "
+                        f"benchmarks.common.atomic_write_json or the "
+                        f"tmp+os.replace pattern")
+            if isinstance(f, ast.Attribute) and f.attr == "write_text":
+                for a in node.args:
+                    if isinstance(a, ast.Call) \
+                            and isinstance(a.func, ast.Attribute) \
+                            and a.func.attr == "dumps" \
+                            and isinstance(a.func.value, ast.Name) \
+                            and a.func.value.id == "json":
+                        self._emit(
+                            "LC008", node,
+                            "write_text(json.dumps(...)) outside an "
+                            "os.replace/os.fsync function — a crash "
+                            "mid-write truncates the artifact")
+        self.generic_visit(node)
+
+    # -------------------------------------------------------- swallows
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        t = node.type
+        broad = isinstance(t, ast.Name) and \
+            t.id in ("Exception", "BaseException") or \
+            isinstance(t, ast.Attribute) and \
+            t.attr in ("Exception", "BaseException")
+        reraises = any(isinstance(s, ast.Raise)
+                       for s in ast.walk(node) if s is not node)
+        pass_only = all(isinstance(s, ast.Pass) for s in node.body)
+        if t is None and not reraises:
+            self._emit(
+                "LC008", node,
+                "bare `except:` without a re-raise — swallows "
+                "everything including KeyboardInterrupt; name the "
+                "exception(s) or re-raise")
+        elif broad and pass_only:
+            self._emit(
+                "LC008", node,
+                f"`except {t.id if isinstance(t, ast.Name) else t.attr}"
+                f": pass` — silent swallow hides truncated/corrupt "
+                f"artifacts; narrow the type or handle it visibly")
         self.generic_visit(node)
 
 
