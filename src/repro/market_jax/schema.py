@@ -136,6 +136,128 @@ LEVEL_SCHEMA: Dict[str, KeySpec] = {
                        "floor_fall_rate drops), <= t"),
 }
 
+# the bid-table columns place() scatters into; any *live* write to one
+# of these obligates sorted-view maintenance (lcheck LC009)
+BOOK_COLUMNS = ("price", "blimit", "level", "node", "tenant", "seq")
+
+# the fused-epoch stat accumulators (sim/epoch.py threads these through
+# the donated megastep; sim/recovery.py re-accumulates them on replay)
+STAT_KEYS = ("orders", "transfers", "explicit_relinquish",
+             "implicit_relinquish", "bids_clipped", "revoked_by_fault")
+
+# the vectorized fleet's struct-of-arrays state (sim/fleet.py
+# init_state) — declared here so the effect checker sees one closed
+# universe of state keys across engine, fleet and stats namespaces
+FLEET_STATE_KEYS = ("progress", "served", "demanded", "rate_ewma",
+                    "reconfig_until", "last_checkpoint", "last_t",
+                    "last_scale_down", "done_at")
+
+# ---------------------------------------------------------------------
+# Declared per-function effects: which state keys each engine / fleet /
+# epoch entry point may READ and WRITE.  ``tools/lcheck/effects.py``
+# infers the true sets from the AST (through aliases and callees) and
+# fails CI when inferred != declared; ``trace_effects`` below checks
+# observed writes ⊆ declared at runtime.  Keep this a pure literal —
+# the static checker parses it without importing jax.
+# ---------------------------------------------------------------------
+EFFECTS: Dict[str, Dict[str, tuple]] = {
+    "repro.market_jax.engine.BatchEngine.step": {
+        "reads": ("acq_t", "bills", "blimit", "dropped", "floor",
+                  "floor_t", "head", "health", "level", "limit",
+                  "next_seq", "node", "order", "owner", "price", "rate",
+                  "resorts", "seg_start", "seq", "sorted_gseg", "t",
+                  "tenant", "waves"),
+        "writes": ("acq_t", "bills", "blimit", "dropped", "floor",
+                   "floor_t", "head", "level", "limit", "next_seq",
+                   "node", "order", "owner", "price", "rate", "resorts",
+                   "seg_start", "seq", "sorted_gseg", "t", "tenant",
+                   "waves"),
+    },
+    "repro.market_jax.engine.BatchEngine.place": {
+        "reads": ("blimit", "dropped", "head", "level", "next_seq",
+                  "node", "order", "price", "resorts", "seg_start",
+                  "seq", "sorted_gseg", "tenant"),
+        "writes": ("blimit", "dropped", "head", "level", "next_seq",
+                   "node", "order", "price", "resorts", "seg_start",
+                   "seq", "sorted_gseg", "tenant"),
+    },
+    "repro.market_jax.engine.BatchEngine.cancel": {
+        "reads": ("price", "tenant"),
+        "writes": ("price", "tenant"),
+    },
+    "repro.market_jax.engine.BatchEngine.cancel_all": {
+        "reads": ("price", "seg_start", "tenant"),
+        "writes": ("order", "price", "seg_start", "sorted_gseg",
+                   "tenant"),
+    },
+    "repro.market_jax.engine.BatchEngine.set_health": {
+        "reads": ("health",),
+        "writes": ("health",),
+    },
+    "repro.market_jax.engine.BatchEngine._cascade": {
+        "reads": ("acq_t", "blimit", "floor", "health", "limit",
+                  "order", "owner", "price", "seg_start", "seq",
+                  "sorted_gseg", "tenant", "waves"),
+        "writes": ("acq_t", "limit", "owner", "price", "rate", "tenant",
+                   "waves"),
+    },
+    "repro.market_jax.bridge.BatchMarket.set_retention_limit": {
+        "reads": ("acq_t", "bills", "blimit", "dropped", "floor",
+                  "floor_t", "head", "health", "level", "limit",
+                  "next_seq", "node", "order", "owner", "price", "rate",
+                  "resorts", "seg_start", "seq", "sorted_gseg", "t",
+                  "tenant", "waves"),
+        "writes": ("acq_t", "bills", "blimit", "dropped", "floor",
+                   "floor_t", "head", "level", "limit", "next_seq",
+                   "node", "order", "owner", "price", "rate", "resorts",
+                   "seg_start", "seq", "sorted_gseg", "t", "tenant",
+                   "waves"),
+    },
+    "repro.sim.epoch.EpochRunner.epoch": {
+        "reads": ("acq_t", "bids_clipped", "bills", "blimit",
+                  "demanded", "done_at", "dropped",
+                  "explicit_relinquish", "floor", "floor_t", "head",
+                  "health", "implicit_relinquish", "last_checkpoint",
+                  "last_scale_down", "last_t", "level", "limit",
+                  "next_seq", "node", "order", "orders", "owner",
+                  "price", "progress", "rate", "rate_ewma",
+                  "reconfig_until", "resorts", "revoked_by_fault",
+                  "seg_start", "seq", "served", "sorted_gseg", "t",
+                  "tenant", "transfers", "waves"),
+        "writes": ("acq_t", "bids_clipped", "bills", "blimit",
+                   "demanded", "done_at", "dropped",
+                   "explicit_relinquish", "floor", "floor_t", "head",
+                   "implicit_relinquish", "last_checkpoint",
+                   "last_scale_down", "last_t", "level", "limit",
+                   "next_seq", "node", "order", "orders", "owner",
+                   "price", "progress", "rate", "rate_ewma",
+                   "reconfig_until", "resorts", "revoked_by_fault",
+                   "seg_start", "seq", "served", "sorted_gseg", "t",
+                   "tenant", "transfers", "waves"),
+    },
+    "repro.sim.fleet.Fleet.policy": {
+        "reads": ("done_at", "last_checkpoint", "last_scale_down",
+                  "last_t", "progress", "rate_ewma"),
+        "writes": ("last_scale_down",),
+    },
+    "repro.sim.fleet.Fleet.after_step": {
+        "reads": ("done_at", "last_checkpoint", "progress",
+                  "reconfig_until"),
+        "writes": ("progress", "reconfig_until"),
+    },
+    "repro.sim.fleet.Fleet.advance": {
+        "reads": ("demanded", "done_at", "last_checkpoint", "last_t",
+                  "progress", "rate_ewma", "reconfig_until", "served"),
+        "writes": ("demanded", "done_at", "last_checkpoint", "last_t",
+                   "progress", "rate_ewma", "served"),
+    },
+    "repro.kernels.market_clear.ops.clear": {
+        "reads": ("floor", "health", "limit", "order", "owner",
+                  "price", "seg_start", "seq", "sorted_gseg", "tenant"),
+        "writes": (),
+    },
+}
+
 
 def dims_of(engine) -> Dict[str, int]:
     """The dimension bindings the shape expressions are evaluated in."""
@@ -357,3 +479,55 @@ def maybe_validate(state, engine, where: str = "state") -> None:
     checking on without code changes."""
     if os.environ.get(VALIDATE_ENV, "0") not in ("", "0"):
         validate_state(state, engine, where=where)
+
+
+def _flat_state_items(state):
+    """(name, array) pairs with the per-level lists flattened —
+    ``floor`` becomes ``floor[0]``, ``floor[1]``, ... so buffers diff
+    positionally."""
+    for k, v in state.items():
+        if k in LEVEL_SCHEMA:
+            for d, arr in enumerate(v):
+                yield f"{k}[{d}]", arr
+        else:
+            yield k, v
+
+
+def trace_effects(fn, state, *args, qualname: str, engine=None,
+                  where: str = "call", **kwargs):
+    """Runtime twin of the static effect checker: run
+    ``fn(state, *args, **kwargs)``, diff every state buffer before vs
+    after, and assert the observed write-set ⊆ the write-set declared
+    for ``qualname`` in ``EFFECTS``.  Returns ``fn``'s result
+    unchanged (functions returning tuples are diffed on element 0).
+
+    When ``engine`` is given and the call touched the bid book or its
+    sorted view, the full ``validate_state`` invariant pass runs on
+    the result — the runtime counterpart of lcheck LC009 (a live book
+    write that skips view maintenance trips the sorted_gseg/seg_start
+    checks here even though its write-set looks declared).
+    """
+    declared = set(EFFECTS[qualname]["writes"])
+    before = {k: np.array(v) for k, v in _flat_state_items(state)}
+    out = fn(state, *args, **kwargs)
+    new_state = out if isinstance(out, dict) else out[0]
+    observed = set()
+    for k, v in _flat_state_items(new_state):
+        base = k.split("[", 1)[0]
+        old = before.get(k)
+        new = np.asarray(v)
+        if old is None or old.shape != new.shape \
+                or not np.array_equal(old, new):
+            observed.add(base)
+    undeclared = observed - declared
+    if undeclared:
+        raise AssertionError(
+            f"effect trace ({where}): {qualname} wrote undeclared "
+            f"state key(s) {sorted(undeclared)} — fix the function or "
+            "update schema.EFFECTS")
+    book_or_view = set(BOOK_COLUMNS) | {"order", "sorted_gseg",
+                                        "seg_start"}
+    if engine is not None and observed & book_or_view:
+        validate_state(new_state, engine,
+                       where=f"{where} (trace_effects)")
+    return out

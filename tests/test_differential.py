@@ -68,6 +68,21 @@ def replay(topo, controls, seed, n_events=220, check_every=1,
         for rtype, eng in bm.engines.items():
             schema.validate_state(bm.states[rtype], eng,
                                   where=f"step {step} ({kind})")
+        if step % 64 == 0:
+            # runtime effect trace (docs/DESIGN.md §12): the declared
+            # write-sets must hold on live replay states on both
+            # backends — outputs are discarded, the replay continues
+            # from the untouched facade state
+            _PFX = "repro.market_jax.engine.BatchEngine."
+            for rtype, eng in bm.engines.items():
+                st = bm.states[rtype]
+                schema.trace_effects(
+                    eng.step, st, now + 60.0, None, None, None,
+                    qualname=_PFX + "step", engine=eng,
+                    where=f"step {step} ({rtype})")
+                schema.trace_effects(
+                    eng.cancel_all, st, qualname=_PFX + "cancel_all",
+                    engine=eng, where=f"step {step} ({rtype})")
         for leaf in leaves:
             assert ev.owner_of(leaf) == bm.owner_of(leaf), \
                 (step, kind, leaf, ev.owner_of(leaf), bm.owner_of(leaf))

@@ -1,0 +1,322 @@
+"""Effects-layer self-tests: static inference (tools/lcheck/effects.py),
+the declared contract in ``schema.EFFECTS``, and the runtime twin
+``schema.trace_effects`` (docs/DESIGN.md §12).
+
+The mutation tests are the negative controls the issue demands: delete
+the sorted-view maintenance from ``place()`` and the defensive
+``.copy()`` from ``EpochRunner.drive()`` and the checker MUST fire —
+statically (LC009/LC010) and, for the view bug, at runtime too
+(``trace_effects`` routes book writes through ``validate_state``).
+"""
+import ast
+import pathlib
+import sys
+
+import jax.numpy as jnp
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT))
+
+from tools.lcheck import effects                      # noqa: E402
+
+from repro.market_jax import schema                   # noqa: E402
+from repro.market_jax.engine import BatchEngine, build_tree  # noqa: E402
+
+FIXDIR = ROOT / "tools" / "lcheck" / "fixtures"
+SCHEMA_PATH = ROOT / "src" / "repro" / "market_jax" / "schema.py"
+ENGINE_PATH = ROOT / "src" / "repro" / "market_jax" / "engine.py"
+EPOCH_PATH = ROOT / "src" / "repro" / "sim" / "epoch.py"
+
+UNIVERSE, DECLARED = effects.load_declarations(SCHEMA_PATH)
+
+
+def _fixture_rules(name):
+    prog = effects.analyze_file(FIXDIR / name, UNIVERSE)
+    return [(v.rule, v.line) for v in prog.violations]
+
+
+# ---------------------------------------------------------------- firing
+class TestRuleFiring:
+    """LC009/LC010/LC011 fire on their fixtures — and ONLY there."""
+
+    def test_lc009_fires_once_on_its_fixture(self):
+        vs = _fixture_rules("fixture_lc009.py")
+        assert [r for r, _ in vs] == ["LC009"], vs
+
+    def test_lc010_fires_three_flavors(self):
+        vs = _fixture_rules("fixture_lc010.py")
+        assert [r for r, _ in vs] == ["LC010"] * 3, vs
+
+    def test_lc011_fires_twice(self):
+        vs = _fixture_rules("fixture_lc011.py")
+        assert [r for r, _ in vs] == ["LC011"] * 2, vs
+
+    def test_other_fixtures_stay_silent(self):
+        """The pre-existing fixtures must not trip the effects layer
+        (fixture_lc003 carries an explicit LC009 file-disable — its
+        subject is the scatter guard, not view maintenance)."""
+        for fx in sorted(FIXDIR.glob("fixture_lc*.py")):
+            if fx.stem in ("fixture_lc009", "fixture_lc010",
+                           "fixture_lc011"):
+                continue
+            assert _fixture_rules(fx.name) == [], fx.name
+
+
+# ------------------------------------------------------------ clean tree
+class TestCleanTree:
+    def test_src_infers_clean_and_matches_declarations(self, tmp_path):
+        report = tmp_path / "effects_report.json"
+        violations, problems = effects.check_effects(
+            ROOT, report_path=report)
+        assert violations == [], [str(v) for v in violations]
+        assert problems == [], problems
+        assert report.exists()
+
+    def test_cli_default_paths_pass(self, capsys):
+        from tools.lcheck.__main__ import main
+        rc = main(["--no-contracts"])
+        assert rc == 0, capsys.readouterr().err
+        assert "effects" in capsys.readouterr().out
+
+
+# ---------------------------------------------------------- declarations
+class TestDeclarations:
+    """schema.EFFECTS / key tuples stay consistent with the runtime."""
+
+    def test_universe_covers_every_state_namespace(self):
+        want = (set(schema.SCHEMA) | set(schema.LEVEL_SCHEMA)
+                | set(schema.FLEET_STATE_KEYS) | set(schema.STAT_KEYS))
+        assert UNIVERSE == want
+
+    def test_stat_keys_match_epoch_runner(self):
+        from repro.sim import epoch
+        assert tuple(schema.STAT_KEYS) == tuple(epoch.STAT_KEYS)
+
+    def test_fleet_state_keys_match_init_state(self):
+        from repro.sim.fleet import Fleet, FleetConfig
+        fleet = Fleet(FleetConfig(n=2), _TREE)
+        params = {"arrival_s": jnp.zeros((2,), jnp.float32)}
+        assert set(schema.FLEET_STATE_KEYS) \
+            == set(fleet.init_state(params))
+
+    def test_book_columns_are_schema_keys(self):
+        assert set(schema.BOOK_COLUMNS) <= set(schema.SCHEMA)
+
+    def test_every_declared_qualname_is_found(self):
+        prog = effects.analyze_tree(ROOT / "src" / "repro", UNIVERSE)
+        for qual in DECLARED:
+            assert prog.effects_of(qual) is not None, qual
+
+
+# ------------------------------------------------- seeded-bug mutations
+def _strip_view_maintenance(fn: ast.FunctionDef) -> ast.FunctionDef:
+    """Delete every statement of ``fn`` that maintains the sorted view
+    (assignments into order/sorted_gseg/seg_start/resorts) and reroute
+    the legacy ``return self._resort(state)`` to ``return state`` —
+    the exact bug class PR 7's incremental merge could reintroduce."""
+    drop = set(effects.VIEW_KEYS) | {"resorts"}
+
+    def touches_view(stmt):
+        if not isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            return False
+        targets = stmt.targets if isinstance(stmt, ast.Assign) \
+            else [stmt.target]
+        for t in targets:
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Subscript) \
+                        and isinstance(sub.slice, ast.Constant) \
+                        and sub.slice.value in drop:
+                    return True
+        return False
+
+    class Strip(ast.NodeTransformer):
+        def visit_Assign(self, node):
+            return None if touches_view(node) else node
+
+        def visit_AugAssign(self, node):
+            return None if touches_view(node) else node
+
+        def visit_Return(self, node):
+            v = node.value
+            if isinstance(v, ast.Call) \
+                    and isinstance(v.func, ast.Attribute) \
+                    and v.func.attr == "_resort":
+                node.value = v.args[0]
+            return node
+
+    out = Strip().visit(fn)
+    ast.fix_missing_locations(out)
+    return out
+
+
+def _mutated_engine_source() -> str:
+    tree = ast.parse(ENGINE_PATH.read_text())
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "BatchEngine":
+            node.body = [_strip_view_maintenance(n)
+                         if isinstance(n, ast.FunctionDef)
+                         and n.name == "place" else n
+                         for n in node.body]
+    return ast.unparse(tree)
+
+
+def _mutated_epoch_source() -> str:
+    """epoch.py with the defensive per-leaf ``.copy()`` in ``drive``
+    deleted — the use-after-donation hazard LC010 exists for."""
+    tree = ast.parse(EPOCH_PATH.read_text())
+
+    class Strip(ast.NodeTransformer):
+        def visit_Assign(self, node):
+            if isinstance(node.value, ast.Call) \
+                    and isinstance(node.value.func, ast.Attribute) \
+                    and node.value.func.attr == "tree_map":
+                return None
+            return node
+
+    out = Strip().visit(tree)
+    ast.fix_missing_locations(out)
+    return ast.unparse(out)
+
+
+class TestSeededBugs:
+    """Re-seed the originating bugs; the checker must catch them."""
+
+    def test_clean_engine_has_no_lc009(self):
+        prog = effects.analyze_source(
+            ENGINE_PATH.read_text(), UNIVERSE, module="engine",
+            path="engine.py")
+        assert [v for v in prog.violations if v.rule == "LC009"] == []
+
+    def test_static_lc009_catches_dropped_view_maintenance(self):
+        prog = effects.analyze_source(
+            _mutated_engine_source(), UNIVERSE, module="engine",
+            path="engine.py")
+        hits = [v for v in prog.violations if v.rule == "LC009"]
+        assert any("place" in v.message for v in hits), \
+            [str(v) for v in prog.violations]
+
+    def test_clean_epoch_has_no_lc010(self):
+        prog = effects.analyze_source(
+            EPOCH_PATH.read_text(), UNIVERSE, module="epoch",
+            path="epoch.py")
+        assert [v for v in prog.violations if v.rule == "LC010"] == []
+
+    def test_static_lc010_catches_dropped_copy_defense(self):
+        prog = effects.analyze_source(
+            _mutated_epoch_source(), UNIVERSE, module="epoch",
+            path="epoch.py")
+        hits = [v for v in prog.violations if v.rule == "LC010"]
+        assert hits, [str(v) for v in prog.violations]
+
+    def test_runtime_trace_catches_dropped_view_maintenance(self):
+        """The runtime loop-close: exec the mutated engine, place a
+        live batch through ``trace_effects`` — the write-set still
+        looks declared (the bug writes FEWER keys), but the sorted-view
+        invariants must throw."""
+        import types
+        mod = types.ModuleType("engine_mutated")
+        sys.modules["engine_mutated"] = mod
+        try:
+            exec(compile(_mutated_engine_source(),   # noqa: S102
+                         "engine_mutated.py", "exec"), mod.__dict__)
+            eng = mod.BatchEngine(build_tree(16), capacity=32,
+                                  n_tenants=4, k=2)
+        finally:
+            del sys.modules["engine_mutated"]
+        state = eng.init_state()
+        b = 4
+        batch = (jnp.full((b,), 3.0, jnp.float32),
+                 jnp.zeros((b,), jnp.int32),
+                 jnp.arange(b, dtype=jnp.int32),
+                 jnp.arange(b, dtype=jnp.int32),
+                 jnp.full((b,), 5.0, jnp.float32))
+        with pytest.raises(Exception, match="sorted view|seg_start"):
+            schema.trace_effects(eng.place, state, *batch,
+                                 qualname="repro.market_jax.engine.BatchEngine.place",
+                                 engine=eng, where="mutated place")
+
+
+# ------------------------------------------------------- runtime tracer
+_TREE = build_tree(16)
+_ENG = BatchEngine(_TREE, capacity=32, n_tenants=4, k=2)
+
+
+def _live_batch(b=4):
+    return (jnp.full((b,), 3.0, jnp.float32),
+            jnp.zeros((b,), jnp.int32),
+            jnp.arange(b, dtype=jnp.int32),
+            jnp.arange(b, dtype=jnp.int32),
+            jnp.full((b,), 5.0, jnp.float32))
+
+
+class TestTraceEffects:
+    def test_declared_ops_trace_clean(self):
+        state = _ENG.init_state()
+        state = schema.trace_effects(
+            _ENG.place, state, *_live_batch(),
+            qualname="repro.market_jax.engine.BatchEngine.place", engine=_ENG)
+        state, _, _ = schema.trace_effects(
+            _ENG.step, state, 30.0, None, None, None,
+            qualname="repro.market_jax.engine.BatchEngine.step", engine=_ENG)
+        state = schema.trace_effects(
+            _ENG.cancel_all, state,
+            qualname="repro.market_jax.engine.BatchEngine.cancel_all", engine=_ENG)
+        schema.validate_state(state, _ENG, where="trace end")
+
+    def test_undeclared_write_is_rejected(self):
+        state = _ENG.init_state()
+
+        def sneaky(st):
+            st = dict(st)
+            st["waves"] = st["waves"] + 1
+            return st
+
+        with pytest.raises(AssertionError, match="undeclared"):
+            schema.trace_effects(sneaky, state,
+                                 qualname="repro.market_jax.engine.BatchEngine.cancel")
+
+    def test_unknown_qualname_is_a_keyerror(self):
+        with pytest.raises(KeyError):
+            schema.trace_effects(lambda s: s, _ENG.init_state(),
+                                 qualname="BatchEngine.nope")
+
+
+# --------------------------------------- env-gated validation, fused path
+class TestFusedValidateGating:
+    """Satellite: LAISSEZ_VALIDATE must gate ``maybe_validate`` on the
+    fused ``EpochRunner`` path exactly as on the unfused loop."""
+
+    def _drive(self, monkeypatch, env):
+        from repro.sim.epoch import EpochRunner
+        from repro.sim.simulator import (FleetScenarioConfig,
+                                         _seed_floors, make_fleet)
+        fcfg = FleetScenarioConfig(
+            regime="heavy", n_leaves=16, n_training=2, n_inference=2,
+            n_batch=1, duration_s=120.0, tick_s=60.0, seed=5, k=2,
+            b_max=32, per_tenant_bids=2, alone="none", fused=True)
+        topo, _, market, fleet, params = make_fleet(fcfg)
+        _seed_floors(market, topo)
+        calls = []
+        real = schema.validate_state
+
+        def spy(state, engine, where="state"):
+            calls.append(where)
+            real(state, engine, where=where)
+
+        monkeypatch.setattr(schema, "validate_state", spy)
+        if env is None:
+            monkeypatch.delenv(schema.VALIDATE_ENV, raising=False)
+        else:
+            monkeypatch.setenv(schema.VALIDATE_ENV, env)
+        runner = EpochRunner(market, fleet, "H100")
+        runner.drive(params, fleet.init_state(params),
+                     fcfg.duration_s, fcfg.tick_s, time_epochs=False)
+        return calls
+
+    def test_off_by_default(self, monkeypatch):
+        assert self._drive(monkeypatch, None) == []
+
+    def test_validates_when_enabled(self, monkeypatch):
+        calls = self._drive(monkeypatch, "1")
+        assert calls and all("H100" in w for w in calls)

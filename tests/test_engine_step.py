@@ -5,6 +5,8 @@ updates, bid clipping edge cases, and ref-vs-Pallas kernel equality.
 (The hypothesis property tests live in tests/test_engine_props.py; the
 event-engine equivalence pin is tests/test_differential.py.)
 """
+# lcheck: file-disable=LC007 — deterministic tests assert hand-computed
+# values after every step; the per-event sync IS the test
 import math
 
 import numpy as np
@@ -371,7 +373,9 @@ class TestInterpretInheritance:
         seen = []
         real = clear_ops.clear
 
-        def spy(*args, use_pallas=False, interpret=True, block=512,
+        # the spy records the flag it was CALLED with — the hard
+        # default is the bait the engine must override explicitly
+        def spy(*args, use_pallas=False, interpret=True, block=512,  # lcheck: disable=LC001
                 **kw):
             seen.append(bool(interpret))
             # delegate in interpret mode so the spy runs on CPU hosts

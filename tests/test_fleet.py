@@ -6,6 +6,8 @@ The hypothesis property tests on fleet invariants live in
 tests/test_fleet_props.py (same split as test_market_props.py, so the
 deterministic suite runs without hypothesis installed).
 """
+# lcheck: file-disable=LC007 — the trajectory differential replays the
+# Python Tenant oracle per epoch on host; the sync IS the comparison
 import numpy as np
 import pytest
 import jax.numpy as jnp

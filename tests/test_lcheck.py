@@ -86,8 +86,10 @@ class TestSuppression:
 class TestCleanTree:
     """The acceptance bar: lcheck exits 0 on the final tree."""
 
-    def test_src_and_benchmarks_clean(self):
-        vs = check_paths([str(ROOT / "src"), str(ROOT / "benchmarks")])
+    def test_default_target_tree_clean(self):
+        vs = check_paths([str(ROOT / p) for p in
+                          ("src", "benchmarks", "tests", "examples",
+                           "tools")])
         assert vs == [], [str(v) for v in vs]
 
     def test_docs_links_clean(self):
@@ -142,10 +144,11 @@ class TestCli:
         from tools.lcheck.__main__ import main
         assert main(["--select", "LC999", "x.py"]) == 2
 
-    def test_clean_tree_passes_ast_and_links(self, capsys):
+    def test_clean_tree_passes_ast_links_and_effects(self, capsys):
         from tools.lcheck.__main__ import main
         rc = main(["--no-contracts", str(ROOT / "src"),
-                   str(ROOT / "benchmarks")])
+                   str(ROOT / "benchmarks"), str(ROOT / "tests"),
+                   str(ROOT / "examples"), str(ROOT / "tools")])
         assert rc == 0
         assert "lcheck passed" in capsys.readouterr().out
 

@@ -177,7 +177,8 @@ class TestCheckerFires:
         b = int(jnp.argmax(state["tenant"] >= 0))
         if int(state["tenant"][b]) < 0:
             pytest.skip("no live entries in fixture")
-        state["seq"] = state["seq"].at[b].set(state["next_seq"] + 5)
+        # deliberate corruption: the validator must catch exactly this
+        state["seq"] = state["seq"].at[b].set(state["next_seq"] + 5)  # lcheck: disable=LC003
         with pytest.raises(Exception, match="seq"):
             schema.validate_state(state, eng)
 

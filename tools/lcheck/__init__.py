@@ -1,12 +1,16 @@
 """lcheck — repo-specific static analysis + engine state-contract
-verification (docs/DESIGN.md §9).
+verification (docs/DESIGN.md §9, §12).
 
-Three layers, one entry point (``python -m tools.lcheck``):
+Four layers, one entry point (``python -m tools.lcheck``):
 
-* AST lint rules LC001–LC005 (``tools.lcheck.rules``), each distilled
-  from a bug this repo actually shipped;
-* docs cross-reference check LC006 (``tools.lcheck.links``), absorbed
-  from the old ``tools/check_docs_links.py``;
+* AST lint rules LC001–LC005, LC007–LC008 (``tools.lcheck.rules``),
+  each distilled from a bug this repo actually shipped;
+* docs cross-reference check LC006 (``tools.lcheck.links``);
+* interprocedural state-effect inference (``tools.lcheck.effects``):
+  per-function read/write sets over the engine/fleet/stats state keys,
+  cross-checked against ``schema.EFFECTS``, plus rules LC009 (sorted-
+  view coherence), LC010 (use-after-donation) and LC011 (backend
+  bypass);
 * state-contract verification (``tools.lcheck.contracts``):
   ``jax.eval_shape`` over every public jitted entry point against the
   declared schema in ``repro.market_jax.schema``.

@@ -1,15 +1,20 @@
 """CLI: ``python -m tools.lcheck [paths...]``.
 
-Runs all three lcheck layers by default (AST rules over the given
-paths, the LC006 docs cross-reference check, and the eval_shape
-state-contract verification) and exits non-zero if anything fires.
-CI's lcheck job is exactly ``python -m tools.lcheck src benchmarks``.
+Runs all four lcheck layers by default (AST rules over the given
+paths, the LC006 docs cross-reference check, the interprocedural
+state-effect layer LC009-LC011 + declared-EFFECTS cross-check, and
+the eval_shape state-contract verification) and exits non-zero if
+anything fires.  CI's lcheck job is exactly
+``python -m tools.lcheck src benchmarks tests examples tools``.
 
 Flags:
-  --select LC001,LC003   run only these AST rules
+  --select LC001,LC003   run only these rules (AST + effects layers)
   --no-links             skip the LC006 docs check
+  --no-effects           skip the effect-inference layer
   --no-contracts         skip the eval_shape contract layer (e.g. when
                          linting a tree without a working jax install)
+  --effects-report PATH  dump the inferred/declared effects as JSON
+                         (the CI artifact)
   --list-rules           print the rule catalog and exit
 """
 from __future__ import annotations
@@ -18,16 +23,22 @@ import argparse
 import pathlib
 import sys
 
+DEFAULT_PATHS = ["src", "benchmarks", "tests", "examples", "tools"]
+EFFECT_RULES = {"LC009", "LC010", "LC011"}
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="python -m tools.lcheck")
-    ap.add_argument("paths", nargs="*", default=["src", "benchmarks"],
+    ap.add_argument("paths", nargs="*", default=DEFAULT_PATHS,
                     help="files/dirs for the AST rules "
-                         "(default: src benchmarks)")
+                         f"(default: {' '.join(DEFAULT_PATHS)})")
     ap.add_argument("--select", default=None,
-                    help="comma-separated rule ids (AST layer only)")
+                    help="comma-separated rule ids (AST/effects layers)")
     ap.add_argument("--no-links", action="store_true")
+    ap.add_argument("--no-effects", action="store_true")
     ap.add_argument("--no-contracts", action="store_true")
+    ap.add_argument("--effects-report", default=None, metavar="PATH",
+                    help="write the effects-layer JSON report here")
     ap.add_argument("--list-rules", action="store_true")
     args = ap.parse_args(argv)
 
@@ -48,32 +59,58 @@ def main(argv=None) -> int:
         return 2
 
     failures = []
-    paths = args.paths or ["src", "benchmarks"]
+    paths = args.paths or DEFAULT_PATHS
     violations = check_paths(paths, select)
     failures.extend(str(v) for v in violations)
-    n_ast = len(violations)
 
-    n_links = 0
-    if not args.no_links and (select is None or "LC006" in select):
+    run_links = not args.no_links and (select is None
+                                       or "LC006" in select)
+    if run_links:
         from tools.lcheck.links import check_links
         link_violations = check_links(root)
         failures.extend(str(v) for v in link_violations)
-        n_links = len(link_violations)
 
-    n_contracts = 0
-    if not args.no_contracts and select is None:
+    run_effects = not args.no_effects and (select is None
+                                           or select & EFFECT_RULES)
+    if run_effects:
+        from tools.lcheck.effects import check_effects
+        # rule fixtures under an explicitly-targeted fixtures dir are
+        # analyzed standalone (the CLI smoke test drives them); the
+        # src/repro program analysis always runs
+        fixture_paths = []
+        for p in paths:
+            pr = pathlib.Path(p)
+            files = sorted(pr.rglob("*.py")) if pr.is_dir() else [pr]
+            fixture_paths.extend(
+                f for f in files
+                if "fixtures" in f.parts and "lcheck" in str(f)
+                and "fixtures" in pr.resolve().parts)
+        report = pathlib.Path(args.effects_report) \
+            if args.effects_report else None
+        eff_violations, eff_problems = check_effects(
+            root, fixture_paths=fixture_paths, report_path=report)
+        if select is not None:
+            eff_violations = [v for v in eff_violations
+                              if v.rule in select]
+            eff_problems = []
+        failures.extend(str(v) for v in eff_violations)
+        failures.extend(eff_problems)
+
+    run_contracts = not args.no_contracts and select is None
+    if run_contracts:
         from tools.lcheck.contracts import check_contracts
         problems = check_contracts()
         failures.extend(f"contract: {p}" for p in problems)
-        n_contracts = len(problems)
 
     if failures:
         print("\n".join(["LCHECK FAILED:"] + failures), file=sys.stderr)
         return 1
     layers = [f"ast[{','.join(sorted(select))}]" if select else "ast"]
-    if not args.no_links and (select is None or "LC006" in select):
+    if run_links:
         layers.append("links")
-    if not args.no_contracts and select is None:
+    if run_effects:
+        layers.append("effects")
+    if run_contracts:
         layers.append("contracts")
     print(f"lcheck passed ({'+'.join(layers)}; paths={paths}; "
           f"0 violations)")

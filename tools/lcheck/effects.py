@@ -1,0 +1,881 @@
+"""lcheck layer: interprocedural state-effect inference (LC009–LC011).
+
+The engine state dict declared in ``repro.market_jax.schema`` is the
+repo's narrow waist — every subsystem communicates by reading and
+writing its keys.  This module infers, per function, the set of state
+keys read and written (subscript loads/stores, ``.at[...].set/add``
+chains, ``{**state, ...}`` rebuilds), propagates the sets through local
+aliases and resolved callees to a fixpoint, and checks the result
+against the declared per-function effect sets in ``schema.EFFECTS``.
+
+On top of the inferred effects three interprocedural rules fire:
+
+* **LC009** — a function performs *live* writes to book columns
+  (price/blimit/level/node/tenant/seq) without writing (or delegating
+  maintenance of) the sorted view (order/sorted_gseg/seg_start).
+  Sentinel kills (``NEG``/``-1`` scatter, ``full_like(col, NEG)``,
+  ``where(c, NEG, state[col])``) are consumption, not insertion, and
+  are exempt.  This is the PR 7 incremental-merge bug class.
+* **LC010** — use-after-donation: a variable passed at a
+  ``donate_argnums`` position of a jitted callable is read later,
+  aliases another argument of the same call (``f(a, donate(a))``), or
+  is not provably backed by fresh buffers (the jnp constant-cache
+  aliasing hazard ``sim/epoch.py:drive()`` defends with per-leaf
+  ``.copy()``).
+* **LC011** — backend bypass: engine/sim code calls kernel-internal
+  clear-path functions (``ref.py``/``kernel.py``) directly instead of
+  going through the normalized ``ops.clear`` contract (the PR 4
+  divergence class).
+
+The analysis is deliberately path-insensitive and name-seeded: only
+parameters/locals that look like state dicts (``state``, ``st``,
+``est``, ``eng_state``, ``fleet_state``, ``stats``, ``fst`` or any
+``*_state``) or that structurally alias one (``dict(state)``,
+``state.copy()``, ``self.states[...]``, ``{**state, ...}``, tuple
+unpacking) are tracked, so incidental dict literals (bid batches,
+bench rows) contribute nothing.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import pathlib
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from tools.lcheck.rules import (FILE_PRAGMA_RE, PRAGMA_RE, Violation,
+                                _is_sentinel_value)
+
+# ---------------------------------------------------------------- rules
+
+BOOK_COLS = ("price", "blimit", "level", "node", "tenant", "seq")
+VIEW_KEYS = ("order", "sorted_gseg", "seg_start")
+
+#: kernel-internal clear-path callables — reachable only from modules
+#: under ``kernels/``; everything else must use ``ops.clear``.
+KERNEL_INTERNAL = frozenset({
+    "clear_sorted", "clear_sorted_from_aggs", "_prefix_aggregates",
+    "sorted_segment_aggregates", "segment_aggregates", "segment_top2",
+    "apply_health_mask", "clear_pallas",
+})
+
+#: names seeded as tracked state dicts when their provenance is opaque.
+STATE_NAMES = frozenset({"state", "st", "est", "eng_state",
+                         "fleet_state", "stats", "fst"})
+
+
+def _is_state_name(name: str) -> bool:
+    return name in STATE_NAMES or name.endswith("_state")
+
+
+# ------------------------------------------------------- program index
+
+@dataclass
+class FnInfo:
+    """One top-level function or method, plus its inferred effects."""
+    qualname: str
+    module: str
+    path: str
+    node: ast.FunctionDef
+    cls: Optional[str] = None
+    jitted: bool = False
+    donate: Tuple[int, ...] = ()
+    # inferred (direct + propagated)
+    reads: Set[str] = field(default_factory=set)
+    writes: Set[str] = field(default_factory=set)
+    live_book: Set[str] = field(default_factory=set)
+    #: reads of state keys appearing inside args at call sites — only
+    #: accumulated for functions with no state-like parameter (array
+    #: interfaces such as ``ops.clear``); never propagated to callers.
+    call_reads: Set[str] = field(default_factory=set)
+    #: touches engine-object state directly (``self.states[...]``)
+    self_tracked: bool = False
+    calls: List["CallSite"] = field(default_factory=list)
+
+    @property
+    def name(self) -> str:
+        return self.node.name
+
+    def param_names(self) -> List[str]:
+        a = self.node.args
+        return [p.arg for p in (a.posonlyargs + a.args)]
+
+    def has_state_param(self) -> bool:
+        return any(_is_state_name(p) for p in self.param_names())
+
+    def accepts(self, n_pos: int, kw_names: Sequence[str]) -> bool:
+        a = self.node.args
+        pos = a.posonlyargs + a.args
+        max_pos = len(pos)
+        if a.vararg is None and n_pos > max_pos:
+            return False
+        required = len(pos) - len(a.defaults)
+        if n_pos + len(kw_names) < required and a.vararg is None:
+            return False
+        if a.kwarg is None:
+            names = {p.arg for p in pos} | {p.arg for p in a.kwonlyargs}
+            if any(k not in names for k in kw_names):
+                return False
+        return True
+
+
+@dataclass
+class CallSite:
+    cands: List[FnInfo]
+    passes_tracked: bool
+    arg_key_reads: Set[str]
+
+
+def _jit_info(fn: ast.FunctionDef) -> Tuple[bool, Tuple[int, ...]]:
+    """(is_jitted, donate_argnums) from the decorator list.
+
+    Recognizes ``@jax.jit``, ``@jit`` and
+    ``@functools.partial(jax.jit, ..., donate_argnums=...)``.
+    """
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = getattr(target, "attr", None) or getattr(target, "id", "")
+        if name == "jit":
+            return True, ()
+        if name == "partial" and isinstance(dec, ast.Call) and dec.args:
+            inner = dec.args[0]
+            iname = (getattr(inner, "attr", None)
+                     or getattr(inner, "id", ""))
+            if iname != "jit":
+                continue
+            donate: Tuple[int, ...] = ()
+            for kw in dec.keywords:
+                if kw.arg == "donate_argnums":
+                    try:
+                        v = ast.literal_eval(kw.value)
+                    except ValueError:
+                        continue
+                    donate = tuple(v) if isinstance(v, (tuple, list)) \
+                        else (int(v),)
+            return True, donate
+    return False, ()
+
+
+class Program:
+    """An index of modules/functions plus the effect fixpoint."""
+
+    def __init__(self, universe: Set[str]):
+        self.universe = universe
+        self.fns: Dict[str, FnInfo] = {}
+        self.methods: Dict[str, List[FnInfo]] = {}
+        self.module_fns: Dict[Tuple[str, str], FnInfo] = {}
+        self.cls_methods: Dict[Tuple[str, str, str], FnInfo] = {}
+        self.trees: Dict[str, Tuple[str, ast.Module, List[str]]] = {}
+        self.mod_alias: Dict[str, Dict[str, str]] = {}
+        self.sym_import: Dict[str, Dict[str, Tuple[str, str]]] = {}
+        self.violations: List[Violation] = []
+
+    # -- construction --------------------------------------------------
+
+    def add_source(self, module: str, src: str, path: str) -> None:
+        tree = ast.parse(src, filename=path)
+        self.trees[module] = (path, tree, src.splitlines())
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._add_fn(module, path, node, cls=None)
+            elif isinstance(node, ast.ClassDef):
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef,
+                                        ast.AsyncFunctionDef)):
+                        self._add_fn(module, path, sub, cls=node.name)
+
+    def _add_fn(self, module: str, path: str, node, cls: Optional[str]):
+        qual = ".".join(x for x in (module, cls, node.name) if x)
+        jitted, donate = _jit_info(node)
+        info = FnInfo(qualname=qual, module=module, path=path,
+                      node=node, cls=cls, jitted=jitted, donate=donate)
+        self.fns[qual] = info
+        self.methods.setdefault(node.name, []).append(info)
+        if cls is None:
+            self.module_fns[(module, node.name)] = info
+        else:
+            self.cls_methods[(module, cls, node.name)] = info
+
+    def _resolve_imports(self) -> None:
+        modules = set(self.trees)
+        for module, (_, tree, _) in self.trees.items():
+            aliases: Dict[str, str] = {}
+            syms: Dict[str, Tuple[str, str]] = {}
+            for node in ast.walk(tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        aliases[a.asname or a.name.split(".")[0]] = \
+                            a.name if a.asname else a.name.split(".")[0]
+                elif isinstance(node, ast.ImportFrom) and node.module \
+                        and node.level == 0:
+                    for a in node.names:
+                        full = f"{node.module}.{a.name}"
+                        local = a.asname or a.name
+                        if full in modules:
+                            aliases[local] = full
+                        elif node.module in modules:
+                            syms[local] = (node.module, a.name)
+            self.mod_alias[module] = aliases
+            self.sym_import[module] = syms
+
+    # -- lookups --------------------------------------------------------
+
+    def lookup_name(self, module: str, name: str) -> Optional[FnInfo]:
+        f = self.module_fns.get((module, name))
+        if f is not None:
+            return f
+        src = self.sym_import.get(module, {}).get(name)
+        if src is not None:
+            return self.module_fns.get(src)
+        return None
+
+    def lookup_module_attr(self, module: str,
+                           alias: str, attr: str) -> Optional[FnInfo]:
+        tgt = self.mod_alias.get(module, {}).get(alias)
+        if tgt is None:
+            return None
+        return self.module_fns.get((tgt, attr))
+
+    def method_candidates(self, meth: str, n_pos: int,
+                          kw_names: Sequence[str]) -> List[FnInfo]:
+        return [c for c in self.methods.get(meth, ())
+                if c.cls is not None
+                and c.accepts(n_pos + 1, kw_names)]
+
+    # -- analysis -------------------------------------------------------
+
+    def analyze(self) -> None:
+        self._resolve_imports()
+        for info in self.fns.values():
+            walker = _FnWalker(self, info)
+            walker.run()
+        self._fixpoint()
+        self._check_lc009()
+        self._filter_pragmas()
+
+    def _fixpoint(self) -> None:
+        changed = True
+        while changed:
+            changed = False
+            for fn in self.fns.values():
+                for site in fn.calls:
+                    for cand in site.cands:
+                        if site.arg_key_reads \
+                                and not cand.has_state_param():
+                            before = len(cand.call_reads)
+                            cand.call_reads |= site.arg_key_reads
+                            changed |= len(cand.call_reads) != before
+                        if not (site.passes_tracked
+                                or cand.self_tracked):
+                            continue
+                        nr = len(fn.reads) + len(fn.writes) \
+                            + len(fn.live_book) + fn.self_tracked
+                        fn.reads |= cand.reads
+                        fn.writes |= cand.writes
+                        fn.live_book |= cand.live_book
+                        fn.self_tracked |= cand.self_tracked
+                        now = len(fn.reads) + len(fn.writes) \
+                            + len(fn.live_book) + fn.self_tracked
+                        changed |= now != nr
+
+    def _check_lc009(self) -> None:
+        for fn in self.fns.values():
+            missing = set(VIEW_KEYS) - fn.writes
+            if fn.live_book and missing:
+                self.violations.append(Violation(
+                    path=fn.path, line=fn.node.lineno, rule="LC009",
+                    message=(f"{fn.qualname} live-writes book column(s) "
+                             f"{sorted(fn.live_book)} without maintaining "
+                             f"sorted view key(s) {sorted(missing)}")))
+
+    def _filter_pragmas(self) -> None:
+        kept: List[Violation] = []
+        seen = set()
+        for v in self.violations:
+            key = (v.path, v.line, v.rule, v.message)
+            if key in seen:
+                continue
+            seen.add(key)
+            lines = None
+            for _, (path, _, src_lines) in self.trees.items():
+                if path == v.path:
+                    lines = src_lines
+                    break
+            if lines is not None:
+                disabled = set()
+                for ln in lines:
+                    m = FILE_PRAGMA_RE.search(ln)
+                    if m:
+                        disabled |= set(m.group(1).split(","))
+                if v.rule in disabled:
+                    continue
+                if 0 < v.line <= len(lines):
+                    m = PRAGMA_RE.search(lines[v.line - 1])
+                    if m and v.rule in set(m.group(1).split(",")):
+                        continue
+            kept.append(v)
+        self.violations = kept
+
+    # -- reporting -------------------------------------------------------
+
+    def effects_of(self, qualname: str) -> Optional[Dict[str, List[str]]]:
+        fn = self.fns.get(qualname)
+        if fn is None:
+            return None
+        reads = set(fn.reads)
+        if not fn.has_state_param():
+            reads |= fn.call_reads
+        return {"reads": sorted(reads), "writes": sorted(fn.writes)}
+
+
+# --------------------------------------------------------- body walker
+
+class _VInfo:
+    __slots__ = ("kind", "fresh")
+
+    def __init__(self, kind: str = "other", fresh: bool = False):
+        self.kind = kind       # "dict" | "other"
+        self.fresh = fresh
+
+
+_OTHER = _VInfo()
+
+
+class _FnWalker:
+    """Analyzes one function body (nested defs inline, loops twice)."""
+
+    def __init__(self, program: Program, fn: FnInfo,
+                 parent: Optional["_FnWalker"] = None,
+                 node: Optional[ast.FunctionDef] = None):
+        self.p = program
+        self.fn = fn
+        self.node = node or fn.node
+        mod_parts = fn.module.split(".")
+        path_parts = pathlib.PurePath(fn.path).parts
+        self.in_kernels = "kernels" in mod_parts or "kernels" in path_parts
+        if parent is not None:
+            self.av = dict(parent.av)
+            self.fresh = dict(parent.fresh)
+            self.dead = dict(parent.dead)
+        else:
+            self.av: Dict[str, str] = {}
+            self.fresh: Dict[str, bool] = {}
+            self.dead: Dict[str, int] = {}
+        a = self.node.args
+        for prm in (a.posonlyargs + a.args + a.kwonlyargs):
+            if _is_state_name(prm.arg):
+                self.av[prm.arg] = "dict"
+                self.fresh[prm.arg] = False
+            self.dead.pop(prm.arg, None)
+
+    # -- entry ----------------------------------------------------------
+
+    def run(self) -> None:
+        self.stmts(self.node.body)
+
+    # -- statements -------------------------------------------------------
+
+    def stmts(self, body: Sequence[ast.stmt]) -> None:
+        for st in body:
+            self.stmt(st)
+
+    def stmt(self, st: ast.stmt) -> None:
+        if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            _FnWalker(self.p, self.fn, parent=self, node=st).run()
+        elif isinstance(st, ast.Assign):
+            v = self.eval(st.value)
+            for t in st.targets:
+                self.assign(t, st.value, v)
+        elif isinstance(st, ast.AnnAssign):
+            if st.value is not None:
+                v = self.eval(st.value)
+                self.assign(st.target, st.value, v)
+        elif isinstance(st, ast.AugAssign):
+            v = self.eval(st.value)
+            self.aug_assign(st.target, st.value, v)
+        elif isinstance(st, ast.Expr):
+            self.eval(st.value)
+        elif isinstance(st, ast.Return):
+            if st.value is not None:
+                self.eval(st.value)
+        elif isinstance(st, ast.If):
+            self.eval(st.test)
+            self.stmts(st.body)
+            self.stmts(st.orelse)
+        elif isinstance(st, ast.For):
+            self.eval(st.iter)
+            self.assign(st.target, None, _OTHER)
+            self.stmts(st.body)
+            self.stmts(st.body)
+            self.stmts(st.orelse)
+        elif isinstance(st, ast.While):
+            self.eval(st.test)
+            self.stmts(st.body)
+            self.stmts(st.body)
+            self.stmts(st.orelse)
+        elif isinstance(st, ast.With):
+            for item in st.items:
+                self.eval(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign(item.optional_vars, None, _OTHER)
+            self.stmts(st.body)
+        elif isinstance(st, ast.Try):
+            self.stmts(st.body)
+            for h in st.handlers:
+                self.stmts(h.body)
+            self.stmts(st.orelse)
+            self.stmts(st.finalbody)
+        elif isinstance(st, (ast.Raise, ast.Assert)):
+            for sub in ast.iter_child_nodes(st):
+                if isinstance(sub, ast.expr):
+                    self.eval(sub)
+        # Import/Pass/Global/Delete/ClassDef: no effect contribution
+
+    # -- assignment ---------------------------------------------------------
+
+    def assign(self, target: ast.expr, value_node: Optional[ast.expr],
+               v: _VInfo) -> None:
+        if isinstance(target, (ast.Tuple, ast.List)):
+            if isinstance(value_node, ast.Tuple) \
+                    and len(value_node.elts) == len(target.elts):
+                # re-evaluating elements is idempotent (reads are sets,
+                # emissions dedupe) and recovers per-element kinds
+                for t, vn in zip(target.elts, value_node.elts):
+                    self.assign(t, vn, self.eval(vn))
+            else:
+                for t in target.elts:
+                    self.assign(t, None, _VInfo("other", v.fresh))
+            return
+        if isinstance(target, ast.Starred):
+            self.assign(target.value, None, _OTHER)
+            return
+        if isinstance(target, ast.Name):
+            name = target.id
+            if v.kind == "dict" or _is_state_name(name):
+                self.av[name] = "dict"
+            else:
+                self.av.pop(name, None)
+            self.fresh[name] = v.fresh
+            self.dead.pop(name, None)
+            return
+        if isinstance(target, ast.Subscript):
+            base = self.eval(target.value)
+            if isinstance(target.slice, ast.expr):
+                self.eval(target.slice)
+            key = self._const_key(target.slice)
+            if base.kind == "dict" and key is not None \
+                    and key in self.p.universe:
+                self.fn.writes.add(key)
+                if key in BOOK_COLS \
+                        and not self._is_kill_write(value_node, key):
+                    self.fn.live_book.add(key)
+            return
+        if isinstance(target, ast.Attribute):
+            self.eval(target.value)
+
+    def aug_assign(self, target: ast.expr, value_node: ast.expr,
+                   v: _VInfo) -> None:
+        if isinstance(target, ast.Subscript):
+            base = self.eval(target.value)
+            key = self._const_key(target.slice)
+            if base.kind == "dict" and key is not None \
+                    and key in self.p.universe:
+                self.fn.reads.add(key)
+                self.fn.writes.add(key)
+                if key in BOOK_COLS:
+                    self.fn.live_book.add(key)
+        elif isinstance(target, ast.Name):
+            # x += ... keeps its abstract kind; freshness is lost
+            self.fresh[target.id] = False
+            self.dead.pop(target.id, None)
+
+    @staticmethod
+    def _const_key(sl: ast.expr) -> Optional[str]:
+        if isinstance(sl, ast.Constant) and isinstance(sl.value, str):
+            return sl.value
+        return None
+
+    # -- kill-write classification (LC009 exemptions) -------------------
+
+    def _is_kill_write(self, value: Optional[ast.expr],
+                       key: str) -> bool:
+        if value is None:
+            return False
+        if _is_sentinel_value(value):
+            return True
+        if isinstance(value, ast.Call):
+            fname = getattr(value.func, "attr", None) \
+                or getattr(value.func, "id", "")
+            if fname in ("full", "full_like") and len(value.args) >= 2 \
+                    and _is_sentinel_value(value.args[1]):
+                return True
+            if fname == "where" and len(value.args) == 3:
+                a, b = value.args[1], value.args[2]
+                for sent, other in ((a, b), (b, a)):
+                    if _is_sentinel_value(sent) \
+                            and isinstance(other, ast.Subscript) \
+                            and self._const_key(other.slice) == key:
+                        return True
+            if fname == "set":
+                # state[k] = state[k].at[...].set(sentinel)
+                if value.args and _is_sentinel_value(value.args[0]):
+                    return True
+        return False
+
+    # -- expressions -----------------------------------------------------
+
+    def eval(self, node: ast.expr) -> _VInfo:  # noqa: C901
+        if isinstance(node, ast.Name):
+            if node.id in self.dead:
+                self._emit("LC010", node.lineno,
+                           f"'{node.id}' read after being donated "
+                           f"(donated at line {self.dead[node.id]})")
+            return _VInfo("dict" if self.av.get(node.id) == "dict"
+                          else "other", self.fresh.get(node.id, False))
+        if isinstance(node, ast.Subscript):
+            base = self.eval(node.value)
+            if isinstance(node.slice, ast.expr):
+                self.eval(node.slice)
+            key = self._const_key(node.slice)
+            if base.kind == "dict" and key is not None \
+                    and key in self.p.universe:
+                self.fn.reads.add(key)
+            if isinstance(node.value, ast.Attribute) \
+                    and node.value.attr == "states":
+                self.fn.self_tracked = True
+                return _VInfo("dict", False)
+            return _OTHER
+        if isinstance(node, ast.Attribute):
+            self.eval(node.value)
+            return _OTHER
+        if isinstance(node, ast.Call):
+            return self.call(node)
+        if isinstance(node, ast.Dict):
+            spread_dict = False
+            for k, v in zip(node.keys, node.values):
+                vi = self.eval(v)
+                if k is None:
+                    spread_dict |= vi.kind == "dict"
+                else:
+                    self.eval(k)
+            if spread_dict:
+                # {**state, "k": v} rebuild: constant keys are writes
+                for k, v in zip(node.keys, node.values):
+                    if isinstance(k, ast.Constant) \
+                            and isinstance(k.value, str) \
+                            and k.value in self.p.universe:
+                        self.fn.writes.add(k.value)
+                        if k.value in BOOK_COLS \
+                                and not self._is_kill_write(v, k.value):
+                            self.fn.live_book.add(k.value)
+                return _VInfo("dict", False)
+            return _OTHER
+        if isinstance(node, ast.Lambda):
+            return _OTHER  # body has unbound params; skipped
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                             ast.GeneratorExp)):
+            for gen in node.generators:
+                self.eval(gen.iter)
+                for cond in gen.ifs:
+                    self.eval(cond)
+            # element exprs reference comprehension-bound names; only
+            # constant-key subscripts on tracked dicts matter and those
+            # use the loop variable — skip to avoid spurious reads.
+            return _OTHER
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            fresh = True
+            any_elt = False
+            for e in node.elts:
+                vi = self.eval(e)
+                any_elt = True
+                fresh &= vi.fresh
+            return _VInfo("other", fresh and any_elt)
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value)
+        for sub in ast.iter_child_nodes(node):
+            if isinstance(sub, ast.expr):
+                self.eval(sub)
+        return _OTHER
+
+    # -- calls ---------------------------------------------------------------
+
+    def call(self, node: ast.Call) -> _VInfo:  # noqa: C901
+        func = node.func
+        fname = getattr(func, "attr", None) or getattr(func, "id", "")
+        # LC011: kernel-internal clear path outside kernels/
+        if fname in KERNEL_INTERNAL and not self.in_kernels:
+            self._emit("LC011", node.lineno,
+                       f"direct call to kernel-internal '{fname}' — "
+                       "use repro.kernels.market_clear.ops.clear")
+        cands, bound = self._resolve(func, node)
+        # evaluate receiver chain (reads inside it count)
+        if isinstance(func, ast.Attribute):
+            self.eval(func.value)
+        arg_infos: List[_VInfo] = [self.eval(a) for a in node.args]
+        kw_infos: List[_VInfo] = [self.eval(k.value) for k in node.keywords]
+        passes_tracked = any(self._mentions_tracked(a)
+                             for a in node.args) \
+            or any(self._mentions_tracked(k.value) for k in node.keywords)
+        arg_key_reads: Set[str] = set()
+        if cands and any(not c.has_state_param() for c in cands):
+            for a in list(node.args) + [k.value for k in node.keywords]:
+                arg_key_reads |= self._subscript_keys(a)
+        if cands:
+            self.fn.calls.append(CallSite(cands=cands,
+                                          passes_tracked=passes_tracked,
+                                          arg_key_reads=arg_key_reads))
+        # LC010: donation checks
+        donor = next((c for c in cands if c.donate), None)
+        if donor is not None:
+            offset = 1 if (bound and donor.cls is not None) else 0
+            donated_idx = [i - offset for i in donor.donate
+                           if i - offset >= 0]
+            for i in donated_idx:
+                if i >= len(node.args):
+                    continue
+                arg = node.args[i]
+                other_names = set()
+                for j, a in enumerate(node.args):
+                    if j != i:
+                        other_names |= {n.id for n in ast.walk(a)
+                                        if isinstance(n, ast.Name)}
+                for k in node.keywords:
+                    other_names |= {n.id for n in ast.walk(k.value)
+                                    if isinstance(n, ast.Name)}
+                if isinstance(arg, ast.Name):
+                    if arg.id in other_names:
+                        self._emit(
+                            "LC010", node.lineno,
+                            f"'{arg.id}' donated to {donor.name}() while "
+                            "also passed as another argument (donated "
+                            "buffers must not alias any other argument)")
+                    elif not self.fresh.get(arg.id, False):
+                        self._emit(
+                            "LC010", node.lineno,
+                            f"'{arg.id}' donated to {donor.name}() without "
+                            "provably fresh buffers — jnp's constant "
+                            "cache aliases freshly-built states; take a "
+                            "defensive per-leaf .copy() first")
+                elif not arg_infos[i].fresh:
+                    self._emit(
+                        "LC010", node.lineno,
+                        f"argument {i} donated to {donor.name}() is not "
+                        "provably fresh — take a defensive .copy() first")
+            for i in donated_idx:
+                if i < len(node.args) and isinstance(node.args[i],
+                                                     ast.Name):
+                    self.dead[node.args[i].id] = node.lineno
+        return self._call_result(node, func, fname, cands,
+                                 arg_infos, kw_infos)
+
+    def _call_result(self, node: ast.Call, func: ast.expr, fname: str,
+                     cands: List[FnInfo], arg_infos: List[_VInfo],
+                     kw_infos: List[_VInfo]) -> _VInfo:
+        # kind: dict(x) of a tracked dict stays a tracked dict
+        kind = "other"
+        if isinstance(func, ast.Name) and func.id == "dict" \
+                and len(node.args) == 1 and arg_infos[0].kind == "dict":
+            kind = "dict"
+        # freshness
+        if fname == "copy":
+            return _VInfo(kind, True)
+        if fname == "tree_map":
+            for a in node.args:
+                if isinstance(a, ast.Lambda) and any(
+                        isinstance(c, ast.Call)
+                        and getattr(c.func, "attr", "") == "copy"
+                        for c in ast.walk(a.body)):
+                    return _VInfo(kind, True)
+        if cands and all(c.jitted for c in cands):
+            return _VInfo(kind, True)
+        # a call preserves freshness iff every tracked input is fresh
+        tracked_exprs = [a for a in node.args if self._mentions_tracked(a)
+                         and not isinstance(a, ast.Name)]
+        tracked_names = [a for a in node.args
+                         if isinstance(a, ast.Name)
+                         and self.av.get(a.id) == "dict"]
+        if tracked_names and not tracked_exprs \
+                and all(self.fresh.get(a.id, False)
+                        for a in tracked_names):
+            return _VInfo(kind, True)
+        return _VInfo(kind, False)
+
+    def _resolve(self, func: ast.expr,
+                 node: ast.Call) -> Tuple[List[FnInfo], bool]:
+        n_pos = len(node.args)
+        kw_names = [k.arg for k in node.keywords if k.arg is not None]
+        if isinstance(func, ast.Name):
+            f = self.p.lookup_name(self.fn.module, func.id)
+            return ([f], False) if f is not None else ([], False)
+        if not isinstance(func, ast.Attribute):
+            return [], False
+        recv, meth = func.value, func.attr
+        if isinstance(recv, ast.Name):
+            if recv.id == "self" and self.fn.cls is not None:
+                f = self.p.cls_methods.get(
+                    (self.fn.module, self.fn.cls, meth))
+                return ([f], True) if f is not None else ([], True)
+            f = self.p.lookup_module_attr(self.fn.module, recv.id, meth)
+            if f is not None:
+                return [f], False
+            if self.p.mod_alias.get(self.fn.module, {}).get(recv.id):
+                return [], False  # known module alias, unknown attr
+            return self.p.method_candidates(meth, n_pos, kw_names), True
+        if isinstance(recv, ast.Attribute) \
+                and isinstance(recv.value, ast.Name) \
+                and recv.value.id == "self":
+            # self.<obj>.<meth>(...) — instance-receiver heuristic
+            return self.p.method_candidates(meth, n_pos, kw_names), True
+        return [], False
+
+    def _mentions_tracked(self, node: ast.expr) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Name) and self.av.get(sub.id) == "dict":
+                return True
+            if isinstance(sub, ast.Subscript) \
+                    and isinstance(sub.value, ast.Attribute) \
+                    and sub.value.attr == "states":
+                return True
+        return False
+
+    def _subscript_keys(self, node: ast.expr) -> Set[str]:
+        keys: Set[str] = set()
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Subscript) \
+                    and isinstance(sub.value, ast.Name) \
+                    and self.av.get(sub.value.id) == "dict":
+                k = self._const_key(sub.slice)
+                if k is not None and k in self.p.universe:
+                    keys.add(k)
+        return keys
+
+    def _emit(self, rule: str, line: int, message: str) -> None:
+        self.p.violations.append(Violation(
+            path=self.fn.path, line=line, rule=rule, message=message))
+
+
+# ---------------------------------------------------- schema declarations
+
+def load_declarations(schema_path: pathlib.Path
+                      ) -> Tuple[Set[str], Dict[str, Dict[str, tuple]]]:
+    """(universe of state keys, declared EFFECTS) from schema.py's AST.
+
+    Parsed statically — no jax import — so the effects layer stays a
+    fast, dependency-free first signal.
+    """
+    tree = ast.parse(schema_path.read_text(), filename=str(schema_path))
+    universe: Set[str] = set()
+    effects: Dict[str, Dict[str, tuple]] = {}
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            t = node.targets[0]
+        elif isinstance(node, ast.AnnAssign) and node.value is not None:
+            t = node.target
+        else:
+            continue
+        if not isinstance(t, ast.Name):
+            continue
+        if t.id in ("SCHEMA", "LEVEL_SCHEMA") \
+                and isinstance(node.value, ast.Dict):
+            for k in node.value.keys:
+                if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                    universe.add(k.value)
+        elif t.id in ("FLEET_STATE_KEYS", "STAT_KEYS"):
+            universe |= set(ast.literal_eval(node.value))
+        elif t.id == "EFFECTS":
+            effects = ast.literal_eval(node.value)
+    return universe, effects
+
+
+def check_declarations(program: Program,
+                       effects: Dict[str, Dict[str, tuple]]) -> List[str]:
+    """Inferred-vs-declared mismatches, as human-readable strings."""
+    problems: List[str] = []
+    for qual in sorted(effects):
+        decl = effects[qual]
+        inferred = program.effects_of(qual)
+        if inferred is None:
+            problems.append(f"effect: {qual}: declared in schema.EFFECTS "
+                            "but not found in src/repro")
+            continue
+        for kind in ("reads", "writes"):
+            inf = set(inferred[kind])
+            dec = set(decl.get(kind, ()))
+            for k in sorted(inf - dec):
+                problems.append(f"effect: {qual}: inferred {kind[:-1]} of "
+                                f"'{k}' is undeclared in schema.EFFECTS")
+            for k in sorted(dec - inf):
+                problems.append(f"effect: {qual}: declares {kind[:-1]} "
+                                f"'{k}' that is never inferred")
+    return problems
+
+
+# ----------------------------------------------------------- public API
+
+def _module_name(path: pathlib.Path, pkg_root: pathlib.Path) -> str:
+    rel = path.relative_to(pkg_root).with_suffix("")
+    return ".".join(rel.parts)
+
+
+def analyze_tree(src_root: pathlib.Path,
+                 universe: Set[str]) -> Program:
+    """Analyze the whole package under ``src_root`` as one program."""
+    program = Program(universe)
+    for path in sorted(src_root.rglob("*.py")):
+        if "__pycache__" in path.parts:
+            continue
+        module = _module_name(path, src_root.parent)
+        program.add_source(module, path.read_text(), str(path))
+    program.analyze()
+    return program
+
+
+def analyze_file(path: pathlib.Path, universe: Set[str]) -> Program:
+    """Analyze one standalone file (fixtures) as its own program."""
+    program = Program(universe)
+    program.add_source(path.stem, path.read_text(), str(path))
+    program.analyze()
+    return program
+
+
+def analyze_source(src: str, universe: Set[str],
+                   module: str = "m", path: str = "<string>") -> Program:
+    """Analyze one source string (mutation tests)."""
+    program = Program(universe)
+    program.add_source(module, src, path)
+    program.analyze()
+    return program
+
+
+def check_effects(repo_root: pathlib.Path,
+                  fixture_paths: Sequence[pathlib.Path] = (),
+                  report_path: Optional[pathlib.Path] = None,
+                  ) -> Tuple[List[Violation], List[str]]:
+    """Run the full effects layer.
+
+    Analyzes ``src/repro`` as one program (rule violations + declared
+    EFFECTS cross-check), then each explicitly-targeted fixture file
+    standalone.  Optionally dumps the per-function effects report as
+    JSON (the CI artifact).
+    """
+    schema_path = repo_root / "src" / "repro" / "market_jax" / "schema.py"
+    universe, effects = load_declarations(schema_path)
+    program = analyze_tree(repo_root / "src" / "repro", universe)
+    violations = list(program.violations)
+    problems = check_declarations(program, effects)
+    for fx in fixture_paths:
+        violations.extend(analyze_file(fx, universe).violations)
+    if report_path is not None:
+        report = {
+            "universe": sorted(universe),
+            "declared": {q: {"reads": sorted(d.get("reads", ())),
+                             "writes": sorted(d.get("writes", ()))}
+                         for q, d in effects.items()},
+            "inferred": {q: program.effects_of(q) for q in sorted(effects)},
+            "undeclared_mismatches": problems,
+            "violations": [str(v) for v in violations],
+            "functions_analyzed": len(program.fns),
+        }
+        report_path.write_text(json.dumps(report, indent=2,
+                                          sort_keys=True) + "\n")
+    return violations, problems

@@ -1,6 +1,11 @@
 """lcheck negative-test fixture: LC003 must fire here (unguarded
 scatter into a bid-table column) but NOT on the guarded/sentinel
-writes below.  Never imported — parsed only."""
+writes below.  Never imported — parsed only.
+
+lcheck: file-disable=LC009 — these functions deliberately write book
+columns without view maintenance; the sorted-view rule has its own
+dedicated fixture (fixture_lc009.py).
+"""
 
 NEG = -1e30
 

@@ -1,0 +1,62 @@
+"""lcheck fixture: LC009 (sorted-view coherence) must fire EXACTLY
+once — on ``bad_insert``.  The good_* controls below must stay clean:
+sentinel kills and delegated view maintenance are not insertions.
+
+Never imported — parsed only (tests/test_effects.py pins the count;
+tests/test_lcheck.py's CLI smoke expects LC009 in stderr when this
+directory is targeted).
+"""
+import jax.numpy as jnp
+
+NEG = -1.0e30
+
+
+def bad_insert(state, idx, prices, tenants):
+    # live writes to book columns with NO order/sorted_gseg/seg_start
+    # maintenance — the PR 7 incremental-merge bug class
+    state = dict(state)
+    state["price"] = state["price"].at[idx].set(prices, mode="drop")
+    state["tenant"] = state["tenant"].at[idx].set(tenants, mode="drop")
+    return state
+
+
+def _maintain_view(state):
+    state = dict(state)
+    state["order"] = jnp.argsort(state["price"]).astype(jnp.int32)
+    state["sorted_gseg"] = jnp.zeros_like(state["order"])
+    state["seg_start"] = jnp.zeros_like(state["seg_start"])
+    return state
+
+
+def good_insert(state, idx, prices):
+    # live book write + view maintenance in the same function: clean
+    state = dict(state)
+    state["price"] = state["price"].at[idx].set(prices, mode="drop")
+    state["order"] = jnp.argsort(state["price"]).astype(jnp.int32)
+    state["sorted_gseg"] = jnp.zeros_like(state["order"])
+    state["seg_start"] = jnp.zeros_like(state["seg_start"])
+    return state
+
+
+def good_delegated(state, idx, prices):
+    # live book write with maintenance DELEGATED to a callee: clean
+    state = dict(state)
+    state["price"] = state["price"].at[idx].set(prices, mode="drop")
+    return _maintain_view(state)
+
+
+def good_kill(state, bid_ids):
+    # sentinel kills are consumption, not insertion: the sorted view
+    # stays valid (dead entries are skipped by segment scans)
+    state = dict(state)
+    state["price"] = state["price"].at[bid_ids].set(NEG)
+    state["tenant"] = state["tenant"].at[bid_ids].set(-1)
+    return state
+
+
+def good_kill_masked(state, consumed):
+    # jnp.where(cond, NEG, state[col]) is also a kill
+    state = dict(state)
+    state["price"] = jnp.where(consumed, NEG, state["price"])
+    state["tenant"] = jnp.where(consumed, -1, state["tenant"])
+    return state

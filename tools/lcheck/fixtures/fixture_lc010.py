@@ -1,0 +1,67 @@
+"""lcheck fixture: LC010 (use-after-donation) must fire EXACTLY three
+times — once per ``bad_*`` flavor below.  The good_* controls must
+stay clean: rebinding the donated name and donating fresh jit outputs
+is exactly what ``sim/epoch.py:drive()`` does.
+
+Never imported — parsed only (tests/test_effects.py pins the count;
+tests/test_lcheck.py's CLI smoke expects LC010 in stderr when this
+directory is targeted).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def consume(state, t):
+    state = dict(state)
+    state["t"] = state["t"] + t
+    return state
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def consume_against(state, ref):
+    state = dict(state)
+    state["t"] = state["t"] + ref["t"]
+    return state
+
+
+def bad_use_after(market_state, t):
+    # flavor (a): the donated buffer is read after the donating call
+    st = jax.tree_util.tree_map(lambda a: jnp.asarray(a).copy(),
+                                market_state)
+    out = consume(st, t)
+    return out, st["t"]
+
+
+def bad_alias(market_state):
+    # flavor (b): f(a, donate(a)) — XLA rejects donated-arg aliasing
+    st = jax.tree_util.tree_map(lambda a: jnp.asarray(a).copy(),
+                                market_state)
+    return consume_against(st, st)
+
+
+def bad_stale(market):
+    # flavor (c): donated without provably fresh buffers — jnp's
+    # constant cache aliases freshly-built states (the hazard drive()
+    # defends with per-leaf .copy())
+    st = dict(market.states["H100"])
+    return consume(st, 1.0)
+
+
+def good_copy_then_rebind(market_state, t):
+    # the drive() pattern: defensive copy once, then thread distinct
+    # executable outputs through repeated donations
+    st = jax.tree_util.tree_map(lambda a: jnp.asarray(a).copy(),
+                                market_state)
+    st = consume(st, t)
+    return consume(st, t)
+
+
+def good_loop(market_state, ticks):
+    st = jax.tree_util.tree_map(lambda a: jnp.asarray(a).copy(),
+                                market_state)
+    for t in ticks:
+        st = consume(st, t)
+    return st

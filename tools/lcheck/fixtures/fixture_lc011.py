@@ -1,0 +1,41 @@
+"""lcheck fixture: LC011 (backend bypass) must fire EXACTLY twice —
+on ``bad_ref_bypass`` and ``bad_kernel_bypass``.  The good_* controls
+must stay clean: ``ops.clear`` is the normalized entry and
+``sort_book`` is a shared view helper, not a clear path.
+
+Never imported — parsed only (tests/test_effects.py pins the count;
+tests/test_lcheck.py's CLI smoke expects LC011 in stderr when this
+directory is targeted).
+"""
+import jax.numpy as jnp
+
+from repro.kernels.market_clear import ops as clear_ops
+from repro.kernels.market_clear import ref as R
+from repro.kernels.market_clear.kernel import clear_pallas
+from repro.kernels.market_clear.ref import sort_book
+
+
+def bad_ref_bypass(aggs, floors, level_off, owner, limit):
+    # skirts ops.clear's backend normalization — the PR 4 divergence
+    # class (interpret-mode overrides, per-call backend drift)
+    return R.clear_sorted_from_aggs(aggs, floors, level_off,
+                                    owner, limit, 4)
+
+
+def bad_kernel_bypass(pk, tk, sk):
+    return clear_pallas(pk, tk, sk)
+
+
+def good_normalized(state, level_off, strides, k):
+    return clear_ops.clear(state["order"], state["sorted_gseg"],
+                           state["seg_start"], state["price"],
+                           state["tenant"], state["seq"],
+                           tuple(state["floor"]), level_off, strides,
+                           state["owner"], state["limit"], k,
+                           health=state["health"])
+
+
+def good_sort(state):
+    order, sg = sort_book(jnp.zeros_like(state["order"]),
+                          state["price"], state["seq"])
+    return order, sg

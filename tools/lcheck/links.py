@@ -1,8 +1,8 @@
 """lcheck LC006: docs cross-references must not rot.
 
-Absorbed from the old ``tools/check_docs_links.py`` (PR 5) so CI has a
-single entry point (``python -m tools.lcheck``).  Two checks, repo-
-rooted:
+Born as a standalone docs-rot checker in PR 5 and absorbed here so CI
+has a single entry point (``python -m tools.lcheck``).  Two checks,
+repo-rooted:
 
 1. every relative markdown link target in README.md and docs/*.md
    exists on disk (http(s)/mailto/pure-anchor links are skipped);

@@ -94,6 +94,16 @@ RULES: Dict[str, str] = {
     "LC008": "durability hazard: non-atomic json/npz write (no "
              "os.replace/os.fsync in the function) or a silent "
              "broad-except swallow",
+    "LC009": "sorted-view coherence: live write to a book column "
+             "without writing (or delegating maintenance of) "
+             "order/sorted_gseg/seg_start (the PR 7 "
+             "incremental-merge bug class)",
+    "LC010": "use-after-donation: a buffer passed at a donate_argnums "
+             "position is read afterwards, aliases another argument "
+             "of the same call, or lacks provably fresh buffers",
+    "LC011": "backend bypass: direct call into the kernel-internal "
+             "clear path (ref.py/kernel.py) from engine/sim code — "
+             "go through kernels.market_clear.ops.clear",
 }
 
 # calls that durably serialize to disk (LC008 flavor a)
@@ -557,7 +567,14 @@ def check_paths(paths: Sequence[str],
     for p in paths:
         root = pathlib.Path(p)
         files = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        # rule fixtures deliberately violate every rule: skip them on
+        # directory sweeps unless the fixtures dir itself was targeted
+        in_fixtures = "fixtures" in root.resolve().parts
         for f in files:
+            if "__pycache__" in f.parts:
+                continue
+            if not in_fixtures and "fixtures" in f.parts:
+                continue
             out.extend(check_source(f.read_text(errors="replace"),
                                     str(f), select))
     return out
