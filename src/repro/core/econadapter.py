@@ -67,6 +67,19 @@ class EconAdapter:
         self._last_exchange = -1e18
 
     # --- paper Listing 1 ---------------------------------------------------
+    def _stall_burn(self, monetary_value: float, rate: float) -> float:
+        """$-per-hour burned while a membership change is in flight: rent
+        on the moving node, plus — for gang-scheduled apps, which restart
+        as a whole (``gang_size`` hook) — rent AND foregone utility on
+        every stalled peer.  This is exactly the waste the workload model
+        charges (global reconfig stall + checkpoint loss over
+        ``throughput()``), so pricing anything less understates switching
+        costs and churns the market (audit A3, docs/DESIGN.md §13).  The
+        moving node itself counts too: it produces nothing while it
+        warms up / restarts wherever it lands."""
+        gang = getattr(self.app, "gang_size", lambda: 0)()
+        return (gang + 1) * (monetary_value + rate)
+
     def price(self, leaf: int, goal: str, market_rate: float) -> float:
         app = self.app
         mu = app.profiled_marginal_utility(leaf, goal)
@@ -79,7 +92,8 @@ class EconAdapter:
         elif goal == SHRINK:
             reconf_s += app.time_till_chkpt(leaf)
         reconf_s *= self.cfg.reconfig_estimate_mult
-        waste = (reconf_s / 3600.0) * market_rate          # $ wasted by move
+        waste = (reconf_s / 3600.0) \
+            * self._stall_burn(monetary_value, market_rate)
         return monetary_value - waste / max(self.cfg.horizon_h, 1e-9)
 
     def retention_limit(self, leaf: int, market_rate: float) -> float:
@@ -93,7 +107,8 @@ class EconAdapter:
         at_risk_s = (app.cold_start_time(leaf)
                      + app.time_since_chkpt(leaf)) \
             * self.cfg.reconfig_estimate_mult
-        waste = (at_risk_s / 3600.0) * max(market_rate, 1e-6)
+        waste = (at_risk_s / 3600.0) \
+            * self._stall_burn(value, max(market_rate, 1e-6))
         return value + waste / max(self.cfg.horizon_h, 1e-9)
 
     # --- periodic policy -----------------------------------------------------
@@ -119,8 +134,15 @@ class EconAdapter:
             m.set_retention_limit(self.tenant, leaf,
                                   self.retention_limit(leaf, rate))
             spend += rate
-        # 2) grow orders toward the app's desired scopes, budget-capped
-        scopes = list(self.app.desired_scopes(m))
+        # 2) grow orders toward the app's desired scopes, budget-capped.
+        #    A tenant mid-reconfiguration can't productively absorb new
+        #    nodes yet — bidding anyway fuels eviction cycles (urgency
+        #    rises after every loss, the re-bid evicts the evictor, both
+        #    sides burn reconfig stalls). Sit the window out instead.
+        if now <= getattr(self.app, "reconfig_until", -math.inf):
+            scopes: List[int] = []
+        else:
+            scopes = list(self.app.desired_scopes(m))
         if not self.cfg.topology_aware:
             scopes = [self.market.topo.ancestors(s)[-1] for s in scopes]
         budget_left = self.cfg.budget_rate - spend

@@ -150,7 +150,8 @@ STAT_KEYS = ("orders", "transfers", "explicit_relinquish",
 # universe of state keys across engine, fleet and stats namespaces
 FLEET_STATE_KEYS = ("progress", "served", "demanded", "rate_ewma",
                     "reconfig_until", "last_checkpoint", "last_t",
-                    "last_scale_down", "done_at")
+                    "last_scale_down", "done_at", "cold_cnt",
+                    "cold_until")
 
 # ---------------------------------------------------------------------
 # Declared per-function effects: which state keys each engine / fleet /
@@ -215,19 +216,19 @@ EFFECTS: Dict[str, Dict[str, tuple]] = {
     },
     "repro.sim.epoch.EpochRunner.epoch": {
         "reads": ("acq_t", "bids_clipped", "bills", "blimit",
-                  "demanded", "done_at", "dropped",
-                  "explicit_relinquish", "floor", "floor_t", "head",
-                  "health", "implicit_relinquish", "last_checkpoint",
-                  "last_scale_down", "last_t", "level", "limit",
-                  "next_seq", "node", "order", "orders", "owner",
-                  "price", "progress", "rate", "rate_ewma",
-                  "reconfig_until", "resorts", "revoked_by_fault",
-                  "seg_start", "seq", "served", "sorted_gseg", "t",
-                  "tenant", "transfers", "waves"),
+                  "cold_cnt", "cold_until", "demanded", "done_at",
+                  "dropped", "explicit_relinquish", "floor", "floor_t",
+                  "head", "health", "implicit_relinquish",
+                  "last_checkpoint", "last_scale_down", "last_t",
+                  "level", "limit", "next_seq", "node", "order",
+                  "orders", "owner", "price", "progress", "rate",
+                  "rate_ewma", "reconfig_until", "resorts",
+                  "revoked_by_fault", "seg_start", "seq", "served",
+                  "sorted_gseg", "t", "tenant", "transfers", "waves"),
         "writes": ("acq_t", "bids_clipped", "bills", "blimit",
-                   "demanded", "done_at", "dropped",
-                   "explicit_relinquish", "floor", "floor_t", "head",
-                   "implicit_relinquish", "last_checkpoint",
+                   "cold_cnt", "cold_until", "demanded", "done_at",
+                   "dropped", "explicit_relinquish", "floor", "floor_t",
+                   "head", "implicit_relinquish", "last_checkpoint",
                    "last_scale_down", "last_t", "level", "limit",
                    "next_seq", "node", "order", "orders", "owner",
                    "price", "progress", "rate", "rate_ewma",
@@ -237,19 +238,21 @@ EFFECTS: Dict[str, Dict[str, tuple]] = {
     },
     "repro.sim.fleet.Fleet.policy": {
         "reads": ("done_at", "last_checkpoint", "last_scale_down",
-                  "last_t", "progress", "rate_ewma"),
+                  "last_t", "progress", "rate_ewma", "reconfig_until"),
         "writes": ("last_scale_down",),
     },
     "repro.sim.fleet.Fleet.after_step": {
-        "reads": ("done_at", "last_checkpoint", "progress",
-                  "reconfig_until"),
-        "writes": ("progress", "reconfig_until"),
+        "reads": ("cold_cnt", "cold_until", "done_at",
+                  "last_checkpoint", "progress", "reconfig_until"),
+        "writes": ("cold_cnt", "cold_until", "progress",
+                   "reconfig_until"),
     },
     "repro.sim.fleet.Fleet.advance": {
-        "reads": ("demanded", "done_at", "last_checkpoint", "last_t",
-                  "progress", "rate_ewma", "reconfig_until", "served"),
-        "writes": ("demanded", "done_at", "last_checkpoint", "last_t",
-                   "progress", "rate_ewma", "served"),
+        "reads": ("cold_cnt", "cold_until", "demanded", "done_at",
+                  "last_checkpoint", "last_t", "progress", "rate_ewma",
+                  "reconfig_until", "served"),
+        "writes": ("cold_cnt", "demanded", "done_at", "last_checkpoint",
+                   "last_t", "progress", "rate_ewma", "served"),
     },
     "repro.kernels.market_clear.ops.clear": {
         "reads": ("floor", "health", "limit", "order", "owner",

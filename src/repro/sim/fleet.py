@@ -151,6 +151,11 @@ class Fleet:
             "last_checkpoint": arr, "last_t": arr,
             "last_scale_down": arr,
             "done_at": jnp.full((n,), jnp.inf, jnp.float32),
+            # inference cold-start batch (Tenant._cold_cnt/_cold_until):
+            # replicas granted inside the open warm-up window, and when
+            # that window closes — audit A1, docs/DESIGN.md §13
+            "cold_cnt": z,
+            "cold_until": jnp.full((n,), -1.0, jnp.float32),
         }
 
     # ------------------------------------------------------ rate lookup
@@ -189,10 +194,20 @@ class Fleet:
             s["rate_ewma"])
         s["demanded"] = jnp.where(inf_m, s["demanded"] + lam * dt,
                                   s["demanded"])
-        cap_rps = heldf * p["cap_per_node"]
+        # inference: cold replicas serve only the tail of the tick past
+        # their warm-up deadline; the rest of the fleet never stalls
+        # (Tenant.advance inference branch, audit A1)
+        cold_frac = jnp.clip((now - s["cold_until"])
+                             / jnp.maximum(dt, 1e-9), 0.0, 1.0)
+        share = jnp.where(heldf > 0, s["cold_cnt"] / jnp.maximum(heldf, 1.0),
+                          0.0)
+        cap_rps = heldf * p["cap_per_node"] \
+            * (1.0 - share * (1.0 - cold_frac))
         s["served"] = jnp.where(
-            inf_m, s["served"] + jnp.minimum(lam, cap_rps) * active_dt,
+            inf_m, s["served"] + jnp.minimum(lam, cap_rps) * dt,
             s["served"])
+        s["cold_cnt"] = jnp.where(inf_m & (now >= s["cold_until"]),
+                                  0.0, s["cold_cnt"])
         wk = live & (p["kind"] != KIND_INFER)
         s["progress"] = jnp.where(
             wk, s["progress"] + heldf * active_dt / 3600.0, s["progress"])
@@ -233,17 +248,20 @@ class Fleet:
         p, s = params, state
         heldf = held.astype(jnp.float32)
         lam = self._lam(p, s["last_t"])
+        # price off the planner's smoothed demand, not the noisy
+        # instantaneous rate (Tenant._planned_rate, audit A3)
+        plan = jnp.maximum(s["rate_ewma"], 0.7 * lam)
         is_inf = p["kind"] == KIND_INFER
-        mu_inf = jnp.where(lam > 0,
-                           jnp.minimum(p["cap_per_node"], lam)
-                           / jnp.maximum(lam, 1e-30), 0.0)
+        mu_inf = jnp.where(plan > 0,
+                           jnp.minimum(p["cap_per_node"], plan)
+                           / jnp.maximum(plan, 1e-30), 0.0)
         mu_wk = jnp.minimum(
             1.0, 1.0 / jnp.maximum(p["work"] - s["progress"], 1e-9))
         mu = jnp.where(is_inf, mu_inf, mu_wk)
         cap_rps = heldf * p["cap_per_node"]
         gap_inf = jnp.where(
-            lam > 0,
-            jnp.maximum(0.0, 1.0 - cap_rps / jnp.maximum(lam, 1e-30)),
+            plan > 0,
+            jnp.maximum(0.0, 1.0 - cap_rps / jnp.maximum(plan, 1e-30)),
             0.0)
         t_left = jnp.maximum(
             p["arrival_s"] + p["deadline_s"] - s["last_t"], 1.0)
@@ -255,20 +273,31 @@ class Fleet:
         urgency = 1.0 + 2.0 * gap
         value = jnp.where(is_inf, p["sla_value_per_h"] * _SLA_CREDITS,
                           p["value_per_gap"]) * urgency
-        since_chkpt = s["last_t"] - s["last_checkpoint"]
+        # stateless inference has no work at risk between checkpoints
+        # (Tenant.time_since_chkpt, audit A2)
+        since_chkpt = jnp.where(is_inf, 0.0,
+                                s["last_t"] - s["last_checkpoint"])
         reconf_h = (p["reconfig_s"] + since_chkpt) \
             * self.cfg.reconfig_estimate_mult / 3600.0
-        return mu, gap, value, reconf_h
+        # gang-stall scaling (Tenant.gang_size): a membership change
+        # restarts the whole gang for train/batch, nothing extra for
+        # independently-warming inference replicas
+        gang = jnp.where(is_inf, 0.0, heldf)
+        return mu, gap, value, reconf_h, gang
 
     # the Listing-1 quote formulas — ONE definition each; policy() and
     # the test-facing listing1() both call these, so the differential
-    # tests exercise exactly the shipped pricing
-    def _grow_price(self, mu, value, reconf_h, ref):
-        return value * mu - reconf_h * ref / self.cfg.horizon_h
+    # tests exercise exactly the shipped pricing.  ``gang`` scales the
+    # switching-cost term by the nodes a membership change stalls
+    # (EconAdapter._stall_burn)
+    def _grow_price(self, mu, value, reconf_h, ref, gang):
+        burn = (gang + 1.0) * (value * mu + ref)
+        return value * mu - reconf_h * burn / self.cfg.horizon_h
 
-    def _retention_limit(self, mu, value, reconf_h, rate):
-        return value * mu + reconf_h * jnp.maximum(rate, 1e-6) \
-            / self.cfg.horizon_h
+    def _retention_limit(self, mu, value, reconf_h, rate, gang):
+        r = jnp.maximum(rate, 1e-6)
+        burn = (gang + 1.0) * (value * mu + r)
+        return value * mu + reconf_h * burn / self.cfg.horizon_h
 
     @functools.partial(jax.jit, static_argnums=0)
     def listing1(self, params, state, held, ref, rate):
@@ -277,9 +306,9 @@ class Fleet:
         per-tenant charged rate ``rate`` — the vectorized twins of
         ``EconAdapter.price``/``retention_limit`` (differential-tested
         elementwise in tests/test_fleet.py)."""
-        mu, _gap, value, reconf_h = self._hooks(params, state, held)
-        return (self._grow_price(mu, value, reconf_h, ref),
-                self._retention_limit(mu, value, reconf_h, rate))
+        mu, _gap, value, reconf_h, gang = self._hooks(params, state, held)
+        return (self._grow_price(mu, value, reconf_h, ref, gang),
+                self._retention_limit(mu, value, reconf_h, rate, gang))
 
     @staticmethod
     def _rank_in_group(group, *tie_keys):
@@ -320,7 +349,7 @@ class Fleet:
         held = jnp.zeros((n,), jnp.int32).at[owner_c].add(
             owned.astype(jnp.int32))
         want = self.desired_nodes(p, s, now)
-        mu, gap, value, reconf_h = self._hooks(p, s, held)
+        mu, gap, value, reconf_h, gang = self._hooks(p, s, held)
 
         # ---- surplus pruning (value-per-dollar asc = rate desc, with
         # leaf asc as the deterministic tie-break) under hysteresis
@@ -340,7 +369,8 @@ class Fleet:
         # ---- retention limits on kept leaves (Listing-1 limit: value
         # plus the work at risk since the last checkpoint)
         lim_leaf = self._retention_limit(
-            mu[owner_c], value[owner_c], reconf_h[owner_c], rate_leaf)
+            mu[owner_c], value[owner_c], reconf_h[owner_c], rate_leaf,
+            gang[owner_c])
         limits = jnp.where(owned & ~sel, lim_leaf, jnp.nan)
 
         # ---- grow bids at the type root ("anywhere"), Listing-1 priced
@@ -350,9 +380,12 @@ class Fleet:
             floor_leaf = jnp.maximum(floor_leaf,
                                      floors[d][leafid // st_d])
         ref = jnp.min(floor_leaf)
-        price = self._grow_price(mu, value, reconf_h, ref)
+        price = self._grow_price(mu, value, reconf_h, ref, gang)
+        # churn guard (EconAdapter.step item 2): no grow bids while the
+        # tenant is mid-reconfiguration — it can't absorb new nodes yet
         can_bid = (want > held) & (now >= p["arrival_s"]) \
-            & ~jnp.isfinite(s["done_at"]) & (price > 0)
+            & ~jnp.isfinite(s["done_at"]) & (price > 0) \
+            & (now > s["reconfig_until"])
         nb = jnp.where(can_bid,
                        jnp.minimum(want - held, cfg.per_tenant_bids), 0)
         offsets = jnp.cumsum(nb)
@@ -442,11 +475,26 @@ class Fleet:
             lost.astype(jnp.int32))
         touched = (gain_cnt > 0) | (lost_cnt > 0)
         done = jnp.isfinite(s["done_at"])
+        is_inf = p["kind"] == KIND_INFER
+        # restart absorption (audit A3): changes landing inside an open
+        # reconfiguration window fold into the in-flight restart
         s["reconfig_until"] = jnp.where(
-            touched & ~done,
-            jnp.maximum(s["reconfig_until"],
-                        now + p["reconfig_s"] * p["overhead_mult"]),
+            touched & ~done & ~is_inf & (now > s["reconfig_until"]),
+            now + p["reconfig_s"] * p["overhead_mult"],
             s["reconfig_until"])
+        # inference cold-start batch merge (Tenant.on_grant/on_revoke):
+        # mature the open window, fold new grants into one batch, clamp
+        # to the post-transfer held count on revokes
+        cold0 = jnp.where(now >= s["cold_until"], 0.0, s["cold_cnt"])
+        cold1 = cold0 + gain_cnt.astype(jnp.float32)
+        s["cold_cnt"] = jnp.where(
+            is_inf & touched,
+            jnp.minimum(cold1, held_after.astype(jnp.float32)),
+            s["cold_cnt"])
+        s["cold_until"] = jnp.where(
+            is_inf & (gain_cnt > 0),
+            now + p["reconfig_s"] * p["overhead_mult"],
+            s["cold_until"])
         return s, held_after
 
     # ---------------------------------------------- alone counterfactual
@@ -466,11 +514,23 @@ class Fleet:
                            jnp.where(can_shrink, want, held), want)
         done = jnp.isfinite(s["done_at"])
         touched = (target != held) & ~done
+        is_inf = p["kind"] == KIND_INFER
         s["reconfig_until"] = jnp.where(
-            touched,
-            jnp.maximum(s["reconfig_until"],
-                        now + p["reconfig_s"] * p["overhead_mult"]),
+            touched & ~is_inf & (now > s["reconfig_until"]),
+            now + p["reconfig_s"] * p["overhead_mult"],
             s["reconfig_until"])
+        # inference grants warm up as a merged cold batch instead of
+        # stalling the tenant (audit A1) — same rule as after_step
+        gain = jnp.maximum(target - held, 0).astype(jnp.float32)
+        cold0 = jnp.where(now >= s["cold_until"], 0.0, s["cold_cnt"])
+        s["cold_cnt"] = jnp.where(
+            is_inf & touched,
+            jnp.minimum(cold0 + gain, target.astype(jnp.float32)),
+            s["cold_cnt"])
+        s["cold_until"] = jnp.where(
+            is_inf & (gain > 0),
+            now + p["reconfig_s"] * p["overhead_mult"],
+            s["cold_until"])
         s["last_scale_down"] = jnp.where(target < held, now,
                                          s["last_scale_down"])
         return s, target

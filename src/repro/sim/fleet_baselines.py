@@ -1,0 +1,161 @@
+"""Fleet-scale baseline allocators: fcfs / fcfsp / spot at 10k leaves.
+
+The object-path clouds (sim/cloud.py) top out around a few hundred
+leaves — per-leaf Python dict walks per tick.  This module mirrors their
+allocation contracts as host-numpy passes over a per-leaf owner array,
+while reusing the SAME jitted fleet workload model for everything that
+actually determines performance: ``Fleet.desired_nodes`` (autoscaler),
+``Fleet.after_step`` (reconfiguration windows, cold-start batches,
+wasted work on forced revocation), ``Fleet.advance`` (serving /
+progress), and ``Fleet.apply_policy_log`` (the scale-down hysteresis
+stamp).  Swapping ONLY the allocator is the paper's §5.1 isolation at
+fleet scale — see docs/DESIGN.md §13.
+
+Owner-array convention matches ``Fleet.after_step``: ``(n_leaves,)``
+int32, tenant index in ``[0, n)`` when held, ``-1`` when free.
+
+The spot baseline reuses ``SpotBook`` (sim/cloud.py) verbatim — the
+same clearing-price / notice / one-shot-request state machine the
+property suite (tests/test_spot.py) pins — with launch bids quoted by
+the fleet's own Listing-1 vectorization (``Fleet.listing1``), so the
+object-path and fleet-path spot markets differ only in quote batching.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.sim.cloud import SpotBook
+from repro.sim.workloads import KIND_IDS, ON_DEMAND
+
+KIND_INFER = KIND_IDS["inference"]
+
+HYSTERESIS_S = 120.0    # Tenant scale-down hysteresis (FleetConfig)
+PREEMPT_COOLDOWN_S = 120.0   # FCFSPCloud rate limit (sim/cloud.py)
+SPOT_FLOOR_FRAC = 0.7        # SpotCloud.floor_frac
+
+
+def _release_surplus(owner: np.ndarray, want: np.ndarray,
+                     held: np.ndarray, last_scale_down: np.ndarray,
+                     now: float, sel: np.ndarray) -> None:
+    """Graceful surplus release under the shared 120 s hysteresis:
+    highest-index leaves first (the deterministic tie-break).  Marks
+    ``sel`` and frees ``owner`` in place."""
+    extra = held - want
+    eligible = (now - last_scale_down >= HYSTERESIS_S) & (extra > 0)
+    for i in np.nonzero(eligible)[0]:
+        leaves = np.nonzero(owner == i)[0]
+        for leaf in leaves[::-1][: extra[i]]:
+            owner[leaf] = -1
+            sel[leaf] = True
+
+
+def _drive(kind: str, fleet, params, fcfg) -> Tuple[dict, Dict[str, int]]:
+    """Run one multi-tenant fleet scenario under baseline ``kind``."""
+    import jax.numpy as jnp
+
+    n = fleet.cfg.n
+    n_leaves = fleet.tree.n_leaves
+    state = fleet.init_state(params)
+    owner = np.full(n_leaves, -1, np.int32)
+    arrival = np.asarray(params["arrival_s"])
+    kinds = np.asarray(params["kind"])
+    order = np.argsort(arrival, kind="stable")       # FCFS arrival order
+    last_preempt = np.full(n, -np.inf)
+    stats = {"grants": 0, "preemptions": 0, "releases": 0,
+             "requests": 0}
+    book = None
+    if kind == "spot":
+        book = SpotBook(range(n_leaves),
+                        ON_DEMAND.get("H100", 2.0) * SPOT_FLOOR_FRAC)
+
+    t = 0.0
+    while t <= fcfg.duration_s:
+        owner_b = owner.copy()
+        sel = np.zeros(n_leaves, bool)
+        want = np.asarray(fleet.desired_nodes(params, state, t))
+        held = np.bincount(owner[owner >= 0], minlength=n)
+        _release_surplus(owner, want, held, np.asarray(
+            state["last_scale_down"]), t, sel)
+        stats["releases"] += int(sel.sum())
+        if book is not None:
+            for leaf in np.nonzero(sel)[0]:
+                book.release(int(leaf))
+        held = np.bincount(owner[owner >= 0], minlength=n)
+        deficit = np.maximum(want - held, 0)
+        deficit[arrival > t] = 0
+
+        if kind in ("fcfs", "fcfsp"):
+            free = list(np.nonzero(owner < 0)[0])
+            for i in order:
+                take = min(deficit[i], len(free))
+                for _ in range(take):
+                    owner[free.pop(0)] = i
+                deficit[i] -= take
+                stats["grants"] += take
+            if kind == "fcfsp":
+                # inference preempts training/batch, coarse victim
+                # choice, rate-limited (FCFSPCloud._preempt)
+                for i in order:
+                    if deficit[i] <= 0 or kinds[i] != KIND_INFER:
+                        continue
+                    if t - last_preempt[i] < PREEMPT_COOLDOWN_S:
+                        continue
+                    last_preempt[i] = t
+                    vmask = (owner >= 0) & (kinds[np.clip(owner, 0, n - 1)]
+                                            != KIND_INFER)
+                    victims = np.nonzero(vmask)[0][: deficit[i]]
+                    owner[victims] = i          # forced: sel stays False
+                    deficit[i] -= len(victims)
+                    stats["preemptions"] += len(victims)
+                    stats["grants"] += len(victims)
+        else:
+            # spot: Listing-1 launch bids against the current clearing
+            # price, frozen at request time, one-shot requests
+            price = np.asarray(fleet.listing1(
+                params, state, jnp.asarray(held, jnp.int32),
+                jnp.float32(book.spot), jnp.float32(book.spot))[0])
+            cap = fleet.cfg.per_tenant_bids
+            for i in order:
+                k = min(deficit[i], cap)
+                if k <= 0 or price[i] <= 0 \
+                        or price[i] < book.floor - 1e-9:
+                    continue
+                for _ in range(k):
+                    book.request(int(i), float(price[i]))
+                stats["requests"] += k
+            grants, preempts = book.clear(t)
+            for tid, leaf in preempts:
+                owner[leaf] = -1                # forced: sel stays False
+                stats["preemptions"] += 1
+            for tid, leaf, _bid in grants:
+                owner[leaf] = tid
+                stats["grants"] += 1
+
+        ob = jnp.asarray(owner_b)
+        state = fleet.apply_policy_log(state, t, ob, jnp.asarray(sel))
+        state, held_j = fleet.after_step(params, state, t, ob,
+                                         jnp.asarray(owner), jnp.asarray(sel))
+        state = fleet.advance(params, state, t, held_j)
+        t += fcfg.tick_s
+    return state, stats
+
+
+def run_fleet_baseline(kind: str, fcfg) -> "FleetRunResult":
+    """Multi-tenant baseline run + the scenario's configured alone
+    denominator => fleet-scale retention, comparable against
+    ``run_fleet_scenario``'s laissez rows (same denominator modes)."""
+    from repro.sim.simulator import (FleetRunResult, _alone_perf,
+                                     make_fleet, _seed_floors)
+    if kind not in ("fcfs", "fcfsp", "spot"):
+        raise ValueError(f"unknown fleet baseline: {kind!r}")
+    topo, _tenants, market, fleet, params = make_fleet(fcfg)
+    state, stats = _drive(kind, fleet, params, fcfg)
+    perf = np.asarray(fleet.performance(params, state, fcfg.duration_s))
+    _seed_floors(market, topo)
+    alone = _alone_perf(fleet, params, market, topo, fcfg)
+    retention = np.minimum(1.5, perf / np.maximum(alone, 1e-9))
+    return FleetRunResult(perf=perf, alone_perf=alone,
+                          retention=retention, epoch_s=[],
+                          stats={k: float(v) for k, v in stats.items()})

@@ -70,6 +70,12 @@ class Tenant:
         self.cost = 0.0                       # for non-market clouds
         self._rate_ewma = 0.0                 # smoothed inference load
         self._last_scale_down = arrival_s
+        # inference cold-start batch: newly granted replicas warm up for
+        # reconfig_s while the rest of the fleet keeps serving (stateless
+        # serving never stalls globally; see docs/DESIGN.md §13 audit A1).
+        # Grants inside an open warm-up window merge into one batch.
+        self._cold_cnt = 0
+        self._cold_until = -1.0
         # charged rates per owned leaf, refreshed by the EconAdapter each
         # step (clouds without price signals leave this empty)
         self.current_rates: Dict[int, float] = {}
@@ -139,7 +145,15 @@ class Tenant:
             alpha = min(1.0, dt / 300.0)      # ~5 min planner smoothing
             self._rate_ewma += alpha * (lam - self._rate_ewma)
             self.demanded += lam * dt
-            self.served += min(lam, self.capacity_rps()) * active_dt
+            # cold replicas serve only for the tail of the tick past their
+            # warm-up deadline; warm replicas serve the full tick
+            n_nodes = len(self.nodes)
+            cold_frac = min(1.0, max(0.0, (now - self._cold_until) / dt))
+            share = self._cold_cnt / n_nodes if n_nodes else 0.0
+            eff_cap = self.capacity_rps() * (1.0 - share * (1.0 - cold_frac))
+            self.served += min(lam, eff_cap) * dt
+            if now >= self._cold_until:
+                self._cold_cnt = 0
         else:
             self.progress += self.throughput() * active_dt / 3600.0
             if now - self.last_checkpoint >= self.p.checkpoint_interval_s:
@@ -149,12 +163,23 @@ class Tenant:
 
     def on_grant(self, leaf: int, now: float) -> None:
         self.nodes.add(leaf)
-        self._reconfigure(now, shrink=False)
+        if self.p.kind == "inference":
+            self._cold_mature(now)
+            self._cold_cnt += 1
+            self._cold_until = now + self.p.reconfig_s * self.overhead_mult
+        else:
+            self._reconfigure(now, shrink=False)
 
     def on_revoke(self, leaf: int, now: float, *,
                   graceful: bool = False) -> None:
         self.nodes.discard(leaf)
-        if self.p.kind != "inference" and not graceful:
+        if self.p.kind == "inference":
+            # stateless serving: losing a replica costs capacity only —
+            # no checkpoint waste, no global stall
+            self._cold_mature(now)
+            self._cold_cnt = min(self._cold_cnt, len(self.nodes))
+            return
+        if not graceful:
             # involuntary revocation wastes work since the last checkpoint
             waste_s = min(now - self.last_checkpoint,
                           self.p.checkpoint_interval_s)
@@ -162,11 +187,22 @@ class Tenant:
             self.progress = max(0.0, self.progress - lost)
         self._reconfigure(now, shrink=True)
 
+    def _cold_mature(self, now: float) -> None:
+        if now >= self._cold_until:
+            self._cold_cnt = 0
+
     def _reconfigure(self, now: float, shrink: bool) -> None:
         if self.done_at is not None:
             return
+        # restart absorption (audit A3): membership changes landing
+        # while a restart is already in flight fold into it — elastic
+        # trainers coalesce scale events into one restart rather than
+        # restarting per node, else trickle-in grants stall the job
+        # forever (docs/DESIGN.md §13)
+        if now <= self.reconfig_until:
+            return
         overhead = self.p.reconfig_s * self.overhead_mult
-        self.reconfig_until = max(self.reconfig_until, now + overhead)
+        self.reconfig_until = now + overhead
 
     # ------------------------------------------------------------ metrics
     def performance(self, now: float) -> float:
@@ -249,14 +285,22 @@ class Tenant:
         return out
 
     # ------------------------------------------------ EconAdapter AppHooks
+    def _planned_rate(self) -> float:
+        """The planner's smoothed demand (same signal desired_nodes
+        uses) — pricing off the instantaneous noisy rate makes bid
+        orderings flip every epoch and churns warm replicas (audit A3)."""
+        lam = self.p.rate_fn(self.last_t) if self.p.rate_fn else 0.0
+        return max(self._rate_ewma, 0.7 * lam)
+
     def profiled_marginal_utility(self, leaf: int, goal: str) -> float:
         """Utility units: fraction of objective per hour contributed."""
         if self.p.kind == "inference":
-            lam = self.p.rate_fn(self.last_t) if self.p.rate_fn else 0.0
-            if lam <= 0:
+            plan = self._planned_rate()
+            if plan <= 0:
                 return 0.0
-            marginal = min(self.node_speed(leaf) * self.p.cap_per_node, lam)
-            return marginal / lam
+            marginal = min(self.node_speed(leaf) * self.p.cap_per_node,
+                           plan)
+            return marginal / plan
         speed = self.node_speed(leaf)
         if self.p.topology_sensitive and self.nodes:
             anc = set(self.topo.ancestors(leaf))
@@ -269,10 +313,10 @@ class Tenant:
 
     def current_utility_gap(self) -> float:
         if self.p.kind == "inference":
-            lam = self.p.rate_fn(self.last_t) if self.p.rate_fn else 0.0
-            if lam <= 0:
+            plan = self._planned_rate()
+            if plan <= 0:
                 return 0.0
-            return max(0.0, 1.0 - self.capacity_rps() / lam)
+            return max(0.0, 1.0 - self.capacity_rps() / plan)
         t_left = max(self.arrival_s + self.p.deadline_s - self.last_t, 1.0)
         need = max(self.p.work - self.progress, 0.0) / (t_left / 3600.0)
         have = self.throughput()
@@ -291,13 +335,28 @@ class Tenant:
     def node_redundant(self, leaf: int) -> bool:
         return leaf in self._surplus(self.last_t)   # non-committing peek
 
+    def gang_size(self) -> int:
+        """How many held nodes a membership change stalls (Listing-1
+        switching-cost scaling): the whole job for gang-scheduled
+        train/batch, none for independently-warming inference replicas."""
+        if self.p.kind == "inference":
+            return 0
+        return len(self.nodes)
+
     def cold_start_time(self, leaf: int) -> float:
         return self.p.reconfig_s
 
     def time_since_chkpt(self, leaf: int) -> float:
+        # stateless inference has no at-risk work between checkpoints;
+        # pricing it as if it did inflates retention limits without bound
+        # (last_checkpoint never advances for inference) — audit A2
+        if self.p.kind == "inference":
+            return 0.0
         return self.last_t - self.last_checkpoint
 
     def time_till_chkpt(self, leaf: int) -> float:
+        if self.p.kind == "inference":
+            return 0.0
         return max(0.0, self.p.checkpoint_interval_s
                    - (self.last_t - self.last_checkpoint))
 

@@ -13,6 +13,13 @@ import sys
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow_ok: long-running but tier-1 (multi-minute budget is "
+        "accepted; benchmark smokes and engine-alone sweeps)")
+
+
 def run_with_devices(code: str, n_devices: int = 4,
                      timeout: int = 600) -> subprocess.CompletedProcess:
     env = dict(os.environ)

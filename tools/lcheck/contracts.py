@@ -192,7 +192,7 @@ def _fleet_contracts(problems: List[str]) -> None:
     state = {k: _sds((n,), F32) for k in
              ("progress", "served", "demanded", "rate_ewma",
               "reconfig_until", "last_checkpoint", "last_t",
-              "last_scale_down", "done_at")}
+              "last_scale_down", "done_at", "cold_cnt", "cold_until")}
     now = _sds((), F32)
     held = _sds((n,), I32)
     owner = _sds((nl,), I32)
